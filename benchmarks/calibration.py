@@ -1,0 +1,37 @@
+"""Fig. 6 analogue: measured host/device latency vs accumulated PSGS and the
+four crossover operating points."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import build_serving_stack, emit, make_engine
+from repro.core import StaticScheduler, calibrate
+
+
+def run() -> None:
+    stack = build_serving_stack(nodes=5000)
+    engine = make_engine(stack, StaticScheduler("host"), num_workers=1,
+                         max_batch=64)
+    psgs = stack["psgs"]
+    order = np.argsort(psgs)
+    batches = [order[int(q * len(order)):][:32].astype(np.int64)
+               for q in np.linspace(0.05, 0.95, 8)]
+    calib = calibrate(
+        lambda b: jax.block_until_ready(engine._host_path(b)),
+        lambda b: jax.block_until_ready(engine._device_path(b)),
+        batches, psgs, repeats=3)
+    for q in (0.2, 0.5, 0.9):
+        x = float(np.quantile(psgs, q) * 32)
+        emit(f"calibration/host_avg_ms_q{int(q*100)}",
+             calib.host.eval_avg(x) * 1e6, f"psgs={x:.0f}")
+        emit(f"calibration/device_avg_ms_q{int(q*100)}",
+             calib.device.eval_avg(x) * 1e6, f"psgs={x:.0f}")
+    for policy in ("cpu_preferred", "gpu_preferred", "latency_preferred",
+                   "throughput_preferred"):
+        emit(f"calibration/threshold_{policy}", calib.threshold(policy),
+             "accumulated-PSGS crossover")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (HybridScheduler, ServingEngine, StaticScheduler,
+                        TieredFeatureStore, TopologySpec, WorkloadGenerator,
+                        compute_fap, compute_psgs, quiver_placement)
+from repro.graph import power_law_graph
+from repro.models.gnn_basic import sage_init, sage_layered
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall-time in seconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def build_serving_stack(*, nodes: int = 6000, avg_degree: float = 10.0,
+                        d_feat: int = 64, fanouts=(6, 4), seed: int = 0,
+                        hot_frac: float = 0.25, rows_frac: float = 0.25,
+                        distribution: str = "degree"):
+    """Small but skewed end-to-end stack shared by the serving benchmarks."""
+    graph = power_law_graph(nodes, avg_degree, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    feats = rng.normal(size=(nodes, d_feat)).astype(np.float32)
+    psgs = compute_psgs(graph, fanouts)
+    gen = WorkloadGenerator(nodes, graph.out_degree,
+                            distribution=distribution, seed=seed + 2)
+    fap = compute_fap(graph, fanouts, seed_prob=gen.p)
+    topo = TopologySpec(num_pods=1, devices_per_pod=1,
+                        rows_per_device=max(int(nodes * rows_frac), 64),
+                        rows_host=max(int(nodes * 0.4), 64),
+                        hot_replicate_fraction=hot_frac)
+    store = TieredFeatureStore.build(feats, quiver_placement(fap, topo))
+    params = sage_init(jax.random.key(seed), [d_feat, 64, 64])
+
+    @jax.jit
+    def infer_fn(hop_feats, hop_ids):
+        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
+        return sage_layered(params, hop_feats, fanouts, hop_masks=masks)
+
+    return dict(graph=graph, feats=feats, psgs=psgs, fap=fap, gen=gen,
+                store=store, infer_fn=infer_fn, fanouts=fanouts, topo=topo)
+
+
+def make_engine(stack, scheduler, **kw) -> ServingEngine:
+    return ServingEngine(stack["graph"], stack["store"], stack["fanouts"],
+                         stack["infer_fn"], scheduler, **kw)

@@ -1,0 +1,71 @@
+"""Fig. 16 analogue: feature-collection throughput of the one-sided read
+engine vs RPC-style collection.
+
+Two views (this container is CPU-only, so host RAM *is* local here):
+  * modeled GB/s on the TPU topology: each policy's bytes are split across
+    tiers and divided by tier bandwidth (HBM 819 GB/s, ICI 50 GB/s,
+    host-PCIe 16 GB/s; RPC = all bytes CPU-mediated at PCIe with one extra
+    copy) — this is the paper's Fig. 16 story on v5e constants;
+  * measured wall-time of the actual code paths (validates correctness and
+    relative host-python overhead honestly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import build_serving_stack, emit, timeit
+from repro.core.placement import TIER_HOST, TIER_HOT, TIER_WARM
+
+BW = {TIER_HOT: 819e9, TIER_WARM: 50e9, TIER_HOST: 16e9}
+RPC_BW = 16e9 / 2  # CPU-mediated: PCIe + extra staging copy
+
+
+def run() -> None:
+    stack = build_serving_stack(nodes=20000, d_feat=256, hot_frac=0.5,
+                                rows_frac=0.5)
+    store, feats, plan = stack["store"], stack["feats"], stack["store"].plan
+    rng = np.random.default_rng(0)
+    m = 8192
+    fap_order = np.argsort(-stack["fap"])
+    ids = fap_order[rng.zipf(1.3, size=m) % stack["graph"].num_nodes]
+    ids = ids.astype(np.int32)
+    row_bytes = feats.shape[1] * 4
+    total_bytes = m * row_bytes
+
+    # ---- modeled on TPU topology ---------------------------------------
+    tiers = plan.tier[ids]
+    t_model = sum((tiers == t).sum() * row_bytes / BW[t]
+                  for t in (TIER_HOT, TIER_WARM, TIER_HOST)
+                  ) + (tiers > TIER_HOST).sum() * row_bytes / 1e9
+    emit("collection/tiered_modeled_GBps", total_bytes / t_model / 1e9,
+         f"hot={np.mean(tiers==TIER_HOT):.2f};"
+         f"warm={np.mean(tiers==TIER_WARM):.2f}")
+    emit("collection/rpc_modeled_GBps", RPC_BW / 1e9,
+         "all bytes CPU-mediated")
+    # dedup (TLB-analogue): fraction of gather bytes saved by id-sort+unique
+    uniq = np.unique(ids)
+    emit("collection/dedup_bytes_saved_pct",
+         100.0 * (1 - uniq.size / ids.size), "sorted-unique before fetch")
+
+    # ---- measured on this host ------------------------------------------
+    t = timeit(lambda: store.lookup(jnp.asarray(ids), include_host=False),
+               repeats=5)
+    emit("collection/tiered_device_measured_GBps", total_bytes / t / 1e9,
+         f"{m} rows x {feats.shape[1]}f32")
+    t_host = timeit(lambda: store.lookup(jnp.asarray(ids)), repeats=3)
+    emit("collection/tiered_with_host_measured_GBps",
+         total_bytes / t_host / 1e9, "io_callback slow path included")
+
+    def rpc_collect(idx):
+        idx = np.asarray(idx)
+        return jnp.asarray(feats[np.maximum(idx, 0)])
+
+    t_rpc = timeit(lambda: rpc_collect(ids), repeats=3)
+    emit("collection/rpc_style_measured_GBps", total_bytes / t_rpc / 1e9,
+         "host gather + device copy (host RAM is local on CPU)")
+
+
+if __name__ == "__main__":
+    run()

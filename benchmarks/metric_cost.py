@@ -1,0 +1,27 @@
+"""Tab. 1-adjacent: PSGS/FAP precompute cost and lookup-table memory vs
+graph size (paper claims minutes for 100M+ nodes on GPU; we verify the
+O(K·|E|) scaling on CPU)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import compute_fap, compute_psgs
+from repro.graph import power_law_graph
+
+
+def run() -> None:
+    for n in (2000, 20000, 100000):
+        g = power_law_graph(n, 12.0, seed=0)
+        t_psgs = timeit(lambda: compute_psgs(g, (25, 10)), repeats=3,
+                        warmup=1)
+        t_fap = timeit(lambda: compute_fap(g, (25, 10)), repeats=3, warmup=1)
+        emit(f"metric_cost/psgs_us_n{n}", t_psgs * 1e6,
+             f"edges={g.num_edges};table_MB={n*4/2**20:.2f}")
+        emit(f"metric_cost/fap_us_n{n}", t_fap * 1e6, "")
+        emit(f"metric_cost/psgs_us_per_edge_n{n}",
+             t_psgs * 1e6 / g.num_edges, "O(K|E|) check")
+
+
+if __name__ == "__main__":
+    run()

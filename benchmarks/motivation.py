@@ -1,0 +1,31 @@
+"""Fig. 2/3 analogue: skew in sampled-neighbor counts and aggregated feature
+sizes on a power-law graph — the irregularity that motivates Quiver."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.graph import host_sample, power_law_graph, realized_size
+
+
+def run() -> None:
+    g = power_law_graph(20000, 12.0, seed=0)
+    rng = np.random.default_rng(0)
+    d_feat = 128
+    for fanouts, tag in (((25, 10), "25-10"), ((50, 35), "50-35")):
+        sizes = []
+        for _ in range(200):
+            seeds = rng.integers(0, g.num_nodes, size=8)
+            sizes.append(realized_size(host_sample(rng, g, seeds, fanouts)))
+        sizes = np.asarray(sizes)
+        feat_mb = sizes * d_feat * 4 / 2**20
+        emit(f"motivation/sampled_nodes_{tag}_p05", float(np.quantile(sizes, .05)),
+             f"p95={np.quantile(sizes, .95):.0f};max={sizes.max()}")
+        emit(f"motivation/feat_mb_{tag}_p50", float(np.quantile(feat_mb, .5)),
+             f"p95={np.quantile(feat_mb, .95):.2f}MB")
+        emit(f"motivation/size_skew_{tag}", float(sizes.max() / sizes.min()),
+             "max/min sampled-size ratio")
+
+
+if __name__ == "__main__":
+    run()

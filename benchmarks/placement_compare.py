@@ -1,0 +1,92 @@
+"""Fig. 15 analogue: feature-aggregation cost under placement policies —
+Quiver FAP vs hash (DGL), degree (AliGraph), training-frequency (GNNLab)
+and P3 feature-dim partitioning.
+
+Two views per policy:
+  * modeled aggregation cost on the TPU topology (per-row fetch cost by tier:
+    HBM=1, ICI=16, host=160, disk=1600 — inverse-bandwidth ratios), both the
+    mean per-batch total and the p95 of the slowest-tier ("tail gates DNN
+    start", paper §5.2);
+  * measured wall-time of the real tiered-store lookup on this host
+    (validates the code path; on CPU all tiers are local RAM, so only the
+    modeled numbers reflect the TPU topology).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import build_serving_stack, emit, timeit
+from repro.core import (TieredFeatureStore, TopologySpec, degree_placement,
+                        freq_placement, hash_placement, monte_carlo_fap,
+                        p3_placement, quiver_placement)
+from repro.core.placement import TIER_DISK, TIER_HOST, TIER_HOT, TIER_WARM
+
+TIER_COST = {TIER_HOT: 1.0, TIER_WARM: 16.0, TIER_HOST: 160.0,
+             TIER_DISK: 1600.0}
+
+
+def run() -> None:
+    stack = build_serving_stack(nodes=6000, fanouts=(6, 4))
+    g, feats, fap = stack["graph"], stack["feats"], stack["fap"]
+    topo = TopologySpec(num_pods=2, devices_per_pod=4,
+                        rows_per_device=g.num_nodes // 16,
+                        rows_host=g.num_nodes // 3,
+                        hot_replicate_fraction=0.3)
+
+    # training-frequency baseline: counts from a *uniform* seed workload
+    # (the train/serve distribution shift of paper §2.3)
+    train_freq = monte_carlo_fap(g, stack["fanouts"], requests=1500, seed=9)
+
+    plans = {
+        "quiver": quiver_placement(fap, topo),
+        "hash": hash_placement(g.num_nodes, topo),
+        "degree": degree_placement(g.out_degree, topo),
+        "freq": freq_placement(train_freq, topo),
+        "p3": p3_placement(g.num_nodes, topo),
+    }
+
+    # serving workload: ids actually touched by sampled requests
+    stack["gen"].rng = np.random.default_rng(3)
+    from repro.graph import host_sample
+    rng = np.random.default_rng(4)
+    touched = []
+    for r in stack["gen"].stream(120, seeds_per_request=8):
+        hops = host_sample(rng, g, r.seeds, stack["fanouts"])
+        t = np.concatenate(hops)
+        touched.append(t[t >= 0])
+
+    for name, plan in plans.items():
+        if plan.dim_sharded:
+            # P3: every row is split across all G devices → (G-1)/G of each
+            # row's bytes cross ICI on every fetch, no cold tier
+            g_dev = topo.devices_per_pod
+            per_row = (TIER_COST[TIER_WARM] * (g_dev - 1) / g_dev
+                       + TIER_COST[TIER_HOT] / g_dev)
+            costs = [len(t) * per_row for t in touched]
+            emit(f"placement/{name}_mean_cost", float(np.mean(costs)),
+                 "modeled;dim-sharded")
+            emit(f"placement/{name}_p95_tail_tier", TIER_COST[TIER_WARM],
+                 "every fetch crosses ICI")
+            continue
+        costs = [float(TIER_COST[TIER_HOT] * 0 + sum(
+            TIER_COST[x] for x in plan.tier[t])) for t in touched]
+        tails = [float(max(TIER_COST[x] for x in np.unique(plan.tier[t])))
+                 for t in touched]
+        store = TieredFeatureStore.build(feats, plan)
+        ids = jnp.asarray(touched[0][:512].astype(np.int32))
+        t_lookup = timeit(lambda: store.lookup(ids, include_host=False),
+                          repeats=3)
+        hist = store.tier_histogram(np.concatenate(touched))
+        tot = sum(hist.values())
+        emit(f"placement/{name}_mean_cost", float(np.mean(costs)),
+             f"hot%={hist['hot']/tot:.2f};warm%={hist['warm']/tot:.2f};"
+             f"disk%={hist['disk']/tot:.3f}")
+        emit(f"placement/{name}_p95_tail_tier",
+             float(np.quantile(tails, 0.95)), "slowest tier gating batch")
+        emit(f"placement/{name}_lookup_us", t_lookup * 1e6,
+             "measured device-tier path")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,97 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from artifacts."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    return {(r["arch"], r["shape"], r["mesh"]): r
+            for r in json.load(open(path)) if r.get("ok")}
+
+
+def dryrun_table(path="artifacts/dryrun.json") -> str:
+    recs = load(path)
+    lines = ["| arch | shape | mesh | compile s | peak HBM GiB/dev | "
+             "HLO GFLOP/dev† | HLO GB/dev† | collective GB/dev† | "
+             "loop× | collectives (ag/ar/rs/a2a/cp) |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(recs.items()):
+        c = r["collectives"]["counts"]
+        lines.append(
+            f"| {a} | {s} | {m} | {r['compile_s']:.1f} "
+            f"| {r['memory']['peak_hbm_bytes']/2**30:.2f} "
+            f"| {r['cost']['flops']/1e9:.1f} "
+            f"| {r['cost']['bytes_accessed']/1e9:.1f} "
+            f"| {r['collectives']['total_bytes']/1e9:.2f} "
+            f"| {r.get('loop_factor', 1)} "
+            f"| {c['all-gather']}/{c['all-reduce']}/{c['reduce-scatter']}"
+            f"/{c['all-to-all']}/{c['collective-permute']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(path="artifacts/dryrun.json") -> str:
+    recs = load(path)
+    from benchmarks.roofline import model_flops
+    lines = ["| arch | shape | mesh | compute ms* | memory ms* | "
+             "collective ms* | dominant | step LB ms* | model/HLO FLOPs* |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(recs.items()):
+        ro = r.get("roofline_corrected", r["roofline"])
+        try:
+            mf = model_flops(a, s) / r["world"]
+            ratio = mf / max(r["cost"]["flops"]
+                             * r.get("loop_factor", 1), 1.0)
+            ratio = f"{ratio:.2f}"
+        except Exception:
+            ratio = "–"
+        lines.append(
+            f"| {a} | {s} | {m} | {ro['compute_s']*1e3:.2f} "
+            f"| {ro['memory_s']*1e3:.2f} | {ro['collective_s']*1e3:.2f} "
+            f"| {ro['dominant'].replace('_s','')} "
+            f"| {ro['step_lower_bound_s']*1e3:.2f} | {ratio} |")
+    return "\n".join(lines)
+
+
+def before_after(baseline="artifacts/dryrun_baseline.json",
+                 current="artifacts/dryrun.json") -> str:
+    b = load(baseline)
+    c = load(current)
+    lines = ["| cell | metric | baseline | optimized | Δ |",
+             "|---|---|---|---|---|"]
+    cells = [("equiformer-v2", "ogb_products", "16x16"),
+             ("qwen1.5-4b", "decode_32k", "16x16"),
+             ("qwen1.5-4b", "long_500k", "16x16"),
+             ("gin-tu", "ogb_products", "16x16"),
+             ("qwen3-4b", "decode_32k", "16x16"),
+             ("phi3.5-moe-42b", "decode_32k", "16x16")]
+    for cell in cells:
+        if cell not in b or cell not in c:
+            continue
+        rb, rc = b[cell], c[cell]
+        rows = [
+            ("peak HBM GiB/dev", rb["memory"]["peak_hbm_bytes"] / 2**30,
+             rc["memory"]["peak_hbm_bytes"] / 2**30),
+            ("collective GB/dev", rb["collectives"]["total_bytes"] / 1e9,
+             rc["collectives"]["total_bytes"] / 1e9),
+            ("memory-term ms", rb["roofline"]["memory_s"] * 1e3,
+             rc["roofline"]["memory_s"] * 1e3),
+        ]
+        for name, vb, vc in rows:
+            d = vb / vc if vc > 0 else float("inf")
+            lines.append(f"| {cell[0]}×{cell[1]} | {name} | {vb:.2f} "
+                         f"| {vc:.2f} | {d:.1f}× |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("## Dry-run\n")
+        print(dryrun_table())
+    if which in ("roofline", "all"):
+        print("\n## Roofline\n")
+        print(roofline_table())
+    if which in ("delta", "all"):
+        print("\n## Before/after\n")
+        print(before_after())

@@ -1,0 +1,50 @@
+"""Benchmark runner — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "motivation",          # Fig. 2/3 skew
+    "metric_cost",         # Tab. 1-adjacent metric precompute
+    "calibration",         # Fig. 6 PSGS<->latency + crossovers
+    "skew_robustness",     # Fig. 13
+    "placement_compare",   # Fig. 15
+    "feature_collection",  # Fig. 16
+    "serve_throughput",    # Fig. 9
+    "policy_cdf",          # Fig. 10
+    "scalability",         # Fig. 11/12 (from dry-run artifacts)
+    "roofline",            # roofline report (from dry-run artifacts)
+]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None)
+    args = p.parse_args()
+    mods = [args.only] if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

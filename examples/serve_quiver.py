@@ -1,0 +1,66 @@
+"""End-to-end serving driver (the paper's deployment scenario).
+
+    PYTHONPATH=src python examples/serve_quiver.py [--requests 200]
+
+Serves a GraphSAGE model over a skewed synthetic graph with batched requests
+through the full Quiver pipeline — PSGS calibration, all four operating
+points, dynamic PSGS-budget batching, multiplexed workers — and prints a
+per-policy latency/throughput report.
+"""
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core import (DynamicBatcher, HybridScheduler, StaticScheduler,
+                        calibrate)
+from repro.launch.serve import build_stack
+from repro.core.pipeline import ServingEngine
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--requests", type=int, default=150)
+    p.add_argument("--nodes", type=int, default=8000)
+    p.add_argument("--batch-seeds", type=int, default=8)
+    args = p.parse_args()
+
+    graph, feats, psgs, fap, store, gen, infer_fn = build_stack(
+        nodes=args.nodes, avg_degree=10.0, d_feat=64, fanouts=(6, 4),
+        hot_frac=0.3)
+    print(f"[stack] {graph.num_nodes} nodes, tiers "
+          f"{store.plan.tier_counts()}")
+
+    # calibrate once (paper Fig. 6)
+    probe = ServingEngine(graph, store, (6, 4), infer_fn,
+                          StaticScheduler("host"), num_workers=1,
+                          max_batch=32)
+    order = np.argsort(psgs)
+    batches = [order[int(q * len(order)):][:args.batch_seeds]
+               .astype(np.int64) for q in np.linspace(0.05, 0.95, 6)]
+    calib = calibrate(
+        lambda b: jax.block_until_ready(probe._host_path(b)),
+        lambda b: jax.block_until_ready(probe._device_path(b)),
+        batches, psgs, repeats=2)
+    report = {}
+    for policy in ("latency_preferred", "throughput_preferred"):
+        thr = calib.threshold(policy)
+        engine = ServingEngine(graph, store, (6, 4), infer_fn,
+                               HybridScheduler(psgs, thr, policy),
+                               num_workers=2, max_batch=32)
+        gen.rng = np.random.default_rng(5)
+        reqs = list(gen.stream(args.requests,
+                               seeds_per_request=args.batch_seeds))
+        engine.warmup([reqs[0]])
+        batcher = DynamicBatcher(deadline_s=0.02,
+                                 psgs_budget=thr if np.isfinite(thr)
+                                 else None,
+                                 psgs_table=psgs, max_batch=16)
+        m = engine.serve_stream(reqs, batcher, gap_s=0.002)
+        report[policy] = {"threshold": thr, **m.summary()}
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end training driver: a ~100M-parameter MeshGraphNet-style GNN
+trained for a few hundred steps with the full substrate (sampler, AdamW,
+async fault-tolerant checkpointing).
+
+    PYTHONPATH=src python examples/train_gnn_100m.py --steps 300 \
+        [--params-scale full]
+
+``--params-scale small`` (default) runs a 4M-param proxy in a couple of
+minutes on CPU; ``full`` instantiates the actual ~100M configuration
+(d_hidden=512, 20 blocks) — same code, more patience.
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import power_law_graph
+from repro.models.common import count_params
+from repro.models.meshgraphnet import mgn_forward, mgn_init
+from repro.training import AdamW, CheckpointManager, run_training
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--params-scale", choices=("small", "full"),
+                   default="small")
+    p.add_argument("--nodes", type=int, default=2048)
+    p.add_argument("--ckpt-dir", default=None)
+    args = p.parse_args()
+
+    if args.params_scale == "full":
+        d_hidden, n_layers = 512, 20      # ≈ 100M params
+    else:
+        d_hidden, n_layers = 128, 8       # ≈ 4M params proxy
+
+    d_feat = 64
+    params = mgn_init(jax.random.key(0), d_node_in=d_feat, d_edge_in=4,
+                      d_hidden=d_hidden, n_layers=n_layers, d_out=3)
+    print(f"[train] MeshGraphNet {count_params(params):,} params "
+          f"({d_hidden}h x {n_layers}L)")
+
+    graph = power_law_graph(args.nodes, 8.0, seed=0)
+    src, dst = map(jnp.asarray, graph.to_coo())
+    n, e = graph.num_nodes, graph.num_edges
+
+    def batch_fn(step: int) -> dict:
+        rng = np.random.default_rng(step)   # deterministic → restart-safe
+        pos = rng.normal(size=(n, 3)).astype(np.float32)
+        x = rng.normal(size=(n, d_feat)).astype(np.float32)
+        target = np.tanh(x[:, :3] * 0.5) + 0.1 * pos
+        return {"x": jnp.asarray(x), "pos": jnp.asarray(pos),
+                "y": jnp.asarray(target.astype(np.float32))}
+
+    def loss_fn(p, batch):
+        s, d = jnp.maximum(src, 0), jnp.maximum(dst, 0)
+        rel = batch["pos"][d] - batch["pos"][s]
+        dist = jnp.sqrt((rel ** 2).sum(-1, keepdims=True) + 1e-12)
+        ef = jnp.concatenate([rel, dist], axis=-1)
+        out = mgn_forward(p, batch["x"], ef, src, dst, num_nodes=n)
+        return jnp.mean((out - batch["y"]) ** 2)
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="mgn_ckpt_")
+    state = run_training(
+        loss_fn=loss_fn, params=params,
+        opt=AdamW(lr=1e-3, weight_decay=0.0, warmup_steps=20),
+        batch_fn=batch_fn, steps=args.steps,
+        ckpt=CheckpointManager(ckpt_dir, keep=2, async_write=True),
+        ckpt_every=100, log_every=20)
+    print(f"[train] finished step {state.step}; checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

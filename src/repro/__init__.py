@@ -1,0 +1,3 @@
+"""Quiver-TPU: workload-aware GNN serving (Tan et al. 2023) re-architected
+for TPU pods in JAX. See DESIGN.md for the system map."""
+__version__ = "1.0.0"

@@ -1,0 +1,10 @@
+"""Architecture registry: importing this package registers every assigned
+arch (5 LM + 4 GNN + 1 recsys) plus the paper's own serving models."""
+from repro.configs import (codeqwen15_7b, deepseek_moe_16b, din,  # noqa: F401
+                           equiformer_v2, gin_tu, meshgraphnet,
+                           phi35_moe_42b, qwen15_4b, qwen3_4b, schnet)
+from repro.configs.base import Arch, CellSpec, get_arch, list_archs
+
+ALL_ARCHS = list_archs()
+
+__all__ = ["Arch", "CellSpec", "get_arch", "list_archs", "ALL_ARCHS"]

@@ -1,0 +1,56 @@
+"""Arch/shape registry — the ``--arch <id>`` surface of the framework.
+
+Each architecture module registers an :class:`Arch` whose ``build_cell``
+returns everything the launcher needs to lower one (arch × shape) cell:
+the step function, abstract input specs (ShapeDtypeStruct — never
+allocated), in/out shardings for the given mesh, and donation hints. Reduced
+("smoke") variants return *concrete* inputs for CPU execution in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """One lowered (arch × shape × mesh) combination."""
+
+    step_fn: Callable
+    args: tuple                        # pytrees of ShapeDtypeStruct
+    in_shardings: Optional[tuple]      # matching pytrees of NamedSharding
+    out_shardings: Any = None
+    donate_argnums: tuple = ()
+    kind: str = "train"                # "train" | "serve"
+    notes: str = ""
+
+
+@dataclasses.dataclass
+class Arch:
+    name: str
+    family: str                        # lm | moe_lm | gnn | recsys
+    shape_names: tuple[str, ...]
+    build_cell: Callable[[str, Optional[Mesh]], CellSpec]
+    smoke: Callable[[], dict]          # runs a reduced step, returns outputs
+    description: str = ""
+
+
+_REGISTRY: dict[str, Arch] = {}
+
+
+def register(arch: Arch) -> Arch:
+    _REGISTRY[arch.name] = arch
+    return arch
+
+
+def get_arch(name: str) -> Arch:
+    if name not in _REGISTRY:
+        import repro.configs  # noqa: F401  (trigger registration)
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,194 @@
+"""din [recsys] embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80
+interaction=target-attn [arXiv:1706.06978].
+
+Shapes: train_batch (B=65,536 train step), serve_p99 (B=512 online forward),
+serve_bulk (B=262,144 offline scoring), retrieval_cand (1 user × 1,000,000
+candidates, scanned batched-dot — no loops).
+
+The item table (10⁷ rows × 18) is the hot path; it is row-sharded over the
+"model" axis (batch over pod/data) — the cross-shard gather is the roofline
+collective. FAP-style placement of hot items is the paper's technique applied
+to recsys (benchmarks/placement_compare.py exercises it on this table).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import Arch, CellSpec, register
+from repro.models.din import (DINConfig, din_forward, din_init, din_loss,
+                              din_score_candidates)
+from repro.sharding import Rules, make_shard_fn, spec, tree_shardings
+from repro.training.optimizer import AdamW
+
+CONFIG = DINConfig(n_items=10_000_000, n_cates=10_000, embed_dim=18,
+                   hist_len=100, attn_mlp=(80, 40), mlp=(200, 80),
+                   n_dense_feat=8)
+
+SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, candidates=1_000_000),
+}
+
+
+def din_rules(mesh) -> Rules:
+    if mesh is None:
+        return Rules({})
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return Rules({"batch": dp, "rows": "model", "cand": dp})
+
+
+def _param_specs(cfg: DINConfig, mesh, rules):
+    s = partial(spec, mesh, rules)
+    rep = lambda tree: jax.tree_util.tree_map(lambda _: P(), tree)
+    abstract = jax.eval_shape(lambda: din_init(jax.random.key(0), cfg))
+    specs = rep(abstract)
+    specs["item_embed"] = s((cfg.n_items, cfg.embed_dim), "rows", None)
+    specs["cate_embed"] = s((cfg.n_cates, cfg.embed_dim), "rows", None)
+    return abstract, specs
+
+
+def _batch_abstract(cfg: DINConfig, b: int) -> dict:
+    return {
+        "target_item": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "target_cate": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "hist_items": jax.ShapeDtypeStruct((b, cfg.hist_len), jnp.int32),
+        "hist_cates": jax.ShapeDtypeStruct((b, cfg.hist_len), jnp.int32),
+        "dense_feat": jax.ShapeDtypeStruct((b, cfg.n_dense_feat),
+                                           jnp.float32),
+        "label": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def _batch_specs(cfg: DINConfig, b: int, mesh, rules) -> dict:
+    s = partial(spec, mesh, rules)
+    return {
+        "target_item": s((b,), "batch"),
+        "target_cate": s((b,), "batch"),
+        "hist_items": s((b, cfg.hist_len), "batch", None),
+        "hist_cates": s((b, cfg.hist_len), "batch", None),
+        "dense_feat": s((b, cfg.n_dense_feat), "batch", None),
+        "label": s((b,), "batch"),
+    }
+
+
+def build_din_cell(cfg: DINConfig, shape: str, mesh) -> CellSpec:
+    info = SHAPES[shape]
+    rules = din_rules(mesh)
+    params_a, pspecs = _param_specs(cfg, mesh, rules)
+    psh = tree_shardings(mesh, pspecs)
+
+    if info["kind"] == "train":
+        opt = AdamW(lr=1e-3, weight_decay=0.0)
+        opt_a = jax.eval_shape(opt.init, params_a)
+        ospecs = jax.tree_util.tree_map(lambda _: P(), opt_a)
+        ospecs = ospecs._replace(
+            mu=jax.tree_util.tree_map(lambda s: s, pspecs,
+                                      is_leaf=lambda s: isinstance(s, P)),
+            nu=jax.tree_util.tree_map(lambda s: s, pspecs,
+                                      is_leaf=lambda s: isinstance(s, P)))
+        osh = tree_shardings(mesh, ospecs)
+        b = info["batch"]
+        batch_a = _batch_abstract(cfg, b)
+        bsh = tree_shardings(mesh, _batch_specs(cfg, b, mesh, rules))
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: din_loss(p, cfg, batch))(params)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        return CellSpec(step_fn=step, args=(params_a, opt_a, batch_a),
+                        in_shardings=((psh, osh, bsh)
+                                      if mesh is not None else None),
+                        out_shardings=((psh, osh, tree_shardings(mesh, P()))
+                                       if mesh is not None else None),
+                        donate_argnums=(0, 1), kind="train")
+
+    if info["kind"] == "serve":
+        b = info["batch"]
+        batch_a = _batch_abstract(cfg, b)
+        batch_a.pop("label")
+        bspecs = _batch_specs(cfg, b, mesh, rules)
+        bspecs.pop("label")
+        bsh = tree_shardings(mesh, bspecs)
+
+        def step(params, batch):
+            return din_forward(params, cfg, batch["target_item"],
+                               batch["target_cate"], batch["hist_items"],
+                               batch["hist_cates"], batch["dense_feat"])
+
+        return CellSpec(step_fn=step, args=(params_a, batch_a),
+                        in_shardings=((psh, bsh)
+                                      if mesh is not None else None),
+                        out_shardings=(tree_shardings(
+                            mesh, spec(mesh, rules, (b,), "batch"))
+                            if mesh is not None else None),
+                        kind="serve")
+
+    # retrieval: one user, 1M candidates
+    n = info["candidates"]
+    args_a = (params_a,
+              jax.ShapeDtypeStruct((cfg.hist_len,), jnp.int32),
+              jax.ShapeDtypeStruct((cfg.hist_len,), jnp.int32),
+              jax.ShapeDtypeStruct((cfg.n_dense_feat,), jnp.float32),
+              jax.ShapeDtypeStruct((n,), jnp.int32),
+              jax.ShapeDtypeStruct((n,), jnp.int32))
+    s = partial(spec, mesh, rules)
+    in_sh = ((psh, tree_shardings(mesh, P()), tree_shardings(mesh, P()),
+              tree_shardings(mesh, P()),
+              tree_shardings(mesh, s((n,), "cand")),
+              tree_shardings(mesh, s((n,), "cand")))
+             if mesh is not None else None)
+
+    def step(params, hi, hc, df, ci, cc):
+        return din_score_candidates(params, cfg, hi, hc, df, ci, cc,
+                                    chunk=31250)
+
+    return CellSpec(step_fn=step, args=args_a, in_shardings=in_sh,
+                    out_shardings=(tree_shardings(mesh, s((n,), "cand"))
+                                   if mesh is not None else None),
+                    kind="serve")
+
+
+def din_smoke() -> dict:
+    cfg = DINConfig(n_items=2000, n_cates=64, embed_dim=18, hist_len=20,
+                    n_dense_feat=8)
+    rng = np.random.default_rng(0)
+    params = din_init(jax.random.key(0), cfg)
+    b = 32
+    batch = {
+        "target_item": jnp.asarray(rng.integers(0, 2000, b), jnp.int32),
+        "target_cate": jnp.asarray(rng.integers(0, 64, b), jnp.int32),
+        "hist_items": jnp.asarray(rng.integers(-1, 2000, (b, 20)), jnp.int32),
+        "hist_cates": jnp.asarray(rng.integers(0, 64, (b, 20)), jnp.int32),
+        "dense_feat": jnp.asarray(rng.normal(size=(b, 8)), jnp.float32),
+        "label": jnp.asarray(rng.integers(0, 2, b), jnp.int32),
+    }
+    opt = AdamW(lr=1e-3, weight_decay=0.0)
+    opt_state = opt.init(params)
+    loss, grads = jax.value_and_grad(
+        lambda p: din_loss(p, cfg, batch))(params)
+    params, opt_state = opt.update(grads, opt_state, params)
+    scores = din_score_candidates(params, cfg, batch["hist_items"][0],
+                                  batch["hist_cates"][0],
+                                  batch["dense_feat"][0],
+                                  jnp.asarray(rng.integers(0, 2000, 1000)),
+                                  jnp.asarray(rng.integers(0, 64, 1000)),
+                                  chunk=256)
+    assert bool(jnp.isfinite(loss)) and bool(jnp.isfinite(scores).all())
+    return {"loss": float(loss), "n_scores": int(scores.shape[0])}
+
+
+ARCH = register(Arch(
+    name="din", family="recsys", shape_names=tuple(SHAPES),
+    build_cell=lambda shape, mesh: build_din_cell(CONFIG, shape, mesh),
+    smoke=din_smoke,
+    description="Deep Interest Network: target attention over user history, "
+                "10M-row item table through the tiered store."))

@@ -1,0 +1,69 @@
+"""equiformer-v2 [gnn] n_layers=12 d_hidden=128 l_max=6 m_max=2 n_heads=8
+equivariance=SO(2)-eSCN [arXiv:2306.12059].
+
+The big shapes scan over edge chunks (ogb_products: 64 chunks) to bound the
+(E, (l_max+1)², C) message working set; reduced smoke configs use a smaller
+l_max so CPU tests stay fast while the full config keeps l_max=6.
+"""
+from repro.configs.base import register
+from repro.configs.gnn_common import (GNNAdapter, classification_loss,
+                                      make_gnn_arch, regression_loss)
+from repro.models.equiformer_v2 import equiformer_forward, equiformer_init
+
+N_LAYERS, CHANNELS, L_MAX, M_MAX, N_HEADS = 12, 128, 6, 2, 8
+
+EDGE_CHUNKS = {"full_graph_sm": 1, "minibatch_lg": 8, "ogb_products": 64,
+               "molecule": 1}
+
+
+def _init(key, d_feat, n_out, shape):
+    return equiformer_init(key, n_layers=N_LAYERS, channels=CHANNELS,
+                           l_max=L_MAX, m_max=M_MAX, n_heads=N_HEADS,
+                           n_rbf=32, d_feat_in=d_feat, d_out=n_out)
+
+
+def _reduced_init(key, d_feat, n_out, shape):
+    return equiformer_init(key, n_layers=2, channels=16, l_max=2, m_max=1,
+                           n_heads=4, n_rbf=8, d_feat_in=d_feat, d_out=n_out)
+
+
+def _loss(params, batch, info, shape, shard=lambda x, *n: x):
+    kw = dict(num_nodes=info["nodes"], node_feat=batch["node_feat"],
+              edge_chunks=EDGE_CHUNKS.get(shape, 1), shard=shard)
+    if info["graphs"] is not None:
+        pred = equiformer_forward(params, batch["species"],
+                                  batch["positions"], batch["src"],
+                                  batch["dst"], mol_id=batch["mol_id"],
+                                  num_graphs=info["graphs"], **kw)
+        return regression_loss(pred, batch["labels"])
+    logits = equiformer_forward(params, batch["species"], batch["positions"],
+                                batch["src"], batch["dst"], **kw)
+    return classification_loss(logits, batch["labels"])
+
+
+def _loss_sharded(params, batch, info, shape, ctx):
+    """Inside shard_map: batch arrays are this shard's slices; edges are
+    dst-aligned (data pipeline contract, repro.core.halo)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.equiformer_v2 import equiformer_forward_local
+
+    pos_g = ctx.all_gather(batch["positions"])   # (N,3) is tiny — replicate
+    logits = equiformer_forward_local(
+        params, batch["species"], pos_g, batch["node_feat"], batch["src"],
+        batch["dst"], rows=ctx.rows, offset=ctx.offset(),
+        halo_fn=ctx.gather, edge_chunks=EDGE_CHUNKS.get(shape, 1))
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    tgt = jnp.take_along_axis(lg, jnp.maximum(labels, 0)[:, None],
+                              axis=-1)[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    return ctx.mean(((lse - tgt) * valid).sum(), valid.sum())
+
+
+ARCH = register(make_gnn_arch(GNNAdapter(
+    name="equiformer-v2", init=_init, loss=_loss,
+    description="eSCN SO(2)-convolution equivariant graph attention.",
+    loss_sharded=_loss_sharded),
+    reduced_init=_reduced_init))

@@ -1,0 +1,283 @@
+"""Shared cell builders for the 5 assigned LM architectures.
+
+Shapes (per assignment):
+  train_4k    — train_step,  seq 4096,   global_batch 256
+  prefill_32k — serve prefill, seq 32768, global_batch 32
+  decode_32k  — serve decode (1 new token, 32k KV cache), batch 128
+  long_500k   — serve decode, 524288 KV cache, batch 1 (cache seq-sharded)
+
+Sharding: params are 2-D sharded — FSDP over ("pod","data") × TP over
+"model" (vocab-parallel embeddings/logits, head-parallel attention, expert-
+parallel MoE); activations batch-sharded; the long_500k cell re-binds the
+cache sequence dimension to the data axis since batch=1.
+All five archs are pure full attention; ``long_500k`` is *decode* (O(L) per
+token), so it lowers fine — no 500k prefill is attempted (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import Arch, CellSpec
+from repro.models.moe import MoEConfig
+from repro.models.transformer import (LMConfig, init_decode_cache,
+                                      lm_decode_step, lm_init, lm_loss,
+                                      lm_prefill)
+from repro.sharding import Rules, make_shard_fn, spec, tree_shardings
+from repro.training.optimizer import AdamW
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def lm_rules(mesh: Optional[Mesh], shape: str,
+             cfg: Optional[LMConfig] = None) -> Rules:
+    if mesh is None:
+        return Rules({})
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    table = {
+        "batch": dp, "fsdp": dp, "tp": "model", "tp_kv": "model",
+        "expert": "model", "vocab_tp": "model", "seq": None,
+    }
+    kind = SHAPES[shape]["kind"]
+    seq_axes: list = []
+    if cfg is not None and kind in ("decode", "prefill") \
+            and cfg.n_kv % mesh.shape["model"] != 0:
+        # KV heads don't divide the tp axis (qwen1.5 kv=20, qwen3/phi kv=8
+        # on model=16): a head-sharded cache would replicate → the per-step
+        # cache reshard was 3.2 s of collectives (§Perf iteration 2).
+        # Shard the cache SEQUENCE dim over the tp axis instead; decode
+        # attention reduces over seq with one small psum.
+        table["tp_kv"] = None
+        seq_axes.append("model")
+    if SHAPES[shape]["batch"] == 1:       # long-context decode: shard seq
+        table["batch"] = None
+        seq_axes = list(dp) + seq_axes
+    table["seq"] = tuple(seq_axes) if seq_axes else None
+    return Rules(table)
+
+
+def lm_param_specs(cfg: LMConfig, mesh: Optional[Mesh], rules: Rules):
+    """PartitionSpec tree mirroring lm_init's structure (divisibility-aware)."""
+    d, h, kv, dh, L = (cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim,
+                       cfg.n_layers)
+    s = partial(spec, mesh, rules)
+    specs = {
+        "embed": s((cfg.vocab, d), "vocab_tp", "fsdp"),
+        "unembed": s((d, cfg.vocab), "fsdp", "vocab_tp"),
+        "final_ln": P(),
+        "layers": {
+            "ln1": P(), "ln2": P(),
+            "wq": s((L, d, h * dh), None, "fsdp", "tp"),
+            "wk": s((L, d, kv * dh), None, "fsdp", "tp_kv"),
+            "wv": s((L, d, kv * dh), None, "fsdp", "tp_kv"),
+            "wo": s((L, h * dh, d), None, "tp", "fsdp"),
+        },
+    }
+    lay = specs["layers"]
+    if cfg.qkv_bias:
+        lay["bq"] = s((L, h * dh), None, "tp")
+        lay["bk"] = s((L, kv * dh), None, "tp_kv")
+        lay["bv"] = s((L, kv * dh), None, "tp_kv")
+    if cfg.qk_norm:
+        lay["q_norm"] = P()
+        lay["k_norm"] = P()
+    if cfg.moe is None:
+        lay["w1"] = s((L, d, cfg.d_ff), None, "fsdp", "tp")
+        lay["w3"] = s((L, d, cfg.d_ff), None, "fsdp", "tp")
+        lay["w2"] = s((L, cfg.d_ff, d), None, "tp", "fsdp")
+    else:
+        m = cfg.moe
+        moe = {
+            "router": s((L, d, m.num_experts), None, "fsdp", None),
+            "w1": s((L, m.num_experts, d, m.d_ff), None, "expert", "fsdp",
+                    None),
+            "w3": s((L, m.num_experts, d, m.d_ff), None, "expert", "fsdp",
+                    None),
+            "w2": s((L, m.num_experts, m.d_ff, d), None, "expert", None,
+                    "fsdp"),
+        }
+        if m.n_shared:
+            moe["shared"] = {
+                "w1": s((L, d, m.d_ff_shared), None, "fsdp", "tp"),
+                "w3": s((L, d, m.d_ff_shared), None, "fsdp", "tp"),
+                "w2": s((L, m.d_ff_shared, d), None, "tp", "fsdp"),
+            }
+        lay["moe"] = moe
+    return specs
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _opt_specs(param_specs):
+    from repro.training.optimizer import AdamWState
+    return AdamWState(step=P(),
+                      mu=jax.tree_util.tree_map(
+                          lambda s: s, param_specs,
+                          is_leaf=lambda s: isinstance(s, P)),
+                      nu=jax.tree_util.tree_map(
+                          lambda s: s, param_specs,
+                          is_leaf=lambda s: isinstance(s, P)))
+
+
+def build_lm_cell(cfg: LMConfig, shape: str,
+                  mesh: Optional[Mesh]) -> CellSpec:
+    info = SHAPES[shape]
+    rules = lm_rules(mesh, shape, cfg)
+    shard = make_shard_fn(mesh, rules)
+    pspecs = lm_param_specs(cfg, mesh, rules)
+    psh = tree_shardings(mesh, pspecs)
+
+    if info["kind"] == "train":
+        opt = AdamW(lr=3e-4)
+        params_a = _abstract(lambda: lm_init(jax.random.key(0), cfg))
+        opt_a = _abstract(opt.init, params_a)
+        # ZeRO-1 for dense archs (params ≤8B): replicate params over dp —
+        # kills the per-layer FSDP weight all-gathers (365 ms → §Perf) —
+        # while the optimizer state stays dp-sharded. MoE archs keep full
+        # FSDP (42B f32 params would not fit replicated-over-dp).
+        ospecs = _opt_specs(pspecs)
+        if cfg.moe is None:
+            rules_zero1 = Rules({**rules.table, "fsdp": None})
+            pspecs = lm_param_specs(cfg, mesh, rules_zero1)
+            psh = tree_shardings(mesh, pspecs)
+        osh = tree_shardings(mesh, ospecs)
+        B, S = info["batch"], info["seq"]
+        batch_a = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                   "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        bspec = {"tokens": spec(mesh, rules, (B, S), "batch", None),
+                 "targets": spec(mesh, rules, (B, S), "batch", None)}
+        bsh = tree_shardings(mesh, bspec)
+        # gradient-accumulation microbatching: divides the activation-carry
+        # footprint (40 layers × (B,S,d) residuals dominated train peak HBM)
+        # by `micro` at the cost of `micro`× more (tiny) optimizer-side
+        # collectives. §Perf iteration 5.
+        micro = 4 if (mesh is not None and B % 4 == 0) else 1
+        if micro and cfg.moe is not None and cfg.d_model >= 4096 \
+                and B % 8 == 0:
+            micro = 8  # 42B MoE: dispatch buffers + FSDP args need more headroom
+
+        def step(params, opt_state, batch):
+            def loss_fn(p, toks, tgts):
+                return lm_loss(p, toks, tgts, cfg, shard)
+
+            if micro == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(
+                    params, batch["tokens"], batch["targets"])
+            else:
+                toks = batch["tokens"].reshape(micro, B // micro, S)
+                tgts = batch["targets"].reshape(micro, B // micro, S)
+
+                def mstep(acc, xs):
+                    l, g = jax.value_and_grad(loss_fn)(params, xs[0], xs[1])
+                    return jax.tree_util.tree_map(jnp.add, acc, g), l
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, losses = jax.lax.scan(mstep, zeros, (toks, tgts))
+                grads = jax.tree_util.tree_map(lambda g: g / micro, grads)
+                loss = losses.mean()
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        in_sh = (psh, osh, bsh) if mesh is not None else None
+        out_sh = ((psh, osh, tree_shardings(mesh, P()))
+                  if mesh is not None else None)
+        return CellSpec(step_fn=step, args=(params_a, opt_a, batch_a),
+                        in_shardings=in_sh, out_shardings=out_sh,
+                        donate_argnums=(0, 1), kind="train")
+
+    dtype = jnp.bfloat16  # serving weights
+    params_a = _abstract(lambda: lm_init(jax.random.key(0), cfg,
+                                         dtype=dtype))
+    B, S = info["batch"], info["seq"]
+    if info["kind"] == "prefill":
+        tokens_a = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tsh = tree_shardings(mesh, spec(mesh, rules, (B, S), "batch", None))
+        cache_spec = spec(mesh, rules,
+                          (cfg.n_layers, B, S, cfg.n_kv, cfg.head_dim),
+                          None, "batch", "seq", "tp_kv", None)
+        out_sh = ((tree_shardings(mesh, spec(mesh, rules, (B, cfg.vocab),
+                                             "batch", "vocab_tp")),
+                   {"k": tree_shardings(mesh, cache_spec),
+                    "v": tree_shardings(mesh, cache_spec)})
+                  if mesh is not None else None)
+
+        def step(params, tokens):
+            return lm_prefill(params, tokens, cfg, shard)
+
+        return CellSpec(step_fn=step, args=(params_a, tokens_a),
+                        in_shardings=(psh, tsh) if mesh is not None else None,
+                        out_shardings=out_sh, kind="serve")
+
+    # decode
+    cache_a = _abstract(lambda: init_decode_cache(cfg, B, S, jnp.bfloat16))
+    cache_spec_p = spec(mesh, rules,
+                        (cfg.n_layers, B, S, cfg.n_kv, cfg.head_dim),
+                        None, "batch", "seq", "tp_kv", None)
+    csh = ({"k": tree_shardings(mesh, cache_spec_p),
+            "v": tree_shardings(mesh, cache_spec_p)}
+           if mesh is not None else None)
+    token_a = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    toksh = tree_shardings(mesh, spec(mesh, rules, (B, 1), "batch", None))
+    len_a = jax.ShapeDtypeStruct((), jnp.int32)
+    lsh = tree_shardings(mesh, P())
+
+    def step(params, cache, token, cache_len):
+        return lm_decode_step(params, token, cache, cache_len, cfg, shard)
+
+    out_sh = ((tree_shardings(mesh, spec(mesh, rules, (B, cfg.vocab),
+                                         "batch", "vocab_tp")), csh)
+              if mesh is not None else None)
+    return CellSpec(step_fn=step, args=(params_a, cache_a, token_a, len_a),
+                    in_shardings=((psh, csh, toksh, lsh)
+                                  if mesh is not None else None),
+                    out_shardings=out_sh, donate_argnums=(1,), kind="serve")
+
+
+# ---------------------------------------------------------------------------
+# Smoke runner shared by all LM archs (reduced dims, CPU-concrete)
+# ---------------------------------------------------------------------------
+def lm_smoke(cfg_full: LMConfig) -> dict:
+    moe = cfg_full.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, num_experts=min(moe.num_experts, 8),
+                                  top_k=min(moe.top_k, 2), d_ff=64,
+                                  d_ff_shared=64 if moe.n_shared else 0)
+    cfg = dataclasses.replace(
+        cfg_full, vocab=512, d_model=64, n_layers=2,
+        n_heads=4, n_kv=max(1, 4 * cfg_full.n_kv // cfg_full.n_heads),
+        head_dim=16, d_ff=128 if cfg_full.moe is None else 0, moe=moe,
+        dtype="float32", q_chunk=32, kv_chunk=32)
+    key = jax.random.key(0)
+    params = lm_init(key, cfg)
+    toks = jax.random.randint(key, (2, 64), 0, cfg.vocab)
+    loss = lm_loss(params, toks, toks, cfg)
+    cache = init_decode_cache(cfg, 2, 32, jnp.float32)
+    logits, cache = lm_decode_step(params, toks[:, :1], cache,
+                                   jnp.asarray(1, jnp.int32), cfg)
+    pl, pc = lm_prefill(params, toks[:, :16], cfg)
+    assert logits.shape == (2, cfg.vocab) and pl.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(loss)) and bool(jnp.isfinite(logits).all())
+    return {"loss": float(loss), "logits_shape": tuple(logits.shape),
+            "prefill_cache_k": tuple(pc["k"].shape)}
+
+
+def make_lm_arch(name: str, cfg: LMConfig, family: str = "lm",
+                 description: str = "") -> Arch:
+    return Arch(
+        name=name, family=family, shape_names=tuple(SHAPES),
+        build_cell=lambda shape, mesh: build_lm_cell(cfg, shape, mesh),
+        smoke=lambda: lm_smoke(cfg), description=description)

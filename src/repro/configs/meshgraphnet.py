@@ -1,0 +1,41 @@
+"""meshgraphnet [gnn] n_layers=15 d_hidden=128 aggregator=sum mlp_layers=2
+[arXiv:2010.03409]. Edge features are built from relative positions
+(Δpos ⊕ ‖Δpos‖), the standard MGN encoding."""
+import jax.numpy as jnp
+
+from repro.configs.base import register
+from repro.configs.gnn_common import (GNNAdapter, classification_loss,
+                                      make_gnn_arch, regression_loss)
+from repro.graph.segment import segment_sum
+from repro.models.meshgraphnet import mgn_forward, mgn_init
+
+N_LAYERS, D_HIDDEN, MLP_LAYERS = 15, 128, 2
+
+
+def _init(key, d_feat, n_out, shape):
+    return mgn_init(key, d_node_in=d_feat, d_edge_in=4, d_hidden=D_HIDDEN,
+                    n_layers=N_LAYERS, d_out=n_out, mlp_layers=MLP_LAYERS)
+
+
+def _edge_feat(batch):
+    s = jnp.maximum(batch["src"], 0)
+    d = jnp.maximum(batch["dst"], 0)
+    rel = batch["positions"][d] - batch["positions"][s]
+    dist = jnp.sqrt((rel ** 2).sum(-1, keepdims=True) + 1e-12)
+    return jnp.concatenate([rel, dist], axis=-1)
+
+
+def _loss(params, batch, info, shape, shard=lambda x, *n: x):
+    out = mgn_forward(params, batch["node_feat"], _edge_feat(batch),
+                      batch["src"], batch["dst"], num_nodes=info["nodes"],
+                      shard=shard)
+    if info["graphs"] is not None:
+        pooled = segment_sum(out, jnp.maximum(batch["mol_id"], 0),
+                             info["graphs"])
+        return regression_loss(pooled, batch["labels"])
+    return classification_loss(out, batch["labels"])
+
+
+ARCH = register(make_gnn_arch(GNNAdapter(
+    name="meshgraphnet", init=_init, loss=_loss,
+    description="Encode-process-decode mesh GNN, 15 blocks, 128 hidden.")))

@@ -1,0 +1,35 @@
+"""schnet [gnn] n_interactions=3 d_hidden=64 rbf=300 cutoff=10
+[arXiv:1706.08566]. Non-geometric shapes feed node features through a
+learned projection added to the species embedding (positions are provided
+by the data pipeline in every shape)."""
+from repro.configs.base import register
+from repro.configs.gnn_common import (GNNAdapter, classification_loss,
+                                      make_gnn_arch, regression_loss)
+from repro.models.schnet import schnet_forward, schnet_init
+
+D_HIDDEN, N_INTER, N_RBF, CUTOFF = 64, 3, 300, 10.0
+
+
+def _init(key, d_feat, n_out, shape):
+    return schnet_init(key, d_hidden=D_HIDDEN, n_interactions=N_INTER,
+                       n_rbf=N_RBF, cutoff=CUTOFF, d_out=n_out,
+                       d_feat_in=d_feat)
+
+
+def _loss(params, batch, info, shape, shard=lambda x, *n: x):
+    common = dict(num_nodes=info["nodes"], node_feat=batch["node_feat"],
+                  shard=shard)
+    if info["graphs"] is not None:
+        pred = schnet_forward(params, batch["species"], batch["positions"],
+                              batch["src"], batch["dst"],
+                              mol_id=batch["mol_id"],
+                              num_graphs=info["graphs"], **common)
+        return regression_loss(pred, batch["labels"])
+    logits = schnet_forward(params, batch["species"], batch["positions"],
+                            batch["src"], batch["dst"], **common)
+    return classification_loss(logits, batch["labels"])
+
+
+ARCH = register(make_gnn_arch(GNNAdapter(
+    name="schnet", init=_init, loss=_loss,
+    description="SchNet continuous-filter convolutions, 300 RBF.")))

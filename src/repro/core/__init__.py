@@ -1,0 +1,25 @@
+"""Quiver's primary contribution: workload metrics (PSGS/FAP), workload-aware
+feature placement, the tiered one-sided-read feature store, the PSGS-guided
+hybrid scheduler, and the multiplexed serving pipeline."""
+from repro.core.fap import compute_fap, monte_carlo_fap
+from repro.core.feature_store import ShardedFeatureStore, TieredFeatureStore
+from repro.core.pipeline import ServeMetrics, ServingEngine
+from repro.core.placement import (PlacementPlan, TopologySpec,
+                                  degree_placement, expert_placement,
+                                  freq_placement, hash_placement,
+                                  p3_placement, quiver_placement)
+from repro.core.psgs import batch_psgs, compute_psgs, monte_carlo_psgs
+from repro.core.scheduler import (CalibrationResult, HybridScheduler,
+                                  LatencyCurve, StaticScheduler, calibrate)
+from repro.core.serving import (DynamicBatcher, Request, WorkloadGenerator,
+                                batch_seeds, pad_to_bucket)
+
+__all__ = [
+    "compute_psgs", "monte_carlo_psgs", "batch_psgs", "compute_fap",
+    "monte_carlo_fap", "TopologySpec", "PlacementPlan", "quiver_placement",
+    "hash_placement", "degree_placement", "freq_placement", "p3_placement",
+    "expert_placement", "TieredFeatureStore", "ShardedFeatureStore",
+    "LatencyCurve", "CalibrationResult", "calibrate", "HybridScheduler",
+    "StaticScheduler", "Request", "WorkloadGenerator", "DynamicBatcher",
+    "batch_seeds", "pad_to_bucket", "ServingEngine", "ServeMetrics",
+]

@@ -1,0 +1,90 @@
+"""Feature Access Probability (FAP) — paper §5.1.
+
+    P_K[i] = Σ_{k=0..K} p_k[i]
+    p_0[i] = seed probability (uniform 1/|V| by default, or workload-supplied)
+    p_k[i] = Σ_{j ∈ N⁻_k(i)} p_0(j) · δ_k(j, i)        (= p_0ᵀ Tᵏ)
+
+computed with K transposed SpMV passes:  w_0 = p_0,  w_k = Tᵀ w_{k-1},
+P = Σ w_k.  Beyond-paper option ``truncated=True`` damps each step by the
+fanout acceptance ratio min(deg, l_k)/deg — the probability mass that actually
+survives fanout truncation in the real sampler.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.graph.segment import segment_sum
+
+
+@partial(jax.jit, static_argnames=("num_nodes", "fanouts", "truncated"))
+def _fap_device(src: jnp.ndarray, dst: jnp.ndarray, deg: jnp.ndarray,
+                p0: jnp.ndarray, num_nodes: int, fanouts: tuple[int, ...],
+                truncated: bool) -> jnp.ndarray:
+    degf = deg.astype(jnp.float32)
+    inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(degf, 1.0), 0.0)
+
+    w = p0
+    total = p0
+    for l_k in fanouts:
+        # Untruncated (paper): per-edge transition mass 1/deg(j).
+        # Truncated: P(specific neighbor among the l_k picks) = min(deg,l)/deg.
+        rate = jnp.minimum(degf, float(l_k)) * inv_deg if truncated else inv_deg
+        w = segment_sum((w * rate)[src], dst, num_nodes)
+        total = total + w
+    return total
+
+
+def compute_fap(graph: CSRGraph, fanouts: Sequence[int], *,
+                seed_prob: Optional[np.ndarray] = None,
+                truncated: bool = False) -> np.ndarray:
+    """FAP lookup table P_K, shape (num_nodes,), float32."""
+    n = graph.num_nodes
+    if seed_prob is None:
+        p0 = np.full((n,), 1.0 / n, dtype=np.float32)
+    else:
+        p0 = np.asarray(seed_prob, dtype=np.float32)
+        p0 = p0 / max(p0.sum(), 1e-12)
+    src, dst = graph.to_coo()
+    p = _fap_device(jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+                    jnp.asarray(graph.out_degree, jnp.int32),
+                    jnp.asarray(p0), n, tuple(int(f) for f in fanouts),
+                    truncated)
+    return np.asarray(p)
+
+
+def monte_carlo_fap(graph: CSRGraph, fanouts: Sequence[int], *,
+                    requests: int = 2000, seed: int = 0,
+                    seed_prob: Optional[np.ndarray] = None) -> np.ndarray:
+    """Empirical access frequency from running the actual sampler — the test
+    oracle: relative ordering (rank correlation) should match compute_fap."""
+    rng = np.random.default_rng(seed)
+    n = graph.num_nodes
+    counts = np.zeros((n,), dtype=np.float64)
+    indptr, indices = graph.indptr, graph.indices
+    p = seed_prob / seed_prob.sum() if seed_prob is not None else None
+    seeds = rng.choice(n, size=requests, p=p)
+    for s in seeds:
+        frontier = [s]
+        counts[s] += 1
+        for fan in fanouts:
+            nxt = []
+            for v in frontier:
+                a, b = indptr[v], indptr[v + 1]
+                deg = b - a
+                if deg == 0:
+                    continue
+                if deg <= fan:
+                    nxt.extend(indices[a:b].tolist())
+                else:
+                    nxt.extend(indices[a + rng.integers(0, deg, size=fan)]
+                               .tolist())
+            for u in nxt:
+                counts[u] += 1
+            frontier = nxt
+    return counts / requests

@@ -1,0 +1,277 @@
+"""Tiered feature store + one-sided read engine (paper §5.3, TPU-native).
+
+The paper's engine issues zero-copy one-sided reads (UVA / RDMA) from GPU
+kernels. On TPU the equivalent is to keep the whole hot/warm path inside one
+XLA program so no host mediation happens at all:
+
+  HOT   rows live replicated in every chip's HBM → local gather.
+  WARM  rows are node-sharded across chips → fetched with an explicit
+        ``shard_map`` exchange (our one-sided read): either
+        (a) ``allgather_ids + local gather + reduce_scatter`` (robust for small
+            request vectors), or
+        (b) capacity-bounded ``all_to_all`` with owner-sorted ids (moves only
+            requested rows — the RDMA-read analogue; skew overflow spills to
+            the host path, like a cache miss).
+  HOST  rows are fetched with ``jax.experimental.io_callback`` (PCIe analogue).
+  DISK  rows return zeros + a miss flag (callers prefetch asynchronously).
+
+The paper's address-sort/TLB optimization survives as: ids are deduplicated
+(``fixed_size_unique``) and sorted before every gather/exchange, which both
+shrinks collective payloads and improves gather locality.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.placement import (PlacementPlan, TIER_DISK, TIER_HOST,
+                                  TIER_HOT, TIER_WARM)
+from repro.graph.sampler import fixed_size_unique
+
+
+@dataclasses.dataclass
+class TieredFeatureStore:
+    """Single-host runtime store (serving engine / tests / benchmarks).
+
+    The distributed (mesh) variant is `ShardedFeatureStore` below; this class
+    emulates the tier structure faithfully on one device + host memory, so
+    policy benchmarks (Fig. 15/16) exercise the same code paths.
+    """
+
+    plan: PlacementPlan
+    feat_dim: int
+    hot: jnp.ndarray          # (n_hot, d) — "device HBM, replicated"
+    warm: jnp.ndarray         # (warm_total, d) — "device HBM, partitioned"
+    host: np.ndarray          # (host_total, d) — host RAM (numpy, off device)
+    disk: np.ndarray          # (rest, d) — cold store
+    tier_t: jnp.ndarray       # (N,) int32 lookup tables (device-resident;
+    slot_t: jnp.ndarray       # paper: "feature lookup table" via UVA)
+    owner_t: jnp.ndarray      # (N,) global warm owner (pod*G + dev), -1 else
+    warm_base: jnp.ndarray    # (world,) row offset of each owner's warm shard
+
+    @staticmethod
+    def build(features: np.ndarray, plan: PlacementPlan) -> "TieredFeatureStore":
+        n, d = features.shape
+        topo = plan.topology
+        world = topo.num_pods * topo.devices_per_pod
+        hot_ids = np.flatnonzero(plan.tier == TIER_HOT)
+        hot = np.zeros((max(plan.n_hot, 1), d), features.dtype)
+        hot[plan.slot[hot_ids]] = features[hot_ids]
+
+        # Warm rows concatenated owner-major: [owner0 rows | owner1 rows | ...]
+        owner_global = np.where(
+            plan.tier == TIER_WARM,
+            np.maximum(plan.pod_owner, 0).astype(np.int64) * topo.devices_per_pod
+            + plan.device_owner, -1)
+        counts = np.array([(owner_global == w).sum() for w in range(world)],
+                          dtype=np.int64)
+        base = np.zeros(world, dtype=np.int64)
+        np.cumsum(counts[:-1], out=base[1:])
+        warm = np.zeros((max(int(counts.sum()), 1), d), features.dtype)
+        warm_ids = np.flatnonzero(plan.tier == TIER_WARM)
+        warm_rows = base[owner_global[warm_ids]] + plan.slot[warm_ids]
+        warm[warm_rows] = features[warm_ids]
+
+        host_ids = np.flatnonzero(plan.tier == TIER_HOST)
+        # pod-major host layout
+        hcounts = np.zeros(topo.num_pods, dtype=np.int64)
+        hbase = np.zeros(topo.num_pods, dtype=np.int64)
+        for p in range(topo.num_pods):
+            hcounts[p] = ((plan.tier == TIER_HOST)
+                          & ((plan.pod_owner == p) | (plan.pod_owner == -1))).sum()
+        np.cumsum(hcounts[:-1], out=hbase[1:])
+        host = np.zeros((max(int(hcounts.sum()), 1), d), features.dtype)
+        hpod = np.maximum(plan.pod_owner[host_ids], 0)
+        host[hbase[hpod] + plan.slot[host_ids]] = features[host_ids]
+
+        disk_ids = np.flatnonzero(plan.tier == TIER_DISK)
+        disk = np.zeros((max(disk_ids.shape[0], 1), d), features.dtype)
+        disk[plan.slot[disk_ids]] = features[disk_ids]
+
+        # Unified slot table pointing into each tier's flat store.
+        slot_flat = plan.slot.copy()
+        slot_flat[warm_ids] = warm_rows
+        slot_flat[host_ids] = hbase[hpod] + plan.slot[host_ids]
+
+        return TieredFeatureStore(
+            plan=plan, feat_dim=d,
+            hot=jnp.asarray(hot), warm=jnp.asarray(warm), host=host, disk=disk,
+            tier_t=jnp.asarray(plan.tier, jnp.int32),
+            slot_t=jnp.asarray(slot_flat, jnp.int32),
+            owner_t=jnp.asarray(owner_global, jnp.int32),
+            warm_base=jnp.asarray(base, jnp.int32))
+
+    # -- lookup -------------------------------------------------------------
+    def lookup(self, ids: jnp.ndarray, *, include_host: bool = True,
+               dedup: bool = True) -> jnp.ndarray:
+        """Gather features for (possibly padded-with--1) ids, (M, d)."""
+        if dedup:
+            uniq, inv = fixed_size_unique(jnp.asarray(ids, jnp.int32),
+                                          int(ids.shape[0]))
+            rows = self._lookup_unique(uniq, include_host)
+            out = rows[inv]
+            return jnp.where((jnp.asarray(ids) >= 0)[:, None], out, 0.0)
+        rows = self._lookup_unique(jnp.asarray(ids, jnp.int32), include_host)
+        return jnp.where((jnp.asarray(ids) >= 0)[:, None], rows, 0.0)
+
+    def _lookup_unique(self, ids: jnp.ndarray, include_host: bool) -> jnp.ndarray:
+        safe = jnp.maximum(ids, 0)
+        tier = self.tier_t[safe]
+        slot = self.slot_t[safe]
+        out = jnp.zeros((ids.shape[0], self.feat_dim), self.hot.dtype)
+        out = jnp.where((tier == TIER_HOT)[:, None],
+                        self.hot[jnp.minimum(slot, self.hot.shape[0] - 1)], out)
+        out = jnp.where((tier == TIER_WARM)[:, None],
+                        self.warm[jnp.minimum(slot, self.warm.shape[0] - 1)],
+                        out)
+        if include_host:
+            host_rows = self._host_fetch(ids, tier, slot)
+            out = jnp.where((tier >= TIER_HOST)[:, None], host_rows, out)
+        return jnp.where((ids >= 0)[:, None], out, 0.0)
+
+    def _host_fetch(self, ids, tier, slot):
+        """PCIe-analogue slow path: host callback, ids sorted by address
+        (the paper's TLB optimization) before the gather."""
+        host, disk = self.host, self.disk
+
+        def cb(tier_np, slot_np):
+            tier_np = np.asarray(tier_np)
+            slot_np = np.asarray(slot_np)
+            out = np.zeros((tier_np.shape[0], host.shape[1]), host.dtype)
+            m_h = tier_np == TIER_HOST
+            m_d = tier_np == TIER_DISK
+            # address-sorted gathers
+            for m, store in ((m_h, host), (m_d, disk)):
+                idx = np.flatnonzero(m)
+                if idx.size:
+                    order = np.argsort(slot_np[idx])
+                    rows = store[slot_np[idx][order]]
+                    out[idx[order]] = rows
+            return out
+
+        return io_callback(
+            cb, jax.ShapeDtypeStruct((ids.shape[0], self.feat_dim),
+                                     self.hot.dtype), tier, slot,
+            ordered=False)
+
+    def tier_histogram(self, ids: np.ndarray) -> dict[str, int]:
+        ids = np.asarray(ids)
+        ids = ids[ids >= 0]
+        t = self.plan.tier[ids]
+        return {"hot": int((t == TIER_HOT).sum()),
+                "warm": int((t == TIER_WARM).sum()),
+                "host": int((t == TIER_HOST).sum()),
+                "disk": int((t == TIER_DISK).sum())}
+
+
+# ---------------------------------------------------------------------------
+# Distributed store: shard_map one-sided reads over the mesh
+# ---------------------------------------------------------------------------
+class ShardedFeatureStore:
+    """Feature store laid out over a device mesh axis.
+
+    hot  : (n_hot, d) replicated
+    warm : (world * rows_per_dev, d) sharded on axis 0 over ``axis_name``
+    Lookup runs under ``shard_map``; each device resolves its own request
+    vector; warm misses are exchanged with allgather+reduce_scatter (default)
+    or capacity-bounded all_to_all.
+    """
+
+    def __init__(self, mesh: Mesh, axis_name: str, hot: jnp.ndarray,
+                 warm: jnp.ndarray, tier_t: jnp.ndarray, slot_t: jnp.ndarray,
+                 owner_t: jnp.ndarray, strategy: str = "allgather"):
+        self.mesh, self.axis = mesh, axis_name
+        self.world = int(np.prod([mesh.shape[a] for a in
+                                  (axis_name if isinstance(axis_name, tuple)
+                                   else (axis_name,))]))
+        self.rows_per_dev = warm.shape[0] // max(self.world, 1)
+        self.strategy = strategy
+        rep = NamedSharding(mesh, P())
+        shard0 = NamedSharding(mesh, P(axis_name))
+        self.hot = jax.device_put(hot, rep)
+        self.warm = jax.device_put(warm, shard0)
+        self.tier_t = jax.device_put(tier_t, rep)
+        self.slot_t = jax.device_put(slot_t, rep)
+        self.owner_t = jax.device_put(owner_t, rep)
+        self.feat_dim = hot.shape[1]
+
+    @staticmethod
+    def from_tiered(store: TieredFeatureStore, mesh: Mesh, axis_name: str,
+                    strategy: str = "allgather") -> "ShardedFeatureStore":
+        topo = store.plan.topology
+        world = topo.num_pods * topo.devices_per_pod
+        mesh_world = int(np.prod([mesh.shape[a] for a in
+                                  (axis_name if isinstance(axis_name, tuple)
+                                   else (axis_name,))]))
+        assert world == mesh_world, (world, mesh_world)
+        # pad warm shards to equal size
+        rows = store.warm.shape[0]
+        per = -(-rows // world)
+        warm = jnp.zeros((per * world, store.feat_dim), store.warm.dtype)
+        counts = np.diff(np.append(np.asarray(store.warm_base), rows))
+        slot_shift = np.zeros(int(np.asarray(store.owner_t).shape[0]),
+                              np.int64)
+        # rebuild slot table with padded bases
+        owner = np.asarray(store.owner_t)
+        slot = np.asarray(store.slot_t).astype(np.int64)
+        tier = np.asarray(store.tier_t)
+        base = np.asarray(store.warm_base).astype(np.int64)
+        warm_np = np.zeros((per * world, store.feat_dim),
+                           np.asarray(store.warm).dtype)
+        src = np.asarray(store.warm)
+        new_slot = slot.copy()
+        for w in range(world):
+            c = int(counts[w])
+            warm_np[w * per: w * per + c] = src[base[w]: base[w] + c]
+            m = (tier == TIER_WARM) & (owner == w)
+            new_slot[m] = slot[m] - base[w] + w * per
+        return ShardedFeatureStore(
+            mesh, axis_name, store.hot, jnp.asarray(warm_np),
+            store.tier_t, jnp.asarray(new_slot, dtype=jnp.int32),
+            store.owner_t, strategy)
+
+    def lookup(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """ids: (world * m,) global ids sharded over the axis (each device
+        resolves m requests). Returns (world * m, d) with the same sharding."""
+        axis = self.axis
+        per = self.rows_per_dev
+
+        def body(hot, warm, tier_t, slot_t, owner_t, ids_l):
+            my = jax.lax.axis_index(axis)
+            safe = jnp.maximum(ids_l, 0)
+            tier = tier_t[safe]
+            slot = slot_t[safe]
+            out = jnp.zeros((ids_l.shape[0], self.feat_dim), hot.dtype)
+            out = jnp.where((tier == TIER_HOT)[:, None],
+                            hot[jnp.minimum(slot, hot.shape[0] - 1)], out)
+            is_warm = tier == TIER_WARM
+            local = is_warm & (owner_t[safe] == my)
+            lrow = jnp.clip(slot - my * per, 0, per - 1)
+            out = jnp.where(local[:, None], warm[lrow], out)
+            remote = is_warm & ~local
+            # one-sided read: every device publishes its wanted global warm
+            # rows; owners answer; reduce_scatter returns each requester's rows
+            want_slot = jnp.where(remote, slot, -1)
+            all_want = jax.lax.all_gather(want_slot, axis)      # (W, m)
+            owned = (all_want >= my * per) & (all_want < (my + 1) * per)
+            rows = warm[jnp.clip(all_want - my * per, 0, per - 1)]
+            rows = jnp.where(owned[..., None], rows, 0.0)        # (W, m, d)
+            answered = jax.lax.psum_scatter(rows, axis, scatter_dimension=0,
+                                            tiled=False)         # (m, d)
+            answered = answered.reshape(ids_l.shape[0], self.feat_dim)
+            out = jnp.where(remote[:, None], answered, out)
+            return jnp.where((ids_l >= 0)[:, None], out, 0.0)
+
+        fn = jax.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(), P(axis), P(), P(), P(), P(axis)),
+            out_specs=P(axis))
+        return fn(self.hot, self.warm, self.tier_t, self.slot_t, self.owner_t,
+                  ids)

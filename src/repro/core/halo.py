@@ -1,0 +1,166 @@
+"""Halo exchange for locality-partitioned message passing (shard_map).
+
+GSPMD lowers a GNN scatter (edge-sharded messages → node-sharded sums) to
+dense partial-accumulator all-reduces — O(N·F) wire bytes per layer
+regardless of how few rows actually cross shards. Quiver's thesis applied to
+message passing says: partition edges by *destination owner* (the data
+pipeline sorts edges once), then the scatter is purely local and the only
+communication is gathering the *remote source rows* each shard needs — a
+capacity-bounded all-to-all whose volume is the workload-aware remote
+fraction, not O(N·F).
+
+``halo_gather`` implements the exchange:
+
+  1. dedup local wanted ids (``fixed_size_unique`` — hub sources repeat a
+     lot; the paper's id-sort optimization),
+  2. bucket unique ids by owner with a fixed per-peer capacity
+     (over-capacity ids spill to zeros, like a cache miss — the capacity is
+     a placement-time knob sized from partitioner statistics),
+  3. ``all_to_all`` the request ids, answer with local row gathers,
+     ``all_to_all`` the rows back,
+  4. scatter rows to the original (duplicated) edge order.
+
+Wire bytes per device ≈ 2 · P·cap_pp · row_bytes — independent of N.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.sampler import fixed_size_unique
+
+
+def bucket_by_owner(ids: jnp.ndarray, num_owners: int, rows_per_owner: int,
+                    cap_pp: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """ids: (U,) global ids (-1 pad). Returns (req (P, cap_pp) int32 with -1
+    pad, slot (U,) int32 position of each id in the request matrix, or -1 if
+    dropped/invalid)."""
+    u = ids.shape[0]
+    owner = jnp.where(ids >= 0, ids // rows_per_owner, num_owners)
+    order = jnp.argsort(owner)
+    sorted_owner = owner[order]
+    # rank within owner block = position - first occurrence of the owner
+    idx = jnp.arange(u)
+    is_first = jnp.concatenate([jnp.array([True]),
+                                sorted_owner[1:] != sorted_owner[:-1]])
+    block_start = jnp.where(is_first, idx, 0)
+    block_start = jax.lax.associative_scan(jnp.maximum, block_start)
+    rank = idx - block_start
+    keep = (sorted_owner < num_owners) & (rank < cap_pp)
+    flat_pos = jnp.where(keep, sorted_owner * cap_pp + rank,
+                         num_owners * cap_pp)
+    req = jnp.full((num_owners * cap_pp + 1,), -1, jnp.int32)
+    req = req.at[flat_pos].set(ids[order].astype(jnp.int32), mode="drop")
+    slot = jnp.full((u,), -1, jnp.int32)
+    slot = slot.at[order].set(
+        jnp.where(keep, flat_pos, -1).astype(jnp.int32))
+    return req[:-1].reshape(num_owners, cap_pp), slot
+
+
+def halo_gather(x_local: jnp.ndarray, want_ids: jnp.ndarray, *, axis,
+                num_shards: int, rows_per_shard: int,
+                cap_pp: int) -> jnp.ndarray:
+    """Inside shard_map: gather rows of the globally-sharded array ``x``
+    (this shard holds ``x_local`` = rows [me·R, (me+1)·R)) for global
+    ``want_ids`` (-1 padded). Over-capacity ids return zero rows.
+
+    Returns (len(want_ids), *x_local.shape[1:])."""
+    me = jax.lax.axis_index(axis)
+    e = want_ids.shape[0]
+    feat_shape = x_local.shape[1:]
+
+    # 1. dedup (hubs repeat): unique wanted ids + inverse map
+    uniq, inv = fixed_size_unique(jnp.asarray(want_ids, jnp.int32), e)
+
+    # 2. bucket unique ids by owner, capacity per peer
+    req, slot = bucket_by_owner(uniq, num_shards, rows_per_shard, cap_pp)
+
+    # 3a. send requests to owners
+    req_in = jax.lax.all_to_all(req[:, None, :], axis, split_axis=0,
+                                concat_axis=0)[:, 0, :]     # (P, cap_pp)
+    # 3b. answer with local rows (row 0-substituted for invalid, then zeroed)
+    local_idx = jnp.clip(req_in - me * rows_per_shard, 0, rows_per_shard - 1)
+    rows = x_local[local_idx.reshape(-1)]
+    rows = rows.reshape((num_shards, cap_pp) + feat_shape)
+    rows = jnp.where((req_in >= 0).reshape(num_shards, cap_pp,
+                                           *([1] * len(feat_shape))),
+                     rows, 0.0)
+    # 3c. rows back to requesters
+    rows_back = jax.lax.all_to_all(rows[:, None], axis, split_axis=0,
+                                   concat_axis=0)[:, 0]
+    flat_rows = rows_back.reshape((num_shards * cap_pp,) + feat_shape)
+
+    # 4. unique rows → original duplicated order; dropped/padded ids → 0
+    uniq_rows = jnp.where(
+        (slot >= 0).reshape((-1,) + (1,) * len(feat_shape)),
+        flat_rows[jnp.clip(slot, 0, num_shards * cap_pp - 1)], 0.0)
+    out = uniq_rows[inv]
+    return jnp.where((want_ids >= 0).reshape((-1,) + (1,) * len(feat_shape)),
+                     out, 0.0)
+
+
+class HaloCtx:
+    """Sharding context handed to locality-sharded model code (inside
+    shard_map): linear shard index over possibly-multiple mesh axes, halo
+    gathers, replicated reductions."""
+
+    def __init__(self, axes, mesh_shape: dict, rows: int, cap_pp: int):
+        self.axes = tuple(axes) if not isinstance(axes, str) else (axes,)
+        self.sizes = [mesh_shape[a] for a in self.axes]
+        self.world = int(np.prod(self.sizes))
+        self.rows = rows
+        self.cap_pp = cap_pp
+
+    def index(self) -> jnp.ndarray:
+        idx = jnp.zeros((), jnp.int32)
+        for a, s in zip(self.axes, self.sizes):
+            idx = idx * s + jax.lax.axis_index(a)
+        return idx
+
+    def offset(self) -> jnp.ndarray:
+        return self.index() * self.rows
+
+    def gather(self, x_local: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+        return halo_gather(x_local, ids, axis=self.axes,
+                           num_shards=self.world, rows_per_shard=self.rows,
+                           cap_pp=self.cap_pp)
+
+    def all_gather(self, x_local: jnp.ndarray) -> jnp.ndarray:
+        return jax.lax.all_gather(x_local, self.axes, tiled=True)
+
+    def mean(self, total: jnp.ndarray, count: jnp.ndarray) -> jnp.ndarray:
+        return (jax.lax.psum(total, self.axes)
+                / jnp.maximum(jax.lax.psum(count, self.axes), 1.0))
+
+
+def partition_edges_by_dst(src: np.ndarray, dst: np.ndarray, num_nodes: int,
+                           num_shards: int) -> tuple[np.ndarray, np.ndarray]:
+    """Data-pipeline step: sort the edge list so shard d's slice only
+    contains edges whose dst lives on shard d (dst-aligned partitioning).
+    Pads each shard's slice to the common max with -1."""
+    rows = -(-num_nodes // num_shards)
+    owner = dst // rows
+    order = np.argsort(owner, kind="stable")
+    src_s, dst_s = src[order], dst[order]
+    counts = np.bincount(owner, minlength=num_shards)
+    cap = int(counts.max())
+    out_src = np.full((num_shards, cap), -1, np.int32)
+    out_dst = np.full((num_shards, cap), -1, np.int32)
+    off = 0
+    for d in range(num_shards):
+        c = counts[d]
+        out_src[d, :c] = src_s[off:off + c]
+        out_dst[d, :c] = dst_s[off:off + c]
+        off += c
+    return out_src.reshape(-1), out_dst.reshape(-1)
+
+
+def remote_fraction(src: np.ndarray, dst: np.ndarray, num_nodes: int,
+                    num_shards: int) -> float:
+    """Partitioner statistic that sizes ``cap_pp``: fraction of edges whose
+    src lives on a different shard than dst."""
+    rows = -(-num_nodes // num_shards)
+    return float(np.mean((src // rows) != (dst // rows)))

@@ -1,0 +1,133 @@
+"""Probabilistic Sampled Sub-graph Size (PSGS) — paper §4.1.
+
+For a K-hop sampling configuration with per-hop fanouts ``l_1..l_K`` the paper
+defines
+
+    Q_K[i] = Σ_{k=0..K} q_k[i]
+    q_0[i] = 1
+    q_k[i] = Σ_j δ_{k-1}(i, j) · min(|N⁺(j)|, l_k)
+
+with δ_k = T^k the k-step transition probability of the row-stochastic
+adjacency T. Since δ is a *probability* (its rows sum to 1), this counts the
+expected fan-in of a single random-walk position per hop — it does not multiply
+by the number of sampled slots at the previous hop (the paper's own worked
+example, Fig. 5, makes the same simplification: q_2[3] = 1 · 1/2).
+
+We implement two modes:
+
+* ``mode="paper"`` — the formula exactly as published (faithful baseline).
+* ``mode="branching"`` — beyond-paper correction that accounts for sampling
+  multiplicity, i.e. the true expected number of sampled slots produced by the
+  actual sampler:
+
+      s_{K+1} ≡ 0
+      s_k[j]  = min(deg_j, l_k) · (1 + (1/deg_j) Σ_{m∈N(j)} s_{k+1}[m])
+      Q[i]    = 1 + s_1[i]
+
+  This is what :func:`monte_carlo_psgs` converges to, and is the default
+  scheduling signal (EXPERIMENTS.md records both).
+
+Both evaluate with a Horner scheme in K sparse matrix–vector passes; each pass
+is a ``segment_sum`` SpMV — the TPU analogue of the paper's CUDA sparse matmul
+(O(K·|E|)). The output is the O(|V|) lookup table consulted in O(1) at serving
+time (paper §4.2.2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+from repro.graph.segment import segment_sum
+
+
+@partial(jax.jit, static_argnames=("num_nodes", "fanouts", "mode"))
+def _psgs_device(src: jnp.ndarray, dst: jnp.ndarray, deg: jnp.ndarray,
+                 num_nodes: int, fanouts: tuple[int, ...],
+                 mode: str) -> jnp.ndarray:
+    degf = deg.astype(jnp.float32)
+    inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(degf, 1.0), 0.0)
+
+    def spmv_T(v):
+        # (T v)[i] = (1/deg_i) Σ_{j ∈ N⁺(i)} v[j]
+        return segment_sum(v[dst], src, num_nodes) * inv_deg
+
+    del mode  # only the faithful "paper" formula lives here
+    u = jnp.minimum(degf, float(fanouts[-1]))
+    for l_k in reversed(fanouts[:-1]):
+        u = jnp.minimum(degf, float(l_k)) + spmv_T(u)
+    return 1.0 + u
+
+
+@partial(jax.jit, static_argnames=("num_nodes", "fanouts"))
+def _psgs_branching(src: jnp.ndarray, dst: jnp.ndarray, deg: jnp.ndarray,
+                    num_nodes: int, fanouts: tuple[int, ...]) -> jnp.ndarray:
+    degf = deg.astype(jnp.float32)
+    inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(degf, 1.0), 0.0)
+
+    def mean_over_neighbors(v):
+        return segment_sum(v[dst], src, num_nodes) * inv_deg
+
+    s = jnp.zeros((num_nodes,), jnp.float32)
+    for l_k in reversed(fanouts):
+        picks = jnp.minimum(degf, float(l_k))
+        s = picks * (1.0 + mean_over_neighbors(s))
+    return 1.0 + s
+
+
+def compute_psgs(graph: CSRGraph, fanouts: Sequence[int], *,
+                 mode: str = "branching") -> np.ndarray:
+    """PSGS lookup table Q_K, shape (num_nodes,), float32."""
+    if not fanouts:
+        return np.ones((graph.num_nodes,), dtype=np.float32)
+    src, dst = graph.to_coo()
+    args = (jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+            jnp.asarray(graph.out_degree, jnp.int32), graph.num_nodes,
+            tuple(int(f) for f in fanouts))
+    if mode == "branching":
+        q = _psgs_branching(*args)
+    elif mode == "paper":
+        q = _psgs_device(*args, mode="paper")
+    else:
+        raise ValueError(f"unknown PSGS mode {mode!r}")
+    return np.asarray(q)
+
+
+def monte_carlo_psgs(graph: CSRGraph, node: int, fanouts: Sequence[int],
+                     *, trials: int = 200, seed: int = 0) -> float:
+    """Brute-force PSGS by running the actual sampler — the test oracle for
+    ``mode="branching"`` (expected number of sampled *slots*, multiplicity
+    included)."""
+    rng = np.random.default_rng(seed)
+    indptr, indices = graph.indptr, graph.indices
+    total = 0
+    for _ in range(trials):
+        count = 1
+        frontier = [node]
+        for fan in fanouts:
+            nxt = []
+            for v in frontier:
+                s, e = indptr[v], indptr[v + 1]
+                deg = e - s
+                if deg == 0:
+                    continue
+                if deg <= fan:
+                    nxt.extend(indices[s:e].tolist())
+                else:
+                    nxt.extend(indices[s + rng.integers(0, deg, size=fan)]
+                               .tolist())
+            count += len(nxt)
+            frontier = nxt
+        total += count
+    return total / trials
+
+
+def batch_psgs(psgs_table: np.ndarray, seeds: np.ndarray) -> float:
+    """Accumulated PSGS of a request batch (paper §4.2.2): O(1) per seed."""
+    seeds = np.asarray(seeds)
+    valid = seeds >= 0
+    return float(psgs_table[seeds[valid]].sum())

@@ -1,0 +1,117 @@
+"""GNN request types, workload generation and dynamic batching (paper §4.2.2).
+
+The batcher closes a batch when (a) the batching deadline expires, (b) the
+accumulated PSGS reaches the budget, or (c) the max batch size is hit —
+(b) is what distinguishes Quiver from fixed-size batching (Batchsize-Bound in
+Fig. 10): cost-aware batches have predictable processing latency even though
+per-seed cost varies by orders of magnitude.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    seeds: np.ndarray            # (s,) seed node ids
+    arrival: float               # seconds (perf_counter domain)
+    done: Optional[float] = None
+
+    @property
+    def latency(self) -> float:
+        assert self.done is not None
+        return self.done - self.arrival
+
+
+class WorkloadGenerator:
+    """Client emulation. Seed nodes are drawn out-degree-weighted by default
+    ("representative of real-world serving workloads", paper §6.1); uniform
+    and zipf options cover the training-vs-serving distribution-shift
+    experiments."""
+
+    def __init__(self, num_nodes: int, out_degree: np.ndarray, *,
+                 distribution: str = "degree", zipf_a: float = 1.4,
+                 seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.num_nodes = num_nodes
+        if distribution == "degree":
+            w = out_degree.astype(np.float64) + 1e-6
+            self.p = w / w.sum()
+        elif distribution == "uniform":
+            self.p = None
+        elif distribution == "zipf":
+            w = 1.0 / np.power(np.arange(1, num_nodes + 1), zipf_a)
+            self.p = (w / w.sum())[self.rng.permutation(num_nodes)]
+        else:
+            raise ValueError(distribution)
+        self._next_id = 0
+
+    def make_request(self, seeds_per_request: int = 1) -> Request:
+        seeds = self.rng.choice(self.num_nodes, size=seeds_per_request,
+                                p=self.p)
+        self._next_id += 1
+        return Request(self._next_id, seeds.astype(np.int64),
+                       time.perf_counter())
+
+    def stream(self, n: int, seeds_per_request: int = 1) -> Iterator[Request]:
+        for _ in range(n):
+            yield self.make_request(seeds_per_request)
+
+
+class DynamicBatcher:
+    """Accumulates requests into batches closed by deadline / PSGS budget /
+    max size. ``psgs_budget=None`` degenerates to Batchsize-Bound."""
+
+    def __init__(self, *, deadline_s: float = 0.002,
+                 psgs_budget: Optional[float] = None, max_batch: int = 1024,
+                 psgs_table: Optional[np.ndarray] = None):
+        self.deadline_s = deadline_s
+        self.psgs_budget = psgs_budget
+        self.max_batch = max_batch
+        self.psgs_table = psgs_table
+        self._pending: list[Request] = []
+        self._opened: Optional[float] = None
+        self._acc_psgs = 0.0
+
+    def add(self, req: Request) -> Optional[list[Request]]:
+        """Add a request; returns a closed batch if a boundary was hit."""
+        if self._opened is None:
+            self._opened = time.perf_counter()
+        self._pending.append(req)
+        if self.psgs_table is not None:
+            self._acc_psgs += float(
+                self.psgs_table[req.seeds[req.seeds >= 0]].sum())
+        full = len(self._pending) >= self.max_batch
+        over_budget = (self.psgs_budget is not None
+                       and self._acc_psgs >= self.psgs_budget)
+        expired = time.perf_counter() - self._opened >= self.deadline_s
+        if full or over_budget or expired:
+            return self.flush()
+        return None
+
+    def flush(self) -> Optional[list[Request]]:
+        if not self._pending:
+            return None
+        batch, self._pending = self._pending, []
+        self._opened, self._acc_psgs = None, 0.0
+        return batch
+
+
+def batch_seeds(batch: list[Request]) -> np.ndarray:
+    return np.concatenate([r.seeds for r in batch])
+
+
+def pad_to_bucket(arr: np.ndarray, *, min_size: int = 16,
+                  fill: int = -1) -> np.ndarray:
+    """Pad a dynamic-size host array up to the next power-of-two bucket so
+    jit re-compilation is bounded to O(log max_size) shapes."""
+    n = max(int(arr.shape[0]), 1)
+    size = max(min_size, 1 << (n - 1).bit_length())
+    out = np.full((size,) + arr.shape[1:], fill, dtype=arr.dtype)
+    out[:n] = arr
+    return out

@@ -1,0 +1,18 @@
+from repro.graph.csr import CSRGraph
+from repro.graph.generators import (grid_mesh_graph, molecule_batch,
+                                    power_law_graph, preset_graph,
+                                    radius_graph, uniform_graph)
+from repro.graph.sampler import (SampledHops, device_sample, fixed_size_unique,
+                                 host_sample, host_sample_dense,
+                                 realized_size, sample_khop)
+from repro.graph.segment import (scatter_spmm, segment_max, segment_mean,
+                                 segment_softmax, segment_sum)
+
+__all__ = [
+    "CSRGraph", "power_law_graph", "uniform_graph", "grid_mesh_graph",
+    "radius_graph", "molecule_batch", "preset_graph", "SampledHops",
+    "sample_khop", "device_sample", "host_sample", "host_sample_dense",
+    "realized_size",
+    "fixed_size_unique", "segment_sum", "segment_mean", "segment_max",
+    "segment_softmax", "scatter_spmm",
+]

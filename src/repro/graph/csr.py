@@ -1,0 +1,74 @@
+"""CSR graph container used across the system.
+
+All device-side code works on two int32 arrays (indptr, indices) plus optional
+edge weights. Host-side metadata (numpy mirrors) is kept for the exact host
+sampler and for metric precomputation on very large graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    """Compressed-sparse-row adjacency. Out-edges of node i are
+    ``indices[indptr[i]:indptr[i+1]]``."""
+
+    indptr: np.ndarray  # (N+1,) int64/int32
+    indices: np.ndarray  # (E,) int32
+    num_nodes: int
+    edge_weight: Optional[np.ndarray] = None  # (E,) float32, defaults uniform
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def out_degree(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int32)
+
+    # ---- constructors -------------------------------------------------
+    @staticmethod
+    def from_edge_index(src: np.ndarray, dst: np.ndarray, num_nodes: int,
+                        edge_weight: Optional[np.ndarray] = None) -> "CSRGraph":
+        """Build CSR from a COO edge list (src -> dst)."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        order = np.argsort(src, kind="stable")
+        src_s, dst_s = src[order], dst[order]
+        counts = np.bincount(src_s, minlength=num_nodes)
+        indptr = np.zeros(num_nodes + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        ew = None
+        if edge_weight is not None:
+            ew = np.asarray(edge_weight, dtype=np.float32)[order]
+        return CSRGraph(indptr=indptr, indices=dst_s.astype(np.int32),
+                        num_nodes=int(num_nodes), edge_weight=ew)
+
+    # ---- conversions ---------------------------------------------------
+    def to_coo(self) -> tuple[np.ndarray, np.ndarray]:
+        src = np.repeat(np.arange(self.num_nodes, dtype=np.int32),
+                        self.out_degree)
+        return src, self.indices
+
+    def reverse(self) -> "CSRGraph":
+        """CSC view as a CSR over in-edges (for FAP / in-neighbor passes)."""
+        src, dst = self.to_coo()
+        return CSRGraph.from_edge_index(dst, src, self.num_nodes,
+                                        self.edge_weight)
+
+    def device_arrays(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        return (jnp.asarray(self.indptr, dtype=jnp.int32),
+                jnp.asarray(self.indices, dtype=jnp.int32))
+
+    def validate(self) -> None:
+        assert self.indptr.shape == (self.num_nodes + 1,)
+        assert self.indptr[0] == 0 and self.indptr[-1] == self.num_edges
+        assert np.all(np.diff(self.indptr) >= 0)
+        if self.num_edges:
+            assert self.indices.min() >= 0
+            assert self.indices.max() < self.num_nodes

@@ -1,0 +1,170 @@
+"""Neighbor samplers: padded fixed-shape device sampler (XLA/TPU path) and an
+exact dynamic-shape host sampler (the "CPU path").
+
+The contrast between the two is the heart of Quiver's hybrid scheduling on
+TPU: the device sampler always pays for the padded worst case
+``B·∏ fanout_k`` while the host sampler pays only for the realized neighbor
+set. PSGS predicts the realized size, i.e. how much of the device padding is
+wasted — exactly the routing signal of paper §4.2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class SampledHops:
+    """Layered (bipartite) sample. ``hops[0]`` are the seeds; ``hops[k]`` has
+    shape ``(B·∏_{h<=k} f_h,)`` with -1 padding; ``hops[k]`` entry
+    ``i*f_k + j`` is the j-th sampled neighbor of ``hops[k-1][i]``."""
+
+    hops: list[jnp.ndarray]
+    fanouts: tuple[int, ...]
+
+    def all_nodes(self) -> jnp.ndarray:
+        return jnp.concatenate([h.reshape(-1) for h in self.hops])
+
+    @property
+    def padded_size(self) -> int:
+        return sum(int(np.prod(h.shape)) for h in self.hops)
+
+
+def _sample_one_hop(key: jax.Array, indptr: jnp.ndarray, indices: jnp.ndarray,
+                    frontier: jnp.ndarray, fanout: int) -> jnp.ndarray:
+    """Uniform neighbor sampling, fixed output shape (|frontier|·fanout,).
+
+    Nodes with deg<=fanout return their full neighbor list (without
+    replacement); for deg>fanout sampling is with replacement (standard
+    GraphSAGE-style approximation; see DESIGN.md §5.1).
+    """
+    f = jnp.maximum(frontier, 0)
+    start = indptr[f]
+    deg = indptr[f + 1] - start
+    valid = frontier >= 0
+    deg = jnp.where(valid, deg, 0)
+    r = jax.random.randint(key, (frontier.shape[0], fanout), 0,
+                           jnp.maximum(deg, 1)[:, None])
+    take_all = deg[:, None] <= fanout
+    offs = jnp.where(take_all, jnp.arange(fanout, dtype=jnp.int32)[None, :], r)
+    in_range = offs < deg[:, None]
+    offs = jnp.minimum(offs, jnp.maximum(deg[:, None] - 1, 0))
+    nbr = indices[start[:, None] + offs]
+    nbr = jnp.where(valid[:, None] & in_range, nbr, -1)
+    return nbr.reshape(-1)
+
+
+@partial(jax.jit, static_argnames=("fanouts",))
+def device_sample(key: jax.Array, indptr: jnp.ndarray, indices: jnp.ndarray,
+                  seeds: jnp.ndarray, fanouts: tuple[int, ...]) -> list[jnp.ndarray]:
+    hops = [seeds]
+    frontier = seeds
+    for k, fan in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        frontier = _sample_one_hop(sub, indptr, indices, frontier, fan)
+        hops.append(frontier)
+    return hops
+
+
+def sample_khop(key: jax.Array, graph_dev: tuple[jnp.ndarray, jnp.ndarray],
+                seeds: jnp.ndarray, fanouts: Sequence[int]) -> SampledHops:
+    indptr, indices = graph_dev
+    hops = device_sample(key, indptr, indices, seeds, tuple(fanouts))
+    return SampledHops(hops=hops, fanouts=tuple(fanouts))
+
+
+# --------------------------------------------------------------------------
+# Host (exact) sampler — dynamic shapes, numpy. The "CPU path".
+# --------------------------------------------------------------------------
+def host_sample(rng: np.random.Generator, graph: CSRGraph, seeds: np.ndarray,
+                fanouts: Sequence[int]) -> list[np.ndarray]:
+    """Exact k-hop sampling; hop arrays have realized (dynamic) sizes."""
+    hops = [np.asarray(seeds, dtype=np.int64)]
+    frontier = hops[0]
+    indptr, indices = graph.indptr, graph.indices
+    for fan in fanouts:
+        outs = []
+        for v in frontier:
+            if v < 0:
+                continue
+            s, e = indptr[v], indptr[v + 1]
+            deg = e - s
+            if deg == 0:
+                continue
+            if deg <= fan:
+                outs.append(indices[s:e])
+            else:
+                outs.append(indices[s + rng.integers(0, deg, size=fan)])
+        frontier = (np.concatenate(outs) if outs
+                    else np.empty((0,), dtype=indices.dtype))
+        hops.append(frontier.astype(np.int64))
+    return hops
+
+
+def realized_size(hops: list[np.ndarray]) -> int:
+    return int(sum(h.size for h in hops))
+
+
+def host_sample_dense(rng: np.random.Generator, graph: CSRGraph,
+                      seeds: np.ndarray,
+                      fanouts: Sequence[int]) -> list[np.ndarray]:
+    """Exact host sampling in the *dense fan-out layout* (hop k has shape
+    (len(seeds)·∏f, ) with -1 padding) — same layout the device sampler
+    emits, so one model path serves both executors. Exactness: every node
+    with deg ≤ fan contributes all its neighbors exactly once (no
+    replacement duplicates), which is what makes the host path cheaper on
+    low-PSGS requests (fewer realized feature fetches)."""
+    hops = [np.asarray(seeds, dtype=np.int32)]
+    indptr, indices = graph.indptr, graph.indices
+    frontier = hops[0]
+    for fan in fanouts:
+        out = np.full((frontier.shape[0], fan), -1, dtype=np.int32)
+        for i, v in enumerate(frontier):
+            if v < 0:
+                continue
+            s, e = indptr[v], indptr[v + 1]
+            deg = e - s
+            if deg == 0:
+                continue
+            if deg <= fan:
+                out[i, :deg] = indices[s:e]
+            else:
+                out[i] = indices[s + rng.integers(0, deg, size=fan)]
+        frontier = out.reshape(-1)
+        hops.append(frontier)
+    return hops
+
+
+# --------------------------------------------------------------------------
+# Fixed-size dedup (the TLB-analogue id-sort optimization, DESIGN.md §2)
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("capacity",))
+def fixed_size_unique(ids: jnp.ndarray, capacity: int
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sorted unique ids padded to ``capacity`` with -1, plus an inverse map
+    so gathered rows can be scattered back to the original (duplicated) order.
+
+    ids: (M,) int32 with -1 padding. Returns (uniq (capacity,), inv (M,)).
+    Ids beyond capacity (after dedup) are dropped — callers size capacity to
+    the padded worst case so this never truncates valid ids.
+    """
+    m = ids.shape[0]
+    order = jnp.argsort(ids)
+    s = ids[order]
+    first = jnp.concatenate([jnp.array([True]), s[1:] != s[:-1]])
+    first = first & (s >= 0)
+    pos = jnp.cumsum(first) - 1  # dense rank among uniques, valid where first
+    rank_per_elem = pos  # rank of the unique bucket each sorted elem falls in
+    uniq = jnp.full((capacity,), -1, dtype=ids.dtype)
+    uniq = uniq.at[jnp.where(first, pos, capacity)].set(s, mode="drop")
+    inv_sorted = jnp.where(s >= 0, rank_per_elem, capacity - 1)
+    inv = jnp.zeros((m,), dtype=jnp.int32).at[order].set(
+        inv_sorted.astype(jnp.int32))
+    return uniq, inv

@@ -1,0 +1,54 @@
+"""Segment (scatter-reduce) primitives — the message-passing substrate.
+
+JAX has no CSR SpMM; every GNN aggregation in this repo goes through these
+wrappers around ``jax.ops.segment_*`` so the Pallas ``segment_spmm`` kernel can
+be swapped in for the hot path (see repro.kernels.segment_spmm.ops).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                num_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+
+
+def segment_mean(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                 num_segments: int, *, eps: float = 1e-9) -> jnp.ndarray:
+    tot = segment_sum(data, segment_ids, num_segments)
+    cnt = segment_sum(jnp.ones(data.shape[:1], dtype=data.dtype), segment_ids,
+                      num_segments)
+    return tot / (cnt[(...,) + (None,) * (tot.ndim - 1)] + eps)
+
+
+def segment_max(data: jnp.ndarray, segment_ids: jnp.ndarray,
+                num_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+
+
+def segment_softmax(scores: jnp.ndarray, segment_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """Per-segment softmax over edge scores (GAT edge-softmax)."""
+    seg_max = jax.ops.segment_max(scores, segment_ids,
+                                  num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    ex = jnp.exp(scores - seg_max[segment_ids])
+    denom = segment_sum(ex, segment_ids, num_segments)
+    return ex / (denom[segment_ids] + 1e-9)
+
+
+def scatter_spmm(src_feat: jnp.ndarray, src_idx: jnp.ndarray,
+                 dst_idx: jnp.ndarray, num_dst: int,
+                 edge_weight: jnp.ndarray | None = None) -> jnp.ndarray:
+    """out[d] = Σ_{e: dst[e]=d} w[e] · src_feat[src[e]] — the SpMM primitive.
+
+    Invalid edges are marked with negative indices and contribute zero.
+    """
+    msg = src_feat[jnp.maximum(src_idx, 0)]
+    valid = ((src_idx >= 0) & (dst_idx >= 0)).astype(msg.dtype)
+    if edge_weight is not None:
+        valid = valid * edge_weight.astype(msg.dtype)
+    msg = msg * valid[:, None]
+    return segment_sum(msg, jnp.maximum(dst_idx, 0), num_dst)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Each kernel subpackage ships kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jitted dispatch wrapper) and ref.py (pure-jnp oracle); tests sweep
+shapes/dtypes in interpret mode against the oracle.
+"""
+from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.segment_spmm import segment_spmm
+from repro.kernels.tiered_gather import tiered_gather
+
+__all__ = ["flash_attention", "segment_spmm", "embedding_bag",
+           "tiered_gather"]

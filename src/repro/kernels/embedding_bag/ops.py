@@ -1,0 +1,24 @@
+"""Jitted entry: Pallas on TPU, oracle elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@partial(jax.jit, static_argnames=("mode", "block_rows", "use_pallas"))
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  weights: jnp.ndarray | None = None, *, mode: str = "sum",
+                  block_rows: int = 8,
+                  use_pallas: bool | None = None) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return embedding_bag_pallas(table, ids, weights, mode=mode,
+                                    block_rows=block_rows,
+                                    interpret=jax.default_backend() != "tpu")
+    return embedding_bag_ref(table, ids, weights, mode=mode)

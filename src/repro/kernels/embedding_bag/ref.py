@@ -1,0 +1,18 @@
+"""Pure-jnp EmbeddingBag oracle (jnp.take + masked reduce)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                      weights: jnp.ndarray | None = None, *,
+                      mode: str = "sum") -> jnp.ndarray:
+    valid = (ids >= 0)
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    w = valid.astype(table.dtype)
+    if weights is not None:
+        w = w * weights
+    out = (rows * w[..., None]).sum(axis=-2)
+    if mode == "mean":
+        out = out / jnp.maximum(valid.sum(-1), 1)[..., None].astype(out.dtype)
+    return out

@@ -1,0 +1,25 @@
+"""Jitted public entry point: Pallas on TPU, interpret-mode kernel or the
+blockwise-XLA path elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                   "force_interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128,
+                    force_interpret: bool = False) -> jnp.ndarray:
+    interpret = force_interpret or not _on_tpu()
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_kv=block_kv, interpret=interpret)

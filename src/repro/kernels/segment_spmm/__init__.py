@@ -1,0 +1,6 @@
+from repro.kernels.segment_spmm.kernel import segment_spmm_pallas
+from repro.kernels.segment_spmm.ops import segment_spmm
+from repro.kernels.segment_spmm.ref import coo_to_ell, segment_spmm_ref
+
+__all__ = ["segment_spmm", "segment_spmm_pallas", "segment_spmm_ref",
+           "coo_to_ell"]

@@ -1,0 +1,23 @@
+"""Jitted entry: Pallas on TPU, oracle elsewhere (identical semantics)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_spmm.kernel import segment_spmm_pallas
+from repro.kernels.segment_spmm.ref import segment_spmm_ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "use_pallas"))
+def segment_spmm(ids: jnp.ndarray, feat: jnp.ndarray,
+                 weights: jnp.ndarray | None = None, *, block_rows: int = 8,
+                 use_pallas: bool | None = None) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return segment_spmm_pallas(ids, feat, weights,
+                                   block_rows=block_rows,
+                                   interpret=jax.default_backend() != "tpu")
+    return segment_spmm_ref(ids, feat, weights)

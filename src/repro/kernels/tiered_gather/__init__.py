@@ -1,0 +1,5 @@
+from repro.kernels.tiered_gather.kernel import tiered_gather_pallas
+from repro.kernels.tiered_gather.ops import tiered_gather
+from repro.kernels.tiered_gather.ref import tiered_gather_ref
+
+__all__ = ["tiered_gather", "tiered_gather_pallas", "tiered_gather_ref"]

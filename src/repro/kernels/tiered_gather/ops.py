@@ -1,0 +1,23 @@
+"""Jitted entry: Pallas on TPU, oracle elsewhere."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tiered_gather.kernel import tiered_gather_pallas
+from repro.kernels.tiered_gather.ref import tiered_gather_ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "use_pallas"))
+def tiered_gather(tier: jnp.ndarray, slot: jnp.ndarray, hot: jnp.ndarray,
+                  warm: jnp.ndarray, *, block_rows: int = 8,
+                  use_pallas: bool | None = None) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return tiered_gather_pallas(tier, slot, hot, warm,
+                                    block_rows=block_rows,
+                                    interpret=jax.default_backend() != "tpu")
+    return tiered_gather_ref(tier, slot, hot, warm)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the tiered two-source gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tiered_gather_ref(tier: jnp.ndarray, slot: jnp.ndarray, hot: jnp.ndarray,
+                      warm: jnp.ndarray) -> jnp.ndarray:
+    safe = jnp.maximum(slot, 0)
+    hot_rows = jnp.take(hot, jnp.minimum(safe, hot.shape[0] - 1), axis=0)
+    warm_rows = jnp.take(warm, jnp.minimum(safe, warm.shape[0] - 1), axis=0)
+    out = jnp.where((tier == 0)[:, None], hot_rows,
+                    jnp.where((tier == 1)[:, None], warm_rows, 0.0))
+    return out.astype(hot.dtype)

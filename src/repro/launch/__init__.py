@@ -1,0 +1,2 @@
+"""Launch tooling: production meshes, the multi-pod dry-run, and the
+train/serve CLI drivers."""

@@ -1,0 +1,113 @@
+"""Extract roofline terms from a compiled SPMD module.
+
+``compiled.cost_analysis()`` provides per-device HLO FLOPs and bytes.
+Collective bytes are NOT in cost_analysis — we parse the optimized HLO text
+and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, weighting by the standard ring-transfer
+factors over the parsed replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over (possibly tuple) shape string like
+    '(f32[16,128]{1,0}, u32[])' or 'bf16[2,16]{1,0}'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict           # ring-weighted per-device bytes on the wire
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, *, world: int) -> CollectiveStats:
+    counts = {k: 0 for k in _COLLECTIVES}
+    bytes_by_kind = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},: ]+?)\s+"
+                     r"(all-gather-start|all-gather|all-reduce-start|"
+                     r"all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute-start|collective-permute)\(", line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        size = _shape_bytes(shape_str)
+        g = _group_size(line, world)
+        if g <= 1:
+            continue
+        ring = (g - 1) / g
+        if op == "all-gather":
+            wire = size * ring                # output is the gathered shape
+        elif op == "all-reduce":
+            wire = 2.0 * size * ring          # reduce-scatter + all-gather
+        elif op == "reduce-scatter":
+            wire = size * g * ring            # output is the scattered shard
+        elif op == "all-to-all":
+            wire = size * ring
+        else:  # collective-permute
+            wire = size
+        counts[op] += 1
+        bytes_by_kind[op] += wire
+    return CollectiveStats(counts=counts, bytes_by_kind=bytes_by_kind)
+
+
+def roofline_terms(*, flops: float, bytes_accessed: float,
+                   collective_bytes: float) -> dict:
+    """All inputs are per-device quantities of one step."""
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {**terms, "dominant": dominant,
+            "roofline_fraction": (bound / total) if total > 0 else 0.0,
+            "step_lower_bound_s": bound}

@@ -1,0 +1,107 @@
+"""Quiver serving launcher — the paper's end-to-end path.
+
+    PYTHONPATH=src python -m repro.launch.serve --nodes 20000 --requests 400 \
+        --policy latency_preferred
+
+Builds the full stack: synthetic skewed graph → PSGS/FAP metrics → feature
+placement → tiered store → latency calibration → PSGS-guided hybrid
+scheduler → multiplexed serving pipeline; then reports throughput/latency.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DynamicBatcher, HybridScheduler, ServingEngine,
+                        StaticScheduler, TieredFeatureStore, TopologySpec,
+                        WorkloadGenerator, calibrate, compute_fap,
+                        compute_psgs, quiver_placement)
+from repro.graph import power_law_graph
+from repro.models.gnn_basic import sage_init, sage_layered
+
+
+def build_stack(*, nodes: int, avg_degree: float, d_feat: int,
+                fanouts: tuple[int, ...], hot_frac: float, seed: int = 0,
+                distribution: str = "degree"):
+    graph = power_law_graph(nodes, avg_degree, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    feats = rng.normal(size=(nodes, d_feat)).astype(np.float32)
+
+    psgs = compute_psgs(graph, fanouts)
+    gen = WorkloadGenerator(nodes, graph.out_degree,
+                            distribution=distribution, seed=seed + 2)
+    fap = compute_fap(graph, fanouts, seed_prob=gen.p)
+    topo = TopologySpec(num_pods=1, devices_per_pod=1,
+                        rows_per_device=max(nodes // 4, 64),
+                        rows_host=max(nodes // 2, 64),
+                        hot_replicate_fraction=hot_frac)
+    plan = quiver_placement(fap, topo)
+    store = TieredFeatureStore.build(feats, plan)
+
+    params = sage_init(jax.random.key(seed), [d_feat, 128, 128])
+
+    @jax.jit
+    def infer_fn(hop_feats, hop_ids):
+        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
+        return sage_layered(params, hop_feats, fanouts, hop_masks=masks)
+
+    return graph, feats, psgs, fap, store, gen, infer_fn
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--nodes", type=int, default=20000)
+    p.add_argument("--avg-degree", type=float, default=12.0)
+    p.add_argument("--d-feat", type=int, default=128)
+    p.add_argument("--fanouts", default="10,5")
+    p.add_argument("--requests", type=int, default=300)
+    p.add_argument("--batch", type=int, default=32)
+    p.add_argument("--workers", type=int, default=2)
+    p.add_argument("--policy", default="latency_preferred",
+                   choices=["cpu_preferred", "gpu_preferred",
+                            "latency_preferred", "throughput_preferred",
+                            "host_only", "device_only"])
+    p.add_argument("--hot-frac", type=float, default=0.25)
+    args = p.parse_args()
+    fanouts = tuple(int(x) for x in args.fanouts.split(","))
+
+    graph, feats, psgs, fap, store, gen, infer_fn = build_stack(
+        nodes=args.nodes, avg_degree=args.avg_degree, d_feat=args.d_feat,
+        fanouts=fanouts, hot_frac=args.hot_frac)
+    print(f"[serve] graph: {graph.num_nodes} nodes / {graph.num_edges} edges;"
+          f" tiers: {store.plan.tier_counts()}")
+
+    if args.policy in ("host_only", "device_only"):
+        sched = StaticScheduler("host" if args.policy == "host_only"
+                                else "device")
+    else:
+        # calibration (paper Fig. 6): measure both executors across PSGS range
+        engine_probe = ServingEngine(graph, store, fanouts, infer_fn,
+                                     StaticScheduler("host"), num_workers=1)
+        batches = []
+        order = np.argsort(psgs)
+        for q in np.linspace(0.05, 0.95, 8):
+            seeds = order[int(q * graph.num_nodes):][:args.batch]
+            batches.append(seeds.astype(np.int64))
+        calib = calibrate(
+            lambda b: jax.block_until_ready(engine_probe._host_path(b)),
+            lambda b: jax.block_until_ready(engine_probe._device_path(b)),
+            batches, psgs, repeats=2)
+        thr = calib.threshold(args.policy)
+        print(f"[serve] calibrated threshold ({args.policy}): {thr:.1f}")
+        sched = HybridScheduler(psgs, thr, args.policy)
+
+    engine = ServingEngine(graph, store, fanouts, infer_fn, sched,
+                           num_workers=args.workers)
+    reqs = list(gen.stream(args.requests, seeds_per_request=args.batch))
+    batches = [[r] for r in reqs]
+    metrics = engine.run(batches)
+    print(json.dumps(metrics.summary(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

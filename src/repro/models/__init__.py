@@ -1,0 +1,27 @@
+from repro.models.attention import (blockwise_attention, decode_attention,
+                                    reference_attention)
+from repro.models.din import (DINConfig, din_forward, din_init, din_loss,
+                              din_score_candidates, embedding_bag)
+from repro.models.equiformer_v2 import equiformer_forward, equiformer_init
+from repro.models.gnn_basic import (gat_full_graph, gat_init, gin_full_graph,
+                                    gin_graph_readout, gin_init,
+                                    sage_full_graph, sage_init, sage_layered)
+from repro.models.meshgraphnet import mgn_forward, mgn_init
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.schnet import schnet_forward, schnet_init
+from repro.models.transformer import (LMConfig, init_decode_cache,
+                                      lm_active_param_count, lm_decode_step,
+                                      lm_forward, lm_init, lm_loss,
+                                      lm_param_count)
+
+__all__ = [
+    "blockwise_attention", "decode_attention", "reference_attention",
+    "DINConfig", "din_init", "din_forward", "din_loss",
+    "din_score_candidates", "embedding_bag", "equiformer_init",
+    "equiformer_forward", "sage_init", "sage_full_graph", "sage_layered",
+    "gat_init", "gat_full_graph", "gin_init", "gin_full_graph",
+    "gin_graph_readout", "mgn_init", "mgn_forward", "MoEConfig", "moe_init",
+    "moe_apply", "schnet_init", "schnet_forward", "LMConfig", "lm_init",
+    "lm_forward", "lm_loss", "lm_decode_step", "init_decode_cache",
+    "lm_param_count", "lm_active_param_count",
+]

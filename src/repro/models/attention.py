@@ -1,0 +1,149 @@
+"""Attention: blockwise (flash-style) causal attention + GQA + RoPE + decode.
+
+``blockwise_attention`` is the XLA path (scan over KV chunks with online
+softmax — never materializes the (S, S) score matrix); the Pallas kernel in
+repro/kernels/flash_attention implements the same contraction for TPU and is
+validated against this reference.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                theta: float = 1e6) -> tuple[jnp.ndarray, jnp.ndarray]:
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x: (..., S, H, dh); cos/sin: (..., S, dh/2) broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(x.dtype)  # rotate in f32, keep activation dtype
+
+
+def _expand_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, kh, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n_rep, dh)
+                            ).reshape(b, s, kh * n_rep, dh)
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, q_chunk: int = 512,
+                        kv_chunk: int = 1024,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, Sq, H, dh); k,v: (B, Skv, K, dh) with H % K == 0.
+
+    Online-softmax over KV chunks; causal mask uses absolute positions
+    (query i attends key j iff j <= i + q_offset).
+    """
+    b, sq, h, dh = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    k = _expand_kv(k, h // kh)
+    v = _expand_kv(v, h // kh)
+    scale = 1.0 / np.sqrt(dh)
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = -(-sq // q_chunk)
+    nkv = -(-skv // kv_chunk)
+    pad_q = nq * q_chunk - sq
+    pad_kv = nkv * kv_chunk - skv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    # (nq, B, H, qc, dh) / (nkv, B, H, kc, dh)
+    qs = qp.reshape(b, nq, q_chunk, h, dh).transpose(1, 0, 3, 2, 4)
+    ks = kp.reshape(b, nkv, kv_chunk, h, dh).transpose(1, 0, 3, 2, 4)
+    vs = vp.reshape(b, nkv, kv_chunk, h, dh).transpose(1, 0, 3, 2, 4)
+
+    q_pos = jnp.arange(nq * q_chunk).reshape(nq, q_chunk) + q_offset
+    kv_pos = jnp.arange(nkv * kv_chunk).reshape(nkv, kv_chunk)
+    kv_valid = kv_pos < skv
+
+    def per_q_chunk(qi, q_blk):
+        # q_blk: (B, H, qc, dh)
+        acc0 = (jnp.zeros((b, h, q_chunk, dh), jnp.float32),
+                jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((b, h, q_chunk), jnp.float32))
+
+        def kv_step(carry, inputs):
+            o, m, l = carry
+            kj, k_blk, v_blk = inputs
+            # bf16 operands, f32 accumulation (MXU-native) — upcasting the
+            # operands doubled every attention collective and forced f32
+            # matmuls (§Perf iteration log)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kv_valid[kj][None, None, None, :]
+            if causal:
+                mask = mask & (kv_pos[kj][None, None, None, :]
+                               <= q_pos[qi][None, None, :, None])
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            l = l * corr + p.sum(-1)
+            o = o * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (o, m_new, l), None
+
+        (o, m, l), _ = jax.lax.scan(kv_step, acc0,
+                                    (jnp.arange(nkv), ks, vs))
+        return o / jnp.maximum(l, 1e-20)[..., None]
+
+    out = jax.lax.map(lambda args: per_q_chunk(*args),
+                      (jnp.arange(nq), qs))        # (nq, B, H, qc, dh)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, nq * q_chunk, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """Single-position decode. q: (B, 1, H, dh); caches: (B, S, K, dh);
+    cache_len: () — number of valid cache positions (new token included)."""
+    b, _, h, dh = q.shape
+    skv, kh = k_cache.shape[1], k_cache.shape[2]
+    k = _expand_kv(k_cache, h // kh)
+    v = _expand_kv(v_cache, h // kh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(k.dtype), k,
+                   preferred_element_type=jnp.float32) / np.sqrt(dh)
+    mask = (jnp.arange(skv) < cache_len)[None, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def reference_attention(q, k, v, *, causal=True, q_offset: int = 0):
+    """Naive O(S²) oracle for tests."""
+    h, kh = q.shape[2], k.shape[2]
+    k = _expand_kv(k, h // kh)
+    v = _expand_kv(v, h // kh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(q.shape[-1])
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        mask = (jnp.arange(skv)[None, :]
+                <= (jnp.arange(sq) + q_offset)[:, None])
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

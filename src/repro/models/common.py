@@ -1,0 +1,70 @@
+"""Minimal parameter/NN toolkit (plain-dict pytrees, no framework deps)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, *, bias: bool = True,
+               scale: float | None = None, dtype=jnp.float32) -> dict:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def mlp_init(key: jax.Array, dims: Sequence[int], *, bias: bool = True,
+             dtype=jnp.float32) -> list[dict]:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [dense_init(k, a, b, bias=bias, dtype=dtype)
+            for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp(params: list[dict], x: jnp.ndarray, *, act=jax.nn.silu,
+        final_act: bool = False) -> jnp.ndarray:
+    for i, p in enumerate(params):
+        x = dense(p, x)
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layer_norm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def layer_norm(p: dict, x: jnp.ndarray, *, eps: float = 1e-5) -> jnp.ndarray:
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * p["g"] + p["b"]
+
+
+def rms_norm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((dim,), dtype)}
+
+
+def rms_norm(p: dict, x: jnp.ndarray, *, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    return (y * p["g"]).astype(x.dtype)
+
+
+def count_params(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+
+
+def param_bytes(tree) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(tree)))

@@ -1,0 +1,142 @@
+"""Deep Interest Network (assigned recsys arch — arXiv:1706.06978).
+
+embed_dim=18, history length 100, attention MLP 80-40, main MLP 200-80,
+target-attention interaction. The item-embedding table is the hot path: it is
+a huge sparse table (10⁷ rows in the full config) served through the *same*
+tiered feature store as GNN features — item-popularity is the FAP analogue
+(DESIGN.md §4), so Quiver's placement applies directly.
+
+EmbeddingBag is built from first principles (JAX has none): ``jnp.take`` +
+``segment_sum`` over ragged bags; the Pallas kernel in
+repro/kernels/embedding_bag is the TPU hot-path version.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense, dense_init, mlp, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    n_items: int = 200_000
+    n_cates: int = 2_000
+    embed_dim: int = 18
+    hist_len: int = 100
+    attn_mlp: tuple[int, ...] = (80, 40)
+    mlp: tuple[int, ...] = (200, 80)
+    n_dense_feat: int = 4
+
+
+def din_init(key: jax.Array, cfg: DINConfig, dtype=jnp.float32) -> dict:
+    k = jax.random.split(key, 6)
+    d = cfg.embed_dim
+    de = 2 * d  # item ⊕ category
+    attn_in = 4 * de  # [hist, target, hist-target, hist*target]
+    mlp_in = 3 * de + cfg.n_dense_feat  # user-interest ⊕ target ⊕ hist-sum
+    return {
+        "item_embed": jax.random.normal(k[0], (cfg.n_items, d), dtype) * 0.05,
+        "cate_embed": jax.random.normal(k[1], (cfg.n_cates, d), dtype) * 0.05,
+        "attn": mlp_init(k[2], [attn_in, *cfg.attn_mlp, 1]),
+        "mlp": mlp_init(k[3], [mlp_in, *cfg.mlp, 1]),
+    }
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  weights: Optional[jnp.ndarray] = None, *,
+                  mode: str = "sum") -> jnp.ndarray:
+    """ids: (..., bag) with -1 padding → (..., d) reduced embeddings."""
+    valid = (ids >= 0)
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    w = valid.astype(rows.dtype)
+    if weights is not None:
+        w = w * weights
+    rows = rows * w[..., None]
+    out = rows.sum(axis=-2)
+    if mode == "mean":
+        out = out / jnp.maximum(w.sum(-1), 1.0)[..., None]
+    return out
+
+
+def _embed_pair(params: dict, item_ids: jnp.ndarray, cate_ids: jnp.ndarray,
+                lookup: Optional[Callable] = None) -> jnp.ndarray:
+    """item ⊕ category embedding; `lookup` overrides the item-table gather
+    (this is where the tiered feature store plugs in)."""
+    if lookup is not None:
+        it = lookup(item_ids)
+    else:
+        it = jnp.take(params["item_embed"], jnp.maximum(item_ids, 0), axis=0)
+        it = jnp.where((item_ids >= 0)[..., None], it, 0.0)
+    ct = jnp.take(params["cate_embed"], jnp.maximum(cate_ids, 0), axis=0)
+    ct = jnp.where((cate_ids >= 0)[..., None], ct, 0.0)
+    return jnp.concatenate([it, ct], axis=-1)
+
+
+def din_forward(params: dict, cfg: DINConfig, target_item: jnp.ndarray,
+                target_cate: jnp.ndarray, hist_items: jnp.ndarray,
+                hist_cates: jnp.ndarray, dense_feat: jnp.ndarray, *,
+                item_lookup: Optional[Callable] = None) -> jnp.ndarray:
+    """target_*: (B,); hist_*: (B, T) with -1 padding; dense: (B, F) → (B,)
+    CTR logits."""
+    tgt = _embed_pair(params, target_item, target_cate, item_lookup)  # (B,de)
+    hist = _embed_pair(params, hist_items, hist_cates, item_lookup)   # (B,T,de)
+    mask = (hist_items >= 0)
+
+    t = tgt[:, None, :].astype(hist.dtype)
+    t = jnp.broadcast_to(t, hist.shape)
+    a_in = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+    scores = mlp(params["attn"], a_in, act=jax.nn.sigmoid)[..., 0]  # (B, T)
+    # DIN uses un-normalized sigmoid-ish attention; mask invalid slots
+    scores = jnp.where(mask, scores, 0.0)
+    interest = (hist * scores[..., None]).sum(1)                    # (B, de)
+    hist_mean = (hist * mask[..., None]).sum(1) / jnp.maximum(
+        mask.sum(-1, keepdims=True), 1.0)
+
+    x = jnp.concatenate([interest, tgt, hist_mean, dense_feat], axis=-1)
+    return mlp(params["mlp"], x, act=jax.nn.silu)[..., 0]
+
+
+def din_loss(params: dict, cfg: DINConfig, batch: dict,
+             item_lookup: Optional[Callable] = None) -> jnp.ndarray:
+    logits = din_forward(params, cfg, batch["target_item"],
+                         batch["target_cate"], batch["hist_items"],
+                         batch["hist_cates"], batch["dense_feat"],
+                         item_lookup=item_lookup)
+    y = batch["label"].astype(jnp.float32)
+    z = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def din_score_candidates(params: dict, cfg: DINConfig, user_hist_items,
+                         user_hist_cates, dense_feat, cand_items, cand_cates,
+                         *, chunk: int = 65536) -> jnp.ndarray:
+    """Retrieval scoring: one user's history vs N candidates — batched dot
+    through the full DIN tower, scanned in candidate chunks (no python loop).
+
+    user_hist_*: (T,); cand_*: (N,). Returns (N,) scores.
+    """
+    n = cand_items.shape[0]
+    chunks = -(-n // chunk)
+    pad = chunks * chunk - n
+    ci = jnp.pad(cand_items, (0, pad), constant_values=0).reshape(chunks,
+                                                                  chunk)
+    cc = jnp.pad(cand_cates, (0, pad), constant_values=0).reshape(chunks,
+                                                                  chunk)
+    hist_i = jnp.broadcast_to(user_hist_items[None], (chunk,) +
+                              user_hist_items.shape)
+    hist_c = jnp.broadcast_to(user_hist_cates[None], (chunk,) +
+                              user_hist_cates.shape)
+    dense = jnp.broadcast_to(dense_feat[None], (chunk,) + dense_feat.shape)
+
+    def body(_, args):
+        items, cates = args
+        s = din_forward(params, cfg, items, cates, hist_i, hist_c, dense)
+        return None, s
+
+    _, scores = jax.lax.scan(body, None, (ci, cc))
+    return scores.reshape(-1)[:n]

@@ -1,0 +1,177 @@
+"""GraphSAGE / GAT (the paper's served models) and GIN (assigned arch).
+
+Each model exposes two execution forms:
+
+* ``full_graph_forward(params, x, src, dst, num_nodes)`` — message passing
+  over an explicit (possibly padded) edge list via ``scatter_spmm`` — used by
+  full-batch training shapes (full_graph_sm / ogb_products) and by the
+  Pallas ``segment_spmm`` hot path.
+* ``layered_forward(params, hop_feats, fanouts)`` — dense fan-out aggregation
+  over sampled hop arrays (serving / minibatch path): hop k features have
+  shape (B·∏f, d); layer k reduces (n, f, d) → (n, d). This is the
+  fixed-shape TPU serving form fed by the device sampler.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.segment import scatter_spmm, segment_softmax, segment_sum
+from repro.models.common import dense, dense_init, layer_norm, layer_norm_init
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE (mean aggregator)
+# ---------------------------------------------------------------------------
+def sage_init(key: jax.Array, dims: Sequence[int]) -> dict:
+    """dims = [d_in, h1, ..., h_L]; layer i maps dims[i] -> dims[i+1]."""
+    layers = []
+    for i in range(len(dims) - 1):
+        key, k1, k2 = jax.random.split(key, 3)
+        layers.append({"self": dense_init(k1, dims[i], dims[i + 1]),
+                       "neigh": dense_init(k2, dims[i], dims[i + 1]),
+                       "ln": layer_norm_init(dims[i + 1])})
+    return {"layers": layers}
+
+
+def _sage_layer(p: dict, h_self: jnp.ndarray, h_agg: jnp.ndarray,
+                *, final: bool) -> jnp.ndarray:
+    out = dense(p["self"], h_self) + dense(p["neigh"], h_agg)
+    out = layer_norm(p["ln"], out)
+    return out if final else jax.nn.relu(out)
+
+
+def sage_full_graph(params: dict, x: jnp.ndarray, src: jnp.ndarray,
+                    dst: jnp.ndarray, *, num_nodes: int) -> jnp.ndarray:
+    deg = segment_sum(jnp.ones_like(src, dtype=x.dtype),
+                      jnp.maximum(src, 0), num_nodes)
+    h = x
+    L = len(params["layers"])
+    for i, p in enumerate(params["layers"]):
+        agg = scatter_spmm(h, dst, src, num_nodes)  # mean over out-neighbors
+        agg = agg / jnp.maximum(deg, 1.0)[:, None]
+        h = _sage_layer(p, h, agg, final=i == L - 1)
+    return h
+
+
+def sage_layered(params: dict, hop_feats: list[jnp.ndarray],
+                 fanouts: Sequence[int],
+                 hop_masks: list[jnp.ndarray] | None = None) -> jnp.ndarray:
+    """Minibatch/serving GraphSAGE: layer ℓ is applied at every remaining hop
+    level, shrinking the deepest level each round (standard layered
+    evaluation). hop_feats[k]: (B·∏_{h≤k} f_h, d), -1-padded slots masked."""
+    L = len(params["layers"])
+    assert L == len(fanouts), (L, fanouts)
+    h = list(hop_feats)
+    masks = list(hop_masks) if hop_masks is not None else [None] * len(h)
+    for layer in range(L):
+        p = params["layers"][layer]
+        new_h = []
+        for lvl in range(L - layer):
+            fan = fanouts[lvl]
+            child = h[lvl + 1].reshape(h[lvl].shape[0], fan, -1)
+            if masks[lvl + 1] is not None:
+                m = masks[lvl + 1].reshape(h[lvl].shape[0], fan, 1)
+                m = m.astype(child.dtype)
+                agg = (child * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+            else:
+                agg = child.mean(1)
+            new_h.append(_sage_layer(p, h[lvl], agg,
+                                     final=layer == L - 1))
+        h = new_h
+    return h[0]
+
+
+# ---------------------------------------------------------------------------
+# GAT (4 heads, the paper's second model)
+# ---------------------------------------------------------------------------
+def gat_init(key: jax.Array, dims: Sequence[int], *, heads: int = 4) -> dict:
+    layers = []
+    for i in range(len(dims) - 1):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        d_out = dims[i + 1]
+        d_in = dims[i] if i == 0 else dims[i] * heads  # heads concatenate
+        layers.append({
+            "proj": dense_init(k1, d_in, heads * d_out, bias=False),
+            "attn_src": jax.random.normal(k2, (heads, d_out)) * 0.1,
+            "attn_dst": jax.random.normal(k3, (heads, d_out)) * 0.1,
+            "ln": layer_norm_init(heads * d_out),
+        })
+    return {"layers": layers, "heads": heads}
+
+
+def gat_full_graph(params: dict, x: jnp.ndarray, src: jnp.ndarray,
+                   dst: jnp.ndarray, *, num_nodes: int) -> jnp.ndarray:
+    heads = params["heads"]
+    h = x
+    L = len(params["layers"])
+    for i, p in enumerate(params["layers"]):
+        d_out = p["attn_src"].shape[1]
+        z = dense(p["proj"], h).reshape(num_nodes, heads, d_out)
+        s = jnp.maximum(src, 0)
+        d = jnp.maximum(dst, 0)
+        e = ((z[s] * p["attn_src"]).sum(-1)
+             + (z[d] * p["attn_dst"]).sum(-1))            # (E, heads)
+        e = jax.nn.leaky_relu(e, 0.2)
+        e = jnp.where((src >= 0)[:, None], e, -jnp.inf)
+        alpha = segment_softmax(e, d, num_nodes)           # (E, heads)
+        msg = z[s] * alpha[..., None]                      # (E, heads, d_out)
+        msg = jnp.where((src >= 0)[:, None, None], msg, 0.0)
+        agg = segment_sum(msg.reshape(msg.shape[0], -1), d, num_nodes)
+        h = layer_norm(p["ln"], agg)
+        if i < L - 1:
+            h = jax.nn.elu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GIN (assigned: gin-tu — 5 layers, 64 hidden, sum agg, learnable eps)
+# ---------------------------------------------------------------------------
+def gin_init(key: jax.Array, d_in: int, d_hidden: int, n_layers: int,
+             d_out: int) -> dict:
+    layers = []
+    dims_in = d_in
+    for i in range(n_layers):
+        key, k1, k2 = jax.random.split(key, 3)
+        layers.append({
+            "mlp1": dense_init(k1, dims_in, d_hidden),
+            "mlp2": dense_init(k2, d_hidden, d_hidden),
+            "eps": jnp.zeros(()),  # learnable ε (GIN-ε)
+            "ln": layer_norm_init(d_hidden),
+        })
+        dims_in = d_hidden
+    key, k = jax.random.split(key)
+    return {"layers": layers, "readout": dense_init(k, d_hidden, d_out)}
+
+
+def gin_full_graph(params: dict, x: jnp.ndarray, src: jnp.ndarray,
+                   dst: jnp.ndarray, *, num_nodes: int,
+                   shard=lambda x, *n: x) -> jnp.ndarray:
+    h = shard(x, "nodes", None)
+    for p in params["layers"]:
+        agg = scatter_spmm(h, src, dst, num_nodes)  # sum over in-neighbors
+        z = (1.0 + p["eps"]) * h + agg
+        z = jax.nn.relu(dense(p["mlp1"], z))
+        z = dense(p["mlp2"], z)
+        h = shard(jax.nn.relu(layer_norm(p["ln"], z)), "nodes", None)
+    return dense(params["readout"], h)
+
+
+def gin_graph_readout(params: dict, x: jnp.ndarray, src: jnp.ndarray,
+                      dst: jnp.ndarray, graph_id: jnp.ndarray,
+                      *, num_nodes: int, num_graphs: int,
+                      shard=lambda x, *n: x) -> jnp.ndarray:
+    """Graph classification: node embeddings → per-graph sum readout."""
+    h = shard(x, "nodes", None)
+    outs = []
+    for p in params["layers"]:
+        agg = scatter_spmm(h, src, dst, num_nodes)
+        z = (1.0 + p["eps"]) * h + agg
+        z = jax.nn.relu(dense(p["mlp1"], z))
+        z = dense(p["mlp2"], z)
+        h = jax.nn.relu(layer_norm(p["ln"], z))
+        outs.append(segment_sum(h, graph_id, num_graphs))
+    pooled = sum(outs)
+    return dense(params["readout"], pooled)

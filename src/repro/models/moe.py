@@ -1,0 +1,124 @@
+"""Mixture-of-Experts FFN with sort-based, fixed-capacity dispatch.
+
+Covers both assigned MoE archs:
+  * deepseek-moe-16b — 2 shared + 64 fine-grained routed experts, top-6
+  * phi3.5-moe-42b   — 16 experts, top-2
+
+Dispatch is the TPU-friendly scheme: token→expert assignments are sorted,
+positions-within-expert computed by a cumsum over a one-hot (T, E) matrix,
+tokens scattered into a fixed (E, C, d) buffer (overflow beyond capacity is
+dropped, standard GShard semantics), per-expert GEMMs run as one batched
+einsum, and results are combined back with the routing weights. The (E, C, d)
+buffer is sharded E→tensor axis under pjit — the all-to-all this induces is a
+first-class roofline term (EXPERIMENTS.md §Perf).
+
+Beyond-paper tie-in: router statistics are exactly Quiver's FAP analogue for
+experts; `repro.core.placement.expert_placement` consumes them to replicate
+hot experts (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                    # per-expert FFN width
+    n_shared: int = 0            # always-on shared experts (DeepSeek-MoE)
+    d_ff_shared: int = 0         # total width of the shared FFN
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+def moe_init(key: jax.Array, d_model: int, cfg: MoEConfig,
+             dtype=jnp.float32) -> dict:
+    e, ff = cfg.num_experts, cfg.d_ff
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    sc_in = 1.0 / np.sqrt(d_model)
+    sc_out = 1.0 / np.sqrt(ff)
+    p = {
+        "router": (jax.random.normal(k1, (d_model, e), jnp.float32)
+                   * sc_in),
+        "w1": jax.random.normal(k2, (e, d_model, ff), dtype) * sc_in,
+        "w3": jax.random.normal(k3, (e, d_model, ff), dtype) * sc_in,
+        "w2": jax.random.normal(k4, (e, ff, d_model), dtype) * sc_out,
+    }
+    if cfg.n_shared:
+        ks1, ks2, ks3 = jax.random.split(k5, 3)
+        ffs = cfg.d_ff_shared
+        p["shared"] = {
+            "w1": jax.random.normal(ks1, (d_model, ffs), dtype) * sc_in,
+            "w3": jax.random.normal(ks2, (d_model, ffs), dtype) * sc_in,
+            "w2": jax.random.normal(ks3, (ffs, d_model), dtype)
+                  / np.sqrt(ffs),
+        }
+    return p
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: MoEConfig, *,
+              shard: Optional[Callable] = None
+              ) -> tuple[jnp.ndarray, dict]:
+    """x: (T, d) tokens. Returns (out (T, d), stats) where stats carries the
+    router aux loss and per-expert load (the FAP-for-experts signal)."""
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = int(np.ceil(t * k * cfg.capacity_factor / e))
+    cap = max(cap, 1)
+
+    logits = x.astype(jnp.float32) @ p["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- fixed-capacity sort-based dispatch -----------------------------
+    flat_e = top_e.reshape(-1)                            # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = top_w.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)   # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot        # exclusive cumsum
+    slot = (pos_in_e * onehot).sum(-1)                    # (T*k,)
+    keep = slot < cap
+    buf_idx = jnp.where(keep, flat_e * cap + slot, e * cap)  # drop → sink
+
+    dispatch = jnp.zeros((e * cap + 1, d), x.dtype)
+    dispatch = dispatch.at[buf_idx].add(x[flat_t])
+    dispatch = dispatch[:-1].reshape(e, cap, d)
+    if shard is not None:
+        dispatch = shard(dispatch, "expert", None, None)
+
+    h1 = jnp.einsum("ecd,edf->ecf", dispatch, p["w1"].astype(x.dtype))
+    h3 = jnp.einsum("ecd,edf->ecf", dispatch, p["w3"].astype(x.dtype))
+    h = jax.nn.silu(h1) * h3
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x.dtype))
+    if shard is not None:
+        y = shard(y, "expert", None, None)
+
+    flat_y = y.reshape(e * cap, d)
+    gathered = flat_y[jnp.minimum(buf_idx, e * cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    out = jnp.zeros((t, d), x.dtype).at[flat_t].add(
+        gathered * flat_w[:, None].astype(x.dtype))
+
+    if cfg.n_shared:
+        s = p["shared"]
+        hs = jax.nn.silu(x @ s["w1"].astype(x.dtype)) * (
+            x @ s["w3"].astype(x.dtype))
+        out = out + hs @ s["w2"].astype(x.dtype)
+
+    # --- router statistics ----------------------------------------------
+    load = jnp.bincount(flat_e, weights=keep.astype(jnp.float32), length=e)
+    importance = probs.sum(0)
+    # Switch-style load-balancing aux: E · Σ_e f_e · P_e
+    f = load / jnp.maximum(load.sum(), 1.0)
+    pr = importance / jnp.maximum(importance.sum(), 1e-9)
+    aux = cfg.router_aux_weight * e * jnp.sum(f * pr)
+    dropped = (~keep).sum()
+    stats = {"aux_loss": aux, "expert_load": load, "dropped": dropped}
+    return out, stats

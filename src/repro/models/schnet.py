@@ -1,0 +1,98 @@
+"""SchNet (assigned arch: 3 interactions, 64 hidden, 300 RBF, cutoff 10Å).
+
+Continuous-filter convolution: per edge, a filter W(r_ij) generated from a
+radial-basis expansion of the distance modulates the source features; messages
+are scatter-summed (the triplet-free molecular regime of the kernel taxonomy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.segment import segment_sum
+from repro.models.common import dense, dense_init
+
+
+def shifted_softplus(x):
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def schnet_init(key: jax.Array, *, d_hidden: int = 64, n_interactions: int = 3,
+                n_rbf: int = 300, cutoff: float = 10.0, d_out: int = 1,
+                n_species: int = 32, d_feat_in: int = 0) -> dict:
+    keys = jax.random.split(key, n_interactions * 4 + 4)
+    params = {
+        "embed": jax.random.normal(keys[0], (n_species, d_hidden)) * 0.1,
+        "out1": dense_init(keys[1], d_hidden, d_hidden // 2),
+        "out2": dense_init(keys[2], d_hidden // 2, d_out),
+    }
+    if d_feat_in:
+        params["feat_proj"] = dense_init(keys[-1], d_feat_in, d_hidden)
+    inter = []
+    for i in range(n_interactions):
+        k = keys[3 + 4 * i: 3 + 4 * (i + 1)]
+        inter.append({
+            "in_proj": dense_init(k[0], d_hidden, d_hidden, bias=False),
+            "filter1": dense_init(k[1], n_rbf, d_hidden),
+            "filter2": dense_init(k[2], d_hidden, d_hidden),
+            "out_proj": dense_init(k[3], d_hidden, d_hidden),
+        })
+    # homogeneous interaction blocks → stacked for lax.scan (+remat)
+    params["interactions"] = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *inter)
+    return params
+
+
+def _rbf(dist: jnp.ndarray, n_rbf: int, cutoff: float) -> jnp.ndarray:
+    mu = jnp.linspace(0.0, cutoff, n_rbf)
+    return jnp.exp(-(10.0 / cutoff)
+                   * (dist[:, None] - mu[None, :]) ** 2)
+
+
+def schnet_forward(params: dict, species: jnp.ndarray, positions: jnp.ndarray,
+                   src: jnp.ndarray, dst: jnp.ndarray, *, num_nodes: int,
+                   mol_id: jnp.ndarray | None = None,
+                   num_graphs: int | None = None,
+                   node_feat: jnp.ndarray | None = None,
+                   cutoff: float = 10.0,
+                   shard=lambda x, *n: x) -> jnp.ndarray:
+    """species: (N,) int; positions: (N,3); edges src→dst (E,), -1 padded.
+
+    Returns per-graph energies (num_graphs, d_out) if mol_id given, else
+    per-node outputs.
+    """
+    valid = (src >= 0) & (dst >= 0)
+    s = jnp.maximum(src, 0)
+    d = jnp.maximum(dst, 0)
+    rij = positions[d] - positions[s]
+    dist = jnp.sqrt((rij ** 2).sum(-1) + 1e-12)
+    n_rbf = params["interactions"]["filter1"]["w"].shape[1]
+    rbf = shard(_rbf(dist, n_rbf, cutoff), "edges", None)
+    # cosine cutoff envelope
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.minimum(dist / cutoff, 1.0))
+                 + 1.0)
+    env = jnp.where(valid, env, 0.0)
+
+    h = params["embed"][jnp.clip(species, 0, params["embed"].shape[0] - 1)]
+    if node_feat is not None and "feat_proj" in params:
+        h = h + dense(params["feat_proj"], node_feat)
+    h = shard(h, "nodes", None)
+
+    def interaction(h, p):
+        w = shifted_softplus(dense(p["filter1"], rbf))
+        w = dense(p["filter2"], w) * env[:, None]          # (E, d)
+        msg = dense(p["in_proj"], h)[s] * w
+        agg = segment_sum(msg, d, num_nodes)
+        v = shifted_softplus(dense(p["out_proj"], agg))
+        return shard(h + v, "nodes", None), None
+
+    h, _ = jax.lax.scan(
+        jax.checkpoint(interaction,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        h, params["interactions"])
+    out = shifted_softplus(dense(params["out1"], h))
+    out = dense(params["out2"], out)
+    if mol_id is not None:
+        assert num_graphs is not None
+        return segment_sum(out, jnp.maximum(mol_id, 0), num_graphs)
+    return out

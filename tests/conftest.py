@@ -1,0 +1,27 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(only launch/dryrun.py forces 512 host devices, in its own process).
+Multi-device tests spawn subprocesses with their own XLA_FLAGS."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str, *, devices: int = 8, timeout: int = 300
+                   ) -> subprocess.CompletedProcess:
+    """Run a python snippet in a fresh process with N fake devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)

@@ -1,0 +1,65 @@
+"""Per-arch smoke tests (reduced configs, one real step on CPU) + registry
+coverage of the assigned architecture × shape matrix."""
+import jax
+import pytest
+
+import repro.configs as C
+
+ASSIGNED = [
+    "qwen1.5-4b", "qwen3-4b", "codeqwen1.5-7b", "deepseek-moe-16b",
+    "phi3.5-moe-42b", "equiformer-v2", "gin-tu", "schnet", "meshgraphnet",
+    "din",
+]
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+
+
+def test_registry_complete():
+    archs = C.list_archs()
+    for a in ASSIGNED:
+        assert a in archs, a
+    assert len(archs) == 10
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_shape_matrix(name):
+    arch = C.get_arch(name)
+    expected = {"lm": LM_SHAPES, "moe_lm": LM_SHAPES, "gnn": GNN_SHAPES,
+                "recsys": RECSYS_SHAPES}[arch.family]
+    assert tuple(arch.shape_names) == expected
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_smoke(name):
+    """Reduced config, real forward/train step on CPU, finite outputs."""
+    out = C.get_arch(name).smoke()
+    assert isinstance(out, dict) and out
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_cells_build_abstract(name):
+    """Every (arch × shape) cell builds its abstract specs without a mesh
+    (full dims, zero allocation)."""
+    arch = C.get_arch(name)
+    for shape in arch.shape_names:
+        cell = arch.build_cell(shape, None)
+        assert cell.args, (name, shape)
+        leaves = jax.tree_util.tree_leaves(cell.args)
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+
+def test_lm_full_param_counts():
+    """Full configs match their nominal sizes (the 'did you actually build
+    a 4B/16B/42B model' check)."""
+    from repro.configs import (codeqwen15_7b, deepseek_moe_16b,
+                               phi35_moe_42b, qwen15_4b, qwen3_4b)
+    from repro.models.transformer import (lm_active_param_count,
+                                          lm_param_count)
+    assert 3.5e9 < lm_param_count(qwen15_4b.CONFIG) < 4.5e9
+    assert 3.8e9 < lm_param_count(qwen3_4b.CONFIG) < 4.8e9
+    assert 6.5e9 < lm_param_count(codeqwen15_7b.CONFIG) < 8.5e9
+    assert 14e9 < lm_param_count(deepseek_moe_16b.CONFIG) < 18e9
+    assert 39e9 < lm_param_count(phi35_moe_42b.CONFIG) < 45e9
+    assert 5.5e9 < lm_active_param_count(phi35_moe_42b.CONFIG) < 7.5e9

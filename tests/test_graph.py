@@ -1,0 +1,139 @@
+"""Graph substrate: CSR, generators, samplers, segment ops (+ property
+tests via hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (CSRGraph, fixed_size_unique, grid_mesh_graph,
+                         host_sample, host_sample_dense, molecule_batch,
+                         power_law_graph, sample_khop, scatter_spmm,
+                         segment_mean, segment_softmax, segment_sum)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    g = power_law_graph(400, 6.0, seed=1)
+    g.validate()
+    return g
+
+
+def test_csr_roundtrip(graph):
+    src, dst = graph.to_coo()
+    g2 = CSRGraph.from_edge_index(src, dst, graph.num_nodes)
+    assert np.array_equal(g2.indptr, graph.indptr)
+    # indices within each row may be permuted but sets match
+    for i in range(graph.num_nodes):
+        a = np.sort(graph.indices[graph.indptr[i]:graph.indptr[i + 1]])
+        b = np.sort(g2.indices[g2.indptr[i]:g2.indptr[i + 1]])
+        assert np.array_equal(a, b)
+
+
+def test_reverse_degree(graph):
+    rev = graph.reverse()
+    assert rev.num_edges == graph.num_edges
+    src, dst = graph.to_coo()
+    assert np.array_equal(rev.out_degree,
+                          np.bincount(dst, minlength=graph.num_nodes))
+
+
+def test_generators_shapes():
+    gm = grid_mesh_graph(5, 7)
+    assert gm.num_nodes == 35
+    assert gm.num_edges == 2 * ((5 - 1) * 7 + 5 * (7 - 1))
+    g, pos, mol = molecule_batch(3, 8, seed=0)
+    assert g.num_nodes == 24 and pos.shape == (24, 3)
+    # block-diagonal: no cross-molecule edges
+    src, dst = g.to_coo()
+    assert np.array_equal(mol[src], mol[dst])
+
+
+def test_device_sampler_valid_edges(graph):
+    gd = graph.device_arrays()
+    seeds = jnp.arange(32, dtype=jnp.int32)
+    s = sample_khop(jax.random.key(0), gd, seeds, (5, 3))
+    hops = [np.asarray(h) for h in s.hops]
+    indptr, indices = graph.indptr, graph.indices
+    for k in range(1, len(hops)):
+        fan = s.fanouts[k - 1]
+        parents = hops[k - 1]
+        for i, v in enumerate(parents):
+            for j in range(fan):
+                u = hops[k][i * fan + j]
+                if u < 0:
+                    continue
+                assert v >= 0
+                assert u in indices[indptr[v]:indptr[v + 1]]
+
+
+def test_device_sampler_respects_fanout_bound(graph):
+    gd = graph.device_arrays()
+    seeds = jnp.arange(16, dtype=jnp.int32)
+    s = sample_khop(jax.random.key(1), gd, seeds, (4,))
+    nbrs = np.asarray(s.hops[1]).reshape(16, 4)
+    deg = graph.out_degree[:16]
+    valid_counts = (nbrs >= 0).sum(1)
+    assert np.all(valid_counts == np.minimum(deg, 4))
+
+
+def test_host_samplers_agree_on_sizes(graph):
+    rng = np.random.default_rng(0)
+    seeds = np.arange(8)
+    ragged = host_sample(rng, graph, seeds, (4, 3))
+    dense = host_sample_dense(np.random.default_rng(0), graph,
+                              seeds.astype(np.int32), (4, 3))
+    # same realized count per hop (exactness of both)
+    for r, d in zip(ragged, dense):
+        assert (np.asarray(d) >= 0).sum() == r.size
+
+
+@given(st.lists(st.integers(min_value=-1, max_value=30), min_size=1,
+                max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_fixed_size_unique_property(ids):
+    ids = jnp.asarray(np.asarray(ids, np.int32))
+    uniq, inv = fixed_size_unique(ids, int(ids.shape[0]))
+    uniq_np = np.asarray(uniq)
+    valid = uniq_np[uniq_np >= 0]
+    expected = np.unique(np.asarray(ids)[np.asarray(ids) >= 0])
+    assert np.array_equal(np.sort(valid), expected)
+    restored = np.asarray(uniq)[np.asarray(inv)]
+    mask = np.asarray(ids) >= 0
+    assert np.array_equal(restored[mask], np.asarray(ids)[mask])
+
+
+@given(st.integers(min_value=2, max_value=40),
+       st.integers(min_value=1, max_value=200))
+@settings(max_examples=20, deadline=None)
+def test_segment_sum_matches_dense(n_seg, n_items):
+    rng = np.random.default_rng(n_seg * 1000 + n_items)
+    seg = rng.integers(0, n_seg, n_items)
+    data = rng.normal(size=(n_items, 3)).astype(np.float32)
+    out = np.asarray(segment_sum(jnp.asarray(data), jnp.asarray(seg), n_seg))
+    dense = np.zeros((n_seg, 3), np.float32)
+    np.add.at(dense, seg, data)
+    np.testing.assert_allclose(out, dense, rtol=1e-5, atol=1e-5)
+
+
+def test_segment_softmax_normalizes(graph):
+    src, dst = graph.to_coo()
+    scores = jnp.asarray(np.random.default_rng(0).normal(size=src.shape[0]),
+                         jnp.float32)
+    sm = segment_softmax(scores, jnp.asarray(dst), graph.num_nodes)
+    sums = np.asarray(segment_sum(sm, jnp.asarray(dst), graph.num_nodes))
+    has_edge = np.bincount(dst, minlength=graph.num_nodes) > 0
+    np.testing.assert_allclose(sums[has_edge], 1.0, atol=1e-5)
+
+
+def test_scatter_spmm_masks_invalid(graph):
+    src, dst = graph.to_coo()
+    src = src.astype(np.int64)
+    src[::5] = -1
+    feat = jnp.ones((graph.num_nodes, 2))
+    out = scatter_spmm(feat, jnp.asarray(src), jnp.asarray(dst),
+                       graph.num_nodes)
+    expected = np.zeros(graph.num_nodes)
+    valid = src >= 0
+    np.add.at(expected, dst[valid], 1.0)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), expected, rtol=1e-6)

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps, interpret mode vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag import embedding_bag_pallas, embedding_bag_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention_pallas
+from repro.kernels.segment_spmm import (coo_to_ell, segment_spmm_pallas,
+                                        segment_spmm_ref)
+from repro.kernels.tiered_gather import tiered_gather_pallas, tiered_gather_ref
+
+# bf16 oracles: refs are evaluated on f32-cast inputs (the kernel accumulates
+# in f32 — the jnp ref in raw bf16 would be the *less* accurate side), with
+# tolerance sized to bf16 output rounding.
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=1.5e-1)}
+
+
+@pytest.mark.parametrize("b,sq,h,kv,dh,causal", [
+    (1, 128, 4, 4, 64, True),
+    (2, 256, 4, 2, 64, True),
+    (1, 128, 8, 1, 128, True),
+    (2, 96, 4, 4, 32, False),    # non-multiple-of-block seq
+    (1, 257, 2, 2, 64, True),    # odd seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, sq, h, kv, dh, causal, dtype):
+    ks = jax.random.split(jax.random.key(sq * h + dh), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, sq, kv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, sq, kv, dh), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=64,
+                                 block_kv=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("block_q,block_kv", [(32, 32), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(block_q, block_kv):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, 192, 4, 64))
+    k = jax.random.normal(ks[1], (1, 192, 2, 64))
+    v = jax.random.normal(ks[2], (1, 192, 2, 64))
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=block_q,
+                                 block_kv=block_kv)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("n,dmax,m,d,weighted", [
+    (37, 9, 50, 128, True), (8, 1, 10, 256, False), (65, 16, 200, 32, True),
+    (16, 5, 16, 8, False),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_spmm_sweep(n, dmax, m, d, weighted, dtype):
+    rng = np.random.default_rng(n * dmax + d)
+    ids = rng.integers(-1, m, size=(n, dmax)).astype(np.int32)
+    feat = jnp.asarray(rng.normal(size=(m, d)), dtype)
+    w = (jnp.asarray(rng.normal(size=(n, dmax)), dtype) if weighted
+         else None)
+    out = segment_spmm_pallas(jnp.asarray(ids), feat, w)
+    ref = segment_spmm_ref(jnp.asarray(ids), feat.astype(jnp.float32),
+                           None if w is None else w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_segment_spmm_equals_coo_scatter():
+    from repro.graph import power_law_graph, scatter_spmm
+    g = power_law_graph(80, 4.0, seed=5)
+    src, dst = g.to_coo()
+    feat = jnp.asarray(np.random.default_rng(0).normal(size=(80, 16)),
+                       jnp.float32)
+    ell = coo_to_ell(src, dst, 80)
+    out = segment_spmm_pallas(jnp.asarray(ell), feat)
+    ref = scatter_spmm(feat, jnp.asarray(src), jnp.asarray(dst), 80)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("bsz,bag,v,d,mode,weighted", [
+    (21, 7, 100, 64, "sum", False), (21, 7, 100, 64, "mean", False),
+    (8, 20, 1000, 18, "sum", True), (64, 3, 50, 128, "mean", True),
+])
+def test_embedding_bag_sweep(bsz, bag, v, d, mode, weighted):
+    rng = np.random.default_rng(bsz * bag)
+    tbl = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    ids = rng.integers(-1, v, size=(bsz, bag)).astype(np.int32)
+    w = (jnp.asarray(rng.normal(size=(bsz, bag)), jnp.float32) if weighted
+         else None)
+    out = embedding_bag_pallas(tbl, jnp.asarray(ids), w, mode=mode)
+    ref = embedding_bag_ref(tbl, jnp.asarray(ids), w, mode=mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("m,h,w,d", [(50, 16, 40, 32), (7, 4, 4, 128),
+                                     (130, 64, 64, 8)])
+def test_tiered_gather_sweep(m, h, w, d):
+    rng = np.random.default_rng(m + d)
+    hot = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+    warm = jnp.asarray(rng.normal(size=(w, d)), jnp.float32)
+    tier = rng.integers(0, 3, size=m).astype(np.int32)
+    slot = np.where(tier == 0, rng.integers(0, h, m),
+                    rng.integers(0, w, m)).astype(np.int32)
+    out = tiered_gather_pallas(jnp.asarray(tier), jnp.asarray(slot), hot,
+                               warm)
+    ref = tiered_gather_ref(jnp.asarray(tier), jnp.asarray(slot), hot, warm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+def test_blockwise_attention_matches_flash():
+    """The XLA blockwise path (models/attention.py) and the Pallas kernel
+    implement the same contraction."""
+    from repro.models.attention import blockwise_attention
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    a = blockwise_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=32)
+    b = flash_attention_pallas(q, k, v, causal=True, block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)

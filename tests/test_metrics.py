@@ -1,0 +1,104 @@
+"""PSGS and FAP metric tests (paper §4.1, §5.1) — Monte-Carlo oracles +
+hypothesis invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (batch_psgs, compute_fap, compute_psgs,
+                        monte_carlo_fap, monte_carlo_psgs)
+from repro.graph import power_law_graph, uniform_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    # low avg degree → real degree variance (PSGS non-constant)
+    return power_law_graph(300, 2.5, seed=7)
+
+
+def _spearman(a, b):
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    return np.corrcoef(ra, rb)[0, 1]
+
+
+def test_psgs_branching_matches_monte_carlo(graph):
+    fan = (3, 2)
+    q = compute_psgs(graph, fan, mode="branching")
+    for node in [0, 11, 42, 137, 255]:
+        mc = monte_carlo_psgs(graph, node, fan, trials=600, seed=node)
+        assert q[node] == pytest.approx(mc, rel=0.08), node
+
+
+def test_psgs_paper_mode_is_single_walk(graph):
+    """Paper formula sums expected per-hop fan-in of one walk → bounded by
+    1 + Σ l_k, and equals branching mode when all fanouts are 1."""
+    q1 = compute_psgs(graph, (1, 1, 1), mode="paper")
+    q2 = compute_psgs(graph, (1, 1, 1), mode="branching")
+    np.testing.assert_allclose(q1, q2, rtol=1e-5)
+    qp = compute_psgs(graph, (5, 4), mode="paper")
+    assert qp.max() <= 1 + 5 + 4 + 1e-5
+
+
+def test_psgs_lower_bound_and_isolated(graph):
+    q = compute_psgs(graph, (4, 3))
+    assert (q >= 1.0 - 1e-6).all()
+    deg = graph.out_degree
+    if (deg == 0).any():
+        assert np.allclose(q[deg == 0], 1.0)
+
+
+@given(st.integers(min_value=1, max_value=6))
+@settings(max_examples=8, deadline=None)
+def test_psgs_monotone_in_fanout(fan):
+    g = power_law_graph(200, 3.0, seed=3)
+    q_small = compute_psgs(g, (fan,))
+    q_big = compute_psgs(g, (fan + 1,))
+    assert (q_big >= q_small - 1e-5).all()
+
+
+def test_batch_psgs_accumulates(graph):
+    q = compute_psgs(graph, (4, 3))
+    seeds = np.array([3, 5, 8, -1])
+    assert batch_psgs(q, seeds) == pytest.approx(q[[3, 5, 8]].sum())
+
+
+def test_fap_is_probability_like(graph):
+    p = compute_fap(graph, (4, 3))
+    assert (p >= -1e-7).all()
+    # p_0 sums to 1; each subsequent hop adds ≤1 of mass (transition is
+    # sub-stochastic on dangling nodes)
+    K = 2
+    assert p.sum() <= (K + 1) + 1e-4
+
+
+def test_fap_identifies_hot_set(graph):
+    """What placement needs from FAP is the hot set: the top-k FAP nodes
+    must overlap heavily with the top-k empirically-accessed nodes."""
+    fan = (4, 3)
+    p = compute_fap(graph, fan)
+    mc = monte_carlo_fap(graph, fan, requests=8000, seed=1)
+    k = graph.num_nodes // 10
+    top_p = set(np.argsort(-p)[:k].tolist())
+    top_mc = set(np.argsort(-mc)[:k].tolist())
+    overlap = len(top_p & top_mc) / k
+    assert overlap > 0.6, overlap
+    # and rank correlation stays clearly positive despite tie mass
+    assert _spearman(p, mc) > 0.4
+
+
+def test_fap_respects_seed_distribution(graph):
+    """Skewed seed distribution must shift FAP mass (the paper's argument
+    against training-time frequency ranking, §2.3)."""
+    n = graph.num_nodes
+    skew = np.zeros(n)
+    skew[:10] = 1.0  # all requests hit 10 seeds
+    p_skew = compute_fap(graph, (4,), seed_prob=skew)
+    p_unif = compute_fap(graph, (4,))
+    assert p_skew[:10].sum() > p_unif[:10].sum() * 5
+
+
+def test_fap_truncated_leq_untruncated_transition(graph):
+    p_t = compute_fap(graph, (2,), truncated=True)
+    p_u = compute_fap(graph, (2,), truncated=False)
+    # truncation can only boost per-edge acceptance (min(deg,l)/deg ≥ 1/deg)
+    assert (p_t >= p_u - 1e-6).all()

@@ -1,0 +1,243 @@
+"""Model-level tests: attention exactness, MoE dispatch oracle, equiformer
+equivariance, LM decode≡forward consistency, DIN."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph import molecule_batch, power_law_graph
+from repro.models import (DINConfig, LMConfig, blockwise_attention,
+                          din_forward, din_init, din_loss, embedding_bag,
+                          equiformer_forward, equiformer_init,
+                          init_decode_cache, lm_decode_step, lm_forward,
+                          lm_init, lm_loss, reference_attention)
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.so3 import (edge_rotation_blocks, l1_embedding,
+                              num_coeffs, rotation_matrix_zyz, wigner_zyz)
+from repro.models.transformer import lm_param_count, lm_prefill
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,kv,dh", [(2, 128, 4, 2, 32), (1, 96, 8, 8, 16),
+                                         (1, 130, 2, 1, 8)])
+def test_blockwise_attention_exact(b, s, h, kv, dh):
+    ks = jax.random.split(jax.random.key(s + h), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kv, dh))
+    v = jax.random.normal(ks[2], (b, s, kv, dh))
+    o1 = blockwise_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=48)
+    o2 = reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# SO(3) / Wigner conventions
+# ---------------------------------------------------------------------------
+def test_wigner_orthogonal_and_l1():
+    lmax = 4
+    a, b, g = 0.3, 1.1, -0.7
+    D = np.asarray(wigner_zyz(a, b, g, lmax))
+    assert np.abs(D @ D.T - np.eye(num_coeffs(lmax))).max() < 1e-5
+    R = rotation_matrix_zyz(a, b, g)
+    P = np.zeros((3, 3))
+    P[0, 1] = P[1, 2] = P[2, 0] = 1  # (y, z, x) real-SH ordering
+    np.testing.assert_allclose(D[1:4, 1:4], P @ R @ P.T, atol=1e-5)
+
+
+def test_edge_rotation_aligns_to_z():
+    rng = np.random.default_rng(0)
+    r = rng.normal(size=(20, 3))
+    r /= np.linalg.norm(r, axis=-1, keepdims=True)
+    D, Dinv = edge_rotation_blocks(jnp.asarray(r, jnp.float32), 3)
+    emb = np.asarray(l1_embedding(jnp.asarray(r, jnp.float32)))
+    out = np.einsum("eij,ej->ei", np.asarray(D[1]), emb)
+    np.testing.assert_allclose(out, np.tile([0, 1, 0], (20, 1)), atol=1e-5)
+    for l in range(4):
+        eye = np.einsum("eij,ejk->eik", np.asarray(D[l]), np.asarray(Dinv[l]))
+        np.testing.assert_allclose(eye, np.tile(np.eye(2 * l + 1),
+                                                (20, 1, 1)), atol=1e-5)
+
+
+def test_equiformer_rotation_invariance():
+    g, pos, mol_id = molecule_batch(4, 8, seed=0, cutoff=2.5)
+    src, dst = g.to_coo()
+    species = np.random.default_rng(0).integers(0, 5, size=g.num_nodes)
+    params = equiformer_init(jax.random.key(0), n_layers=2, channels=16,
+                             l_max=3, m_max=2, n_heads=4, n_rbf=8, d_out=2)
+    kw = dict(num_nodes=g.num_nodes, mol_id=jnp.asarray(mol_id),
+              num_graphs=4)
+    out = equiformer_forward(params, jnp.asarray(species),
+                             jnp.asarray(pos, jnp.float32), jnp.asarray(src),
+                             jnp.asarray(dst), **kw)
+    R = rotation_matrix_zyz(0.4, 1.0, -0.3).astype(np.float32)
+    out_r = equiformer_forward(params, jnp.asarray(species),
+                               jnp.asarray(pos @ R.T, jnp.float32),
+                               jnp.asarray(src), jnp.asarray(dst), **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), atol=1e-4)
+
+
+def test_equiformer_edge_chunking_exact():
+    g, pos, mol_id = molecule_batch(3, 10, seed=1, cutoff=2.5)
+    src, dst = g.to_coo()
+    species = np.random.default_rng(1).integers(0, 5, size=g.num_nodes)
+    params = equiformer_init(jax.random.key(1), n_layers=2, channels=16,
+                             l_max=2, m_max=1, n_heads=4, n_rbf=8)
+    kw = dict(num_nodes=g.num_nodes)
+    a = equiformer_forward(params, jnp.asarray(species), jnp.asarray(pos),
+                           jnp.asarray(src), jnp.asarray(dst), **kw)
+    b = equiformer_forward(params, jnp.asarray(species), jnp.asarray(pos),
+                           jnp.asarray(src), jnp.asarray(dst),
+                           edge_chunks=4, **kw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def test_moe_matches_dense_oracle():
+    cfg = MoEConfig(num_experts=4, top_k=2, d_ff=16, capacity_factor=8.0)
+    p = moe_init(jax.random.key(0), 8, cfg)
+    x = jax.random.normal(jax.random.key(1), (32, 8))
+    y, stats = moe_apply(p, x, cfg)
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    tw, te = jax.lax.top_k(probs, 2)
+    tw = tw / tw.sum(-1, keepdims=True)
+    yo = jnp.zeros_like(x)
+    for e in range(4):
+        h = jax.nn.silu(x @ p["w1"][e]) * (x @ p["w3"][e])
+        w = jnp.where(te == e, tw, 0.0).sum(-1)
+        yo = yo + (h @ p["w2"][e]) * w[:, None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yo), atol=1e-5)
+    assert int(stats["dropped"]) == 0
+
+
+def test_moe_capacity_drops_overflow():
+    cfg = MoEConfig(num_experts=4, top_k=1, d_ff=8, capacity_factor=0.25)
+    p = moe_init(jax.random.key(0), 8, cfg)
+    x = jax.random.normal(jax.random.key(2), (64, 8))
+    y, stats = moe_apply(p, x, cfg)
+    assert int(stats["dropped"]) > 0
+    assert bool(jnp.isfinite(y).all())
+    assert stats["expert_load"].sum() + stats["dropped"] == 64
+
+
+def test_moe_router_stats_feed_expert_placement():
+    from repro.core import expert_placement
+    cfg = MoEConfig(num_experts=8, top_k=2, d_ff=8)
+    p = moe_init(jax.random.key(0), 8, cfg)
+    x = jax.random.normal(jax.random.key(3), (128, 8))
+    _, stats = moe_apply(p, x, cfg)
+    reps = expert_placement(np.asarray(stats["expert_load"]), 8, 4)
+    assert reps.sum() == 12
+
+
+# ---------------------------------------------------------------------------
+# LM: decode matches teacher-forced forward
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("qkv_bias,qk_norm,moe", [
+    (True, False, False), (False, True, False), (False, False, True)])
+def test_lm_decode_consistency(qkv_bias, qk_norm, moe):
+    mcfg = (MoEConfig(num_experts=4, top_k=2, d_ff=32, capacity_factor=8.0)
+            if moe else None)
+    cfg = LMConfig(vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv=2,
+                   head_dim=8, d_ff=64 if not moe else 0, qkv_bias=qkv_bias,
+                   qk_norm=qk_norm, moe=mcfg, q_chunk=8, kv_chunk=8)
+    params = lm_init(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)
+    # teacher-forced logits at the last position
+    h, _ = lm_forward(params, toks, cfg)
+    full_logits = h[:, -1, :] @ params["unembed"]
+    # decode step-by-step
+    cache = init_decode_cache(cfg, 2, 16, jnp.float32)
+    for t in range(12):
+        logits, cache = lm_decode_step(params, toks[:, t:t + 1], cache,
+                                       jnp.asarray(t + 1, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_lm_prefill_matches_decode_cache():
+    cfg = LMConfig(vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv=4,
+                   head_dim=8, d_ff=64, q_chunk=8, kv_chunk=8)
+    params = lm_init(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(2), (1, 8), 0, cfg.vocab)
+    logits_p, cache_p = lm_prefill(params, toks, cfg)
+    cache = init_decode_cache(cfg, 1, 8, jnp.float32)
+    for t in range(8):
+        logits_d, cache = lm_decode_step(params, toks[:, t:t + 1], cache,
+                                         jnp.asarray(t + 1, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(cache_p["k"], np.float32),
+        np.asarray(cache["k"], np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_lm_param_count_formula():
+    cfg = LMConfig(vocab=128, d_model=64, n_layers=3, n_heads=4, n_kv=2,
+                   head_dim=16, d_ff=256, qkv_bias=False)
+    params = lm_init(jax.random.key(0), cfg)
+    actual = sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(params))
+    # formula excludes tiny norm scales per layer; allow <1% slack
+    assert abs(actual - lm_param_count(cfg)) / actual < 0.02
+
+
+def test_lm_train_loss_decreases():
+    cfg = LMConfig(vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv=4,
+                   head_dim=8, d_ff=64, q_chunk=16, kv_chunk=16)
+    params = lm_init(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(3), (4, 32), 0, cfg.vocab)
+    from repro.training import AdamW
+    opt = AdamW(lr=3e-3, weight_decay=0.0, warmup_steps=1)
+    state = opt.init(params)
+    loss_fn = jax.jit(jax.value_and_grad(
+        lambda p: lm_loss(p, toks, toks, cfg)))
+    first = None
+    for _ in range(20):
+        loss, grads = loss_fn(params)
+        params, state = opt.update(grads, state, params)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first * 0.8, (first, float(loss))
+
+
+# ---------------------------------------------------------------------------
+# DIN
+# ---------------------------------------------------------------------------
+def test_embedding_bag_modes():
+    tbl = jnp.asarray(np.random.default_rng(0).normal(size=(50, 8)),
+                      jnp.float32)
+    ids = jnp.asarray([[1, 2, -1], [4, -1, -1]], jnp.int32)
+    s = embedding_bag(tbl, ids, mode="sum")
+    m = embedding_bag(tbl, ids, mode="mean")
+    np.testing.assert_allclose(np.asarray(s[0]),
+                               np.asarray(tbl[1] + tbl[2]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(m[0]),
+                               np.asarray((tbl[1] + tbl[2]) / 2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(m[1]), np.asarray(tbl[4]),
+                               rtol=1e-6)
+
+
+def test_din_attention_masks_padding():
+    cfg = DINConfig(n_items=100, n_cates=10, hist_len=5, n_dense_feat=2)
+    params = din_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    base = dict(
+        target_item=jnp.asarray([3]), target_cate=jnp.asarray([1]),
+        dense_feat=jnp.asarray(rng.normal(size=(1, 2)), jnp.float32))
+    hist = jnp.asarray([[5, 9, -1, -1, -1]])
+    cats = jnp.asarray([[1, 2, 0, 0, 0]])
+    out1 = din_forward(params, cfg, base["target_item"], base["target_cate"],
+                       hist, cats, base["dense_feat"])
+    # changing *padded* history slots must not change the output
+    hist2 = jnp.asarray([[5, 9, -1, -1, -1]])
+    cats2 = jnp.asarray([[1, 2, 7, 8, 9]])
+    out2 = din_forward(params, cfg, base["target_item"], base["target_cate"],
+                       hist2, cats2, base["dense_feat"])
+    # NOTE: categories of padded items are still embedded in this impl only
+    # when item id >= 0; padded ids are masked in _embed_pair
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)

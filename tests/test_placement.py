@@ -1,0 +1,105 @@
+"""Feature placement invariants (paper §5.2) + baselines + expert placement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TopologySpec, degree_placement, expert_placement,
+                        freq_placement, hash_placement, p3_placement,
+                        quiver_placement)
+from repro.core.placement import TIER_HOT, TIER_WARM, TIER_HOST, TIER_DISK
+
+
+def _fap(n, seed=0):
+    return np.random.default_rng(seed).exponential(size=n).astype(np.float32)
+
+
+@given(st.integers(min_value=1, max_value=3),
+       st.integers(min_value=1, max_value=8),
+       st.sampled_from([0.0, 0.25, 1.0]),
+       st.booleans(), st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_quiver_placement_invariants(pods, devs, hot_frac, ici, dcn):
+    n = 500
+    topo = TopologySpec(num_pods=pods, devices_per_pod=devs,
+                        rows_per_device=32, rows_host=64,
+                        has_fast_intrapod=ici, has_fast_interpod=dcn,
+                        hot_replicate_fraction=hot_frac)
+    plan = quiver_placement(_fap(n), topo)
+    plan.validate()  # capacity + ownership invariants
+    counts = plan.tier_counts()
+    assert sum(counts.values()) == n
+    if not ici:
+        # paper's no-NVLink case: everything device-resident is replicated
+        assert counts["warm"] == 0
+
+
+def test_placement_ranks_by_fap():
+    fap = _fap(1000, seed=1)
+    topo = TopologySpec(num_pods=2, devices_per_pod=4, rows_per_device=50,
+                        rows_host=100, hot_replicate_fraction=0.2)
+    plan = quiver_placement(fap, topo)
+    order = np.argsort(-fap)
+    tiers_in_order = plan.tier[order]
+    # tier id must be monotone along descending FAP (hot→warm→host→disk)
+    assert (np.diff(tiers_in_order.astype(int)) >= 0).all()
+
+
+def test_placement_balances_fap_across_devices():
+    fap = _fap(2000, seed=2)
+    topo = TopologySpec(num_pods=1, devices_per_pod=8, rows_per_device=100,
+                        rows_host=0, hot_replicate_fraction=0.0)
+    plan = quiver_placement(fap, topo)
+    warm = plan.tier == TIER_WARM
+    sums = np.array([fap[warm & (plan.device_owner == d)].sum()
+                     for d in range(8)])
+    assert sums.max() / max(sums.min(), 1e-9) < 1.25  # snake balance
+
+
+def test_interpod_partition_vs_replicate():
+    fap = _fap(1000, seed=3)
+    base = dict(num_pods=2, devices_per_pod=4, rows_per_device=40,
+                rows_host=50, hot_replicate_fraction=0.0)
+    with_ib = quiver_placement(fap, TopologySpec(**base,
+                                                 has_fast_interpod=True))
+    without = quiver_placement(fap, TopologySpec(**base,
+                                                 has_fast_interpod=False))
+    # with fast inter-pod links the warm tier is partitioned across pods →
+    # twice the distinct device-resident rows (paper Fig. 8 c/d)
+    assert with_ib.tier_counts()["warm"] == 2 * without.tier_counts()["warm"]
+    assert (without.pod_owner[without.tier == TIER_WARM] == -1).all()
+
+
+def test_baselines_interface():
+    n = 500
+    topo = TopologySpec(num_pods=2, devices_per_pod=4, rows_per_device=32,
+                        rows_host=64)
+    deg = np.random.default_rng(0).integers(0, 50, n)
+    for plan in (hash_placement(n, topo), degree_placement(deg, topo),
+                 freq_placement(deg.astype(float), topo),
+                 p3_placement(n, topo)):
+        assert plan.tier.shape == (n,)
+        assert plan.name in ("hash", "degree", "freq", "p3")
+    assert p3_placement(n, topo).dim_sharded
+
+
+def test_hash_placement_is_workload_agnostic():
+    n = 300
+    topo = TopologySpec(num_pods=1, devices_per_pod=4, rows_per_device=1000,
+                        rows_host=0)
+    p1 = hash_placement(n, topo)
+    p2 = hash_placement(n, topo)
+    assert np.array_equal(p1.device_owner, p2.device_owner)
+
+
+@given(st.integers(min_value=2, max_value=64),
+       st.integers(min_value=0, max_value=32))
+@settings(max_examples=30, deadline=None)
+def test_expert_placement_budget(experts, budget):
+    prob = np.random.default_rng(experts).exponential(size=experts)
+    reps = expert_placement(prob, num_devices=64, replication_budget=budget)
+    assert (reps >= 1).all() and (reps <= 64).all()
+    assert reps.sum() == min(experts + budget,
+                             reps.sum())  # ≥1 each, ≤ budget extras
+    assert reps.sum() <= experts + budget
+    # hottest expert gets at least as many replicas as the coldest
+    assert reps[np.argmax(prob)] >= reps[np.argmin(prob)]

@@ -1,0 +1,152 @@
+"""End-to-end serving stack: scheduler calibration/crossovers, dynamic
+batcher, workload generator, pipeline throughput/latency accounting."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CalibrationResult, DynamicBatcher, HybridScheduler,
+                        LatencyCurve, Request, ServingEngine, StaticScheduler,
+                        TieredFeatureStore, TopologySpec, WorkloadGenerator,
+                        batch_seeds, compute_fap, compute_psgs, pad_to_bucket,
+                        quiver_placement)
+from repro.graph import power_law_graph
+from repro.models.gnn_basic import sage_init, sage_layered
+
+
+def _curve(psgs, lat):
+    return LatencyCurve.fit(psgs, lat, bins=6)
+
+
+def test_latency_curve_fit_monotone_interp():
+    psgs = np.linspace(1, 100, 200)
+    lat = 0.001 + psgs * 1e-5
+    c = _curve(psgs, lat + np.random.default_rng(0).normal(0, 1e-6, 200))
+    assert c.eval_avg(50.0) == pytest.approx(0.0015, rel=0.1)
+
+
+def test_crossover_points_ordering():
+    """Host is flat-cheap; device has fixed overhead but lower slope — the
+    four thresholds of paper Fig. 6 exist and are ordered sensibly."""
+    psgs = np.linspace(1, 100, 400)
+    host_lat = 1e-4 * psgs                       # linear in work
+    dev_lat = 2e-3 + 1e-5 * psgs                 # offset + shallow slope
+    calib = CalibrationResult(
+        host=_curve(psgs, host_lat), device=_curve(psgs, dev_lat))
+    thr = {p: calib.threshold(p) for p in
+           ("cpu_preferred", "gpu_preferred", "latency_preferred",
+            "throughput_preferred")}
+    assert 10 < thr["throughput_preferred"] < 40
+    # all four thresholds agree here since curves have no noise spread
+    for v in thr.values():
+        assert 10 < v < 40
+
+
+def test_no_intersection_cases():
+    psgs = np.linspace(1, 10, 50)
+    always_host = CalibrationResult(host=_curve(psgs, 0.001 + 0 * psgs),
+                                    device=_curve(psgs, 0.01 + 0 * psgs))
+    assert always_host.threshold("throughput_preferred") == float("inf")
+    always_dev = CalibrationResult(host=_curve(psgs, 0.01 + 0 * psgs),
+                                   device=_curve(psgs, 0.001 + 0 * psgs))
+    assert always_dev.threshold("throughput_preferred") == 0.0
+
+
+def test_hybrid_scheduler_routes_by_psgs():
+    table = np.array([1.0, 10.0, 100.0, 1000.0], np.float32)
+    s = HybridScheduler(table, threshold=50.0)
+    assert s.route(np.array([0, 1])) == "host"      # 11 < 50
+    assert s.route(np.array([2])) == "device"       # 100 ≥ 50
+    assert s.routed == {"host": 1, "device": 1}
+
+
+def test_dynamic_batcher_psgs_budget():
+    table = np.full(100, 10.0, np.float32)
+    b = DynamicBatcher(deadline_s=10.0, psgs_budget=35.0, max_batch=100,
+                       psgs_table=table)
+    out = None
+    for i in range(10):
+        out = b.add(Request(i, np.array([i]), time.perf_counter()))
+        if out is not None:
+            break
+    assert out is not None and len(out) == 4      # 4×10 ≥ 35
+
+
+def test_dynamic_batcher_max_batch():
+    b = DynamicBatcher(deadline_s=10.0, max_batch=3)
+    outs = []
+    for i in range(7):
+        r = b.add(Request(i, np.array([i]), time.perf_counter()))
+        if r:
+            outs.append(r)
+    assert [len(o) for o in outs] == [3, 3]
+    assert len(b.flush()) == 1
+
+
+def test_workload_generator_distributions():
+    g = power_law_graph(500, 6.0, seed=0)
+    deg_gen = WorkloadGenerator(500, g.out_degree, distribution="degree",
+                                seed=1)
+    uni_gen = WorkloadGenerator(500, g.out_degree, distribution="uniform",
+                                seed=1)
+    deg_seeds = np.concatenate([r.seeds for r in deg_gen.stream(400, 4)])
+    uni_seeds = np.concatenate([r.seeds for r in uni_gen.stream(400, 4)])
+    # degree-weighted seeds hit high-degree nodes more often
+    hi = np.argsort(-g.out_degree)[:50]
+    assert np.isin(deg_seeds, hi).mean() > np.isin(uni_seeds, hi).mean() * 1.5
+
+
+def test_pad_to_bucket_shapes():
+    a = pad_to_bucket(np.arange(5), min_size=4)
+    assert a.shape == (8,) and (a[5:] == -1).all()
+    assert pad_to_bucket(np.arange(4), min_size=4).shape == (4,)
+
+
+@pytest.fixture(scope="module")
+def serving_stack():
+    g = power_law_graph(1200, 6.0, seed=0)
+    fan = (4, 3)
+    feats = np.random.default_rng(0).normal(size=(1200, 16)).astype(
+        np.float32)
+    fap = compute_fap(g, fan)
+    topo = TopologySpec(num_pods=1, devices_per_pod=1, rows_per_device=400,
+                        rows_host=600, hot_replicate_fraction=0.3)
+    store = TieredFeatureStore.build(feats, quiver_placement(fap, topo))
+    params = sage_init(jax.random.key(0), [16, 32, 32])
+
+    @jax.jit
+    def infer_fn(hop_feats, hop_ids):
+        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
+        return sage_layered(params, hop_feats, fan, hop_masks=masks)
+
+    psgs = compute_psgs(g, fan)
+    return g, store, fan, infer_fn, psgs
+
+
+def test_pipeline_end_to_end(serving_stack):
+    g, store, fan, infer_fn, psgs = serving_stack
+    engine = ServingEngine(g, store, fan, infer_fn,
+                           HybridScheduler(psgs, np.median(psgs) * 8),
+                           num_workers=2, max_batch=16)
+    gen = WorkloadGenerator(g.num_nodes, g.out_degree, seed=3)
+    batches = [[r] for r in gen.stream(24, seeds_per_request=8)]
+    m = engine.run(batches)
+    s = m.summary()
+    assert s["requests"] == 24
+    assert s["routed_host"] + s["routed_device"] == 24
+    assert s["p99_ms"] >= s["p50_ms"] > 0
+
+
+def test_pipeline_host_and_device_paths_agree_on_seeds(serving_stack):
+    """Both executors produce finite outputs with identical leading shape
+    semantics (same seeds → same output rows)."""
+    g, store, fan, infer_fn, psgs = serving_stack
+    engine = ServingEngine(g, store, fan, infer_fn, StaticScheduler("host"),
+                           max_batch=16)
+    seeds = np.arange(10)
+    out_h = np.asarray(engine._host_path(seeds))
+    out_d = np.asarray(engine._device_path(seeds))
+    assert np.isfinite(out_h).all() and np.isfinite(out_d).all()
+    assert out_h.shape[1] == out_d.shape[1]
