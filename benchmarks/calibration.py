@@ -1,26 +1,22 @@
-"""Fig. 6 analogue: measured host/device latency vs accumulated PSGS and the
-four crossover operating points."""
+"""Fig. 6 analogue: measured per-executor latency vs accumulated PSGS and the
+four crossover operating points, via the N-way executor calibration."""
 from __future__ import annotations
 
-import jax
 import numpy as np
 
-from benchmarks.common import build_serving_stack, emit, make_engine
-from repro.core import StaticScheduler, calibrate
+from benchmarks.common import build_serving_stack, emit, make_executors
+from repro.serving import CalibrationResult, calibrate_executors
 
 
 def run() -> None:
     stack = build_serving_stack(nodes=5000)
-    engine = make_engine(stack, StaticScheduler("host"), num_workers=1,
-                         max_batch=64)
+    executors = make_executors(stack, num_workers=1, max_batch=64)
     psgs = stack["psgs"]
     order = np.argsort(psgs)
     batches = [order[int(q * len(order)):][:32].astype(np.int64)
                for q in np.linspace(0.05, 0.95, 8)]
-    calib = calibrate(
-        lambda b: jax.block_until_ready(engine._host_path(b)),
-        lambda b: jax.block_until_ready(engine._device_path(b)),
-        batches, psgs, repeats=3)
+    curves = calibrate_executors(executors, batches, psgs, repeats=3)
+    calib = CalibrationResult(host=curves["host"], device=curves["device"])
     for q in (0.2, 0.5, 0.9):
         x = float(np.quantile(psgs, q) * 32)
         emit(f"calibration/host_avg_ms_q{int(q*100)}",

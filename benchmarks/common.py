@@ -8,11 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (HybridScheduler, ServingEngine, StaticScheduler,
-                        TieredFeatureStore, TopologySpec, WorkloadGenerator,
+from repro.core import (TieredFeatureStore, TopologySpec, WorkloadGenerator,
                         compute_fap, compute_psgs, quiver_placement)
 from repro.graph import power_law_graph
 from repro.models.gnn_basic import sage_init, sage_layered
+from repro.serving import DeviceExecutor, HostExecutor, ServingEngine
 
 ROWS: list[tuple] = []
 
@@ -62,6 +62,22 @@ def build_serving_stack(*, nodes: int = 6000, avg_degree: float = 10.0,
                 store=store, infer_fn=infer_fn, fanouts=fanouts, topo=topo)
 
 
-def make_engine(stack, scheduler, **kw) -> ServingEngine:
-    return ServingEngine(stack["graph"], stack["store"], stack["fanouts"],
-                         stack["infer_fn"], scheduler, **kw)
+def make_executors(stack, *, num_workers: int = 2, max_batch: int = 128):
+    """Host + device executor pair over a built stack (executor-graph API)."""
+    g = stack["graph"]
+    host = HostExecutor(g, stack["store"], stack["fanouts"],
+                        stack["infer_fn"], capacity=num_workers,
+                        psgs_table=stack["psgs"])
+    device = DeviceExecutor(g.device_arrays(), stack["store"],
+                            stack["fanouts"], stack["infer_fn"],
+                            max_batch=max_batch, capacity=num_workers,
+                            psgs_table=stack["psgs"])
+    return {"host": host, "device": device}
+
+
+def make_engine(stack, router, *, num_workers: int = 2, max_batch: int = 128,
+                max_inflight: int = 64,
+                admission: str = "wait") -> ServingEngine:
+    return ServingEngine(
+        make_executors(stack, num_workers=num_workers, max_batch=max_batch),
+        router, max_inflight=max_inflight, admission=admission)

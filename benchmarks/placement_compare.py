@@ -21,6 +21,7 @@ from repro.core import (TieredFeatureStore, TopologySpec, degree_placement,
                         freq_placement, hash_placement, monte_carlo_fap,
                         p3_placement, quiver_placement)
 from repro.core.placement import TIER_DISK, TIER_HOST, TIER_HOT, TIER_WARM
+from repro.serving import pad_to_bucket
 
 TIER_COST = {TIER_HOT: 1.0, TIER_WARM: 16.0, TIER_HOST: 160.0,
              TIER_DISK: 1600.0}
@@ -74,7 +75,9 @@ def run() -> None:
         tails = [float(max(TIER_COST[x] for x in np.unique(plan.tier[t])))
                  for t in touched]
         store = TieredFeatureStore.build(feats, plan)
-        ids = jnp.asarray(touched[0][:512].astype(np.int32))
+        # bucket-pad the measured id vector the same way the serving-layer
+        # executors do, so every policy is timed at an identical jit shape
+        ids = jnp.asarray(pad_to_bucket(touched[0][:512].astype(np.int32)))
         t_lookup = timeit(lambda: store.lookup(ids, include_host=False),
                           repeats=3)
         hist = store.tier_histogram(np.concatenate(touched))

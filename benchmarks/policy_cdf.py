@@ -15,8 +15,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import build_serving_stack, emit, make_engine, timeit
-from repro.core import DynamicBatcher, HybridScheduler, StaticScheduler
+from benchmarks.common import build_serving_stack, emit, make_executors, timeit
+from repro.core import DynamicBatcher
 
 
 def _compose(batcher, requests):
@@ -39,9 +39,8 @@ def run() -> None:
     stack["gen"].rng = np.random.default_rng(11)
     requests = list(stack["gen"].stream(256, seeds_per_request=1))
 
-    engine = make_engine(stack, StaticScheduler("host"), num_workers=1,
-                         max_batch=64)
-    engine.warmup([requests[0]])
+    host = make_executors(stack, num_workers=1, max_batch=64)["host"]
+    host.warmup(requests[0].seeds)
 
     policies = {
         "psgs_strict": DynamicBatcher(deadline_s=1e9, psgs_budget=med * 16,
@@ -55,7 +54,7 @@ def run() -> None:
         times, works = [], []
         for b in batches:
             seeds = np.concatenate([r.seeds for r in b])
-            t = timeit(lambda: engine._host_path(seeds), repeats=2,
+            t = timeit(lambda: host.process(seeds), repeats=2,
                        warmup=1)
             times.append(t)
             works.append(float(psgs[seeds].sum()))

@@ -1,11 +1,12 @@
 """Fig. 9 analogue: throughput vs p99 latency — Quiver's PSGS-hybrid
-scheduler vs static CPU-only / device-only execution."""
+scheduler vs static CPU-only / device-only execution, through the
+executor-graph serving engine."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import build_serving_stack, emit, make_engine
-from repro.core import HybridScheduler, StaticScheduler
+from repro.serving import HybridScheduler, StaticScheduler
 
 
 def run() -> None:
@@ -14,15 +15,15 @@ def run() -> None:
     gen = stack["gen"]
     n_req, per = 60, 8
 
-    for name, sched_fn in (
+    for name, router_fn in (
             ("quiver", lambda: HybridScheduler(psgs, float(np.median(psgs))
                                                * per * 2)),
             ("host_only", lambda: StaticScheduler("host")),
             ("device_only", lambda: StaticScheduler("device"))):
-        engine = make_engine(stack, sched_fn(), num_workers=2, max_batch=32)
+        engine = make_engine(stack, router_fn(), num_workers=2, max_batch=32)
         gen.rng = np.random.default_rng(7)  # same workload for all systems
         batches = [[r] for r in gen.stream(n_req, seeds_per_request=per)]
-        engine.warmup(batches[0])  # compile both paths outside measurement
+        engine.warmup(batches[0])  # compile every executor outside measurement
         m = engine.run(batches)
         s = m.summary()
         emit(f"serve_throughput/{name}_rps", s["throughput_rps"],

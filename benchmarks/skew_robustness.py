@@ -4,8 +4,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import build_serving_stack, emit, make_engine, timeit
-from repro.core import HybridScheduler, StaticScheduler
+from benchmarks.common import build_serving_stack, emit, make_executors, timeit
+from repro.serving import HybridScheduler
 
 
 def run() -> None:
@@ -20,10 +20,11 @@ def run() -> None:
     for batch in (4, 96):
         for wname, pool in workloads.items():
             seeds = pool[:batch].astype(np.int64)
-            engine = make_engine(stack, StaticScheduler("host"),
-                                 max_batch=batch)
-            t_host = timeit(lambda: engine._host_path(seeds), repeats=3)
-            t_dev = timeit(lambda: engine._device_path(seeds), repeats=3)
+            executors = make_executors(stack, max_batch=batch)
+            t_host = timeit(lambda: executors["host"].process(seeds),
+                            repeats=3)
+            t_dev = timeit(lambda: executors["device"].process(seeds),
+                           repeats=3)
             # PSGS picks per-batch using the throughput threshold
             thr = float(np.median(psgs)) * batch * 2
             hybrid = HybridScheduler(psgs, thr)

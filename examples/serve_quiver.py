@@ -3,20 +3,21 @@
     PYTHONPATH=src python examples/serve_quiver.py [--requests 200]
 
 Serves a GraphSAGE model over a skewed synthetic graph with batched requests
-through the full Quiver pipeline — PSGS calibration, all four operating
-points, dynamic PSGS-budget batching, multiplexed workers — and prints a
-per-policy latency/throughput report.
+through the full Quiver pipeline on the executor-graph stack — per-executor
+PSGS calibration, the four operating points as cost-model routing policies,
+dynamic PSGS-budget batching, per-batch futures with admission control — and
+prints a per-policy latency/throughput report.
 """
 import argparse
 import json
 
-import jax
 import numpy as np
 
-from repro.core import (DynamicBatcher, HybridScheduler, StaticScheduler,
-                        calibrate)
+from repro.core import DynamicBatcher
 from repro.launch.serve import build_stack
-from repro.core.pipeline import ServingEngine
+from repro.serving import (CalibrationResult, CostModelRouter,
+                           DeviceExecutor, HostExecutor, ServingEngine,
+                           calibrate_executors)
 
 
 def main() -> None:
@@ -32,23 +33,27 @@ def main() -> None:
     print(f"[stack] {graph.num_nodes} nodes, tiers "
           f"{store.plan.tier_counts()}")
 
-    # calibrate once (paper Fig. 6)
-    probe = ServingEngine(graph, store, (6, 4), infer_fn,
-                          StaticScheduler("host"), num_workers=1,
-                          max_batch=32)
+    executors = {
+        "host": HostExecutor(graph, store, (6, 4), infer_fn, capacity=2,
+                             psgs_table=psgs),
+        "device": DeviceExecutor(graph.device_arrays(), store, (6, 4),
+                                 infer_fn, max_batch=32, capacity=2,
+                                 psgs_table=psgs),
+    }
+
+    # calibrate every executor once (paper Fig. 6)
     order = np.argsort(psgs)
     batches = [order[int(q * len(order)):][:args.batch_seeds]
                .astype(np.int64) for q in np.linspace(0.05, 0.95, 6)]
-    calib = calibrate(
-        lambda b: jax.block_until_ready(probe._host_path(b)),
-        lambda b: jax.block_until_ready(probe._device_path(b)),
-        batches, psgs, repeats=2)
+    curves = calibrate_executors(executors, batches, psgs, repeats=2)
+    calib = CalibrationResult(host=curves["host"], device=curves["device"])
+
     report = {}
     for policy in ("latency_preferred", "throughput_preferred"):
-        thr = calib.threshold(policy)
-        engine = ServingEngine(graph, store, (6, 4), infer_fn,
-                               HybridScheduler(psgs, thr, policy),
-                               num_workers=2, max_batch=32)
+        thr = calib.threshold(policy)  # PSGS budget for the batcher
+        router = CostModelRouter.from_curves(psgs, curves, policy,
+                                             executors=executors)
+        engine = ServingEngine(executors, router, max_inflight=64)
         gen.rng = np.random.default_rng(5)
         reqs = list(gen.stream(args.requests,
                                seeds_per_request=args.batch_seeds))

@@ -1,0 +1,37 @@
+"""Version-drift compatibility aliases for the pinned JAX toolchain.
+
+The repo targets the current JAX API surface; where the installed version
+predates a rename, fall back to the old location:
+
+  * ``CompilerParams`` — Pallas-TPU compiler params were
+    ``pltpu.TPUCompilerParams`` before the rename.
+  * ``shard_map`` — promoted to ``jax.shard_map``; previously lived in
+    ``jax.experimental.shard_map``.
+  * ``make_mesh`` — newer versions take ``axis_types``; older ones don't.
+
+Everything here must import cleanly on a CPU-only host.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with auto axis types where the kwarg exists."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    except (ImportError, TypeError):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))

@@ -9,8 +9,10 @@ from repro.core.placement import (PlacementPlan, TopologySpec,
                                   freq_placement, hash_placement,
                                   p3_placement, quiver_placement)
 from repro.core.psgs import batch_psgs, compute_psgs, monte_carlo_psgs
-from repro.core.scheduler import (CalibrationResult, HybridScheduler,
-                                  LatencyCurve, StaticScheduler, calibrate)
+from repro.core.scheduler import (CalibrationResult, CostModelRouter,
+                                  HybridScheduler, LatencyCurve,
+                                  StaticScheduler, calibrate,
+                                  calibrate_executors)
 from repro.core.serving import (DynamicBatcher, Request, WorkloadGenerator,
                                 batch_seeds, pad_to_bucket)
 
@@ -19,7 +21,8 @@ __all__ = [
     "monte_carlo_fap", "TopologySpec", "PlacementPlan", "quiver_placement",
     "hash_placement", "degree_placement", "freq_placement", "p3_placement",
     "expert_placement", "TieredFeatureStore", "ShardedFeatureStore",
-    "LatencyCurve", "CalibrationResult", "calibrate", "HybridScheduler",
+    "LatencyCurve", "CalibrationResult", "calibrate", "calibrate_executors",
+    "CostModelRouter", "HybridScheduler",
     "StaticScheduler", "Request", "WorkloadGenerator", "DynamicBatcher",
     "batch_seeds", "pad_to_bucket", "ServingEngine", "ServeMetrics",
 ]

@@ -31,6 +31,8 @@ import numpy as np
 from jax.experimental import io_callback
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.core.placement import (PlacementPlan, TIER_DISK, TIER_HOST,
                                   TIER_HOT, TIER_WARM)
 from repro.graph.sampler import fixed_size_unique
@@ -269,7 +271,7 @@ class ShardedFeatureStore:
             out = jnp.where(remote[:, None], answered, out)
             return jnp.where((ids_l >= 0)[:, None], out, 0.0)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             body, mesh=self.mesh,
             in_specs=(P(), P(axis), P(), P(), P(), P(axis)),
             out_specs=P(axis))

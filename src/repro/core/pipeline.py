@@ -1,210 +1,58 @@
-"""Hybrid high-throughput serving pipeline (paper §4.3).
+"""Deprecated shim — the serving pipeline moved to ``repro.serving``.
 
-Design choices carried over from the paper, re-expressed for the JAX runtime:
-
-(1) *Multiplexing pipelines in a processor* — CUDA streams become multiple
-    host worker threads, each driving asynchronously-dispatched jitted stages;
-    XLA overlaps the host sampler (pure Python/NumPy), feature collection and
-    model compute across workers.
-(2) *Shared queue* — all workers compete for batches on one queue, so an
-    irregular (large-PSGS) batch never blocks small ones behind a fixed
-    assignment: stragglers only occupy the worker they run on.
-(3) *Shared graph* — the CSR topology and the feature store are read-only
-    process-level singletons shared by every worker (UVA analogue: one copy,
-    all pipelines).
+The multiplexed two-path engine (paper §4.3) is now the executor-graph
+engine of :mod:`repro.serving.engine`; this module keeps the historical
+``ServingEngine(graph, store, fanouts, infer_fn, scheduler, ...)`` signature
+working by building a host + device executor pair under the hood. The old
+``_host_path`` / ``_device_path`` probes delegate to those executors (the
+device path now chunks oversized batches instead of silently truncating
+them). Import from ``repro.serving`` in new code.
 """
 from __future__ import annotations
 
-import dataclasses
-import queue
-import threading
-import time
-from typing import Callable, Optional, Sequence
+from typing import Callable, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.feature_store import TieredFeatureStore
-from repro.core.scheduler import HybridScheduler, StaticScheduler
-from repro.core.serving import Request, batch_seeds, pad_to_bucket
-from repro.graph.csr import CSRGraph
-from repro.graph.sampler import device_sample, host_sample_dense
+from repro.serving.engine import ServeMetrics, ServingEngine as _EngineBase
+from repro.serving.executors import DeviceExecutor, HostExecutor
+
+__all__ = ["ServeMetrics", "ServingEngine"]
 
 
-@dataclasses.dataclass
-class ServeMetrics:
-    latencies: list[float] = dataclasses.field(default_factory=list)
-    started: float = 0.0
-    finished: float = 0.0
-    requests: int = 0
-    routed_host: int = 0
-    routed_device: int = 0
+class ServingEngine(_EngineBase):
+    """Legacy two-executor construction: batch → (hybrid) sample →
+    dedup/fetch → infer, with ``num_workers`` lanes per executor."""
 
-    @property
-    def throughput(self) -> float:
-        dur = max(self.finished - self.started, 1e-9)
-        return self.requests / dur
-
-    def percentile(self, q: float) -> float:
-        return float(np.quantile(np.asarray(self.latencies), q))
-
-    def summary(self) -> dict:
-        lat = np.asarray(self.latencies)
-        return {"requests": self.requests,
-                "throughput_rps": self.throughput,
-                "p50_ms": float(np.quantile(lat, 0.5) * 1e3),
-                "p99_ms": float(np.quantile(lat, 0.99) * 1e3),
-                "max_ms": float(lat.max() * 1e3),
-                "pct_in_400ms": float((lat < 0.4).mean()),
-                "routed_host": self.routed_host,
-                "routed_device": self.routed_device}
-
-
-class ServingEngine:
-    """End-to-end GNN serving: batch → (hybrid) sample → dedup/fetch → infer.
-
-    ``infer_fn(hop_feats: list[jnp.ndarray], hop_shapes) -> jnp.ndarray`` is
-    the model stage (layered aggregation over the hop arrays).
-    """
-
-    def __init__(self, graph: CSRGraph, store: TieredFeatureStore,
-                 fanouts: Sequence[int],
-                 infer_fn: Callable[[list[jnp.ndarray], list[jnp.ndarray]],
-                                    jnp.ndarray],
-                 scheduler: HybridScheduler | StaticScheduler, *,
-                 num_workers: int = 2, rng_seed: int = 0,
-                 max_batch: int = 128):
+    def __init__(self, graph, store, fanouts: Sequence[int],
+                 infer_fn: Callable, scheduler, *, num_workers: int = 2,
+                 rng_seed: int = 0, max_batch: int = 128):
         self.graph = graph
         self.graph_dev = graph.device_arrays()  # shared, read-only (§4.3(3))
         self.store = store
         self.fanouts = tuple(fanouts)
-        self.infer_fn = infer_fn  # (hop_feats, hop_ids) -> outputs
+        self.infer_fn = infer_fn
         self.scheduler = scheduler
         self.num_workers = num_workers
         self.max_batch = max_batch
-        self.rng = np.random.default_rng(rng_seed)
-        self._queue: "queue.Queue[Optional[list[Request]]]" = queue.Queue(
-            maxsize=256)
-        self._metrics = ServeMetrics()
-        self._lock = threading.Lock()
-        self._key = jax.random.key(rng_seed)
+        host = HostExecutor(graph, store, fanouts, infer_fn,
+                            capacity=num_workers, rng_seed=rng_seed)
+        device = DeviceExecutor(self.graph_dev, store, fanouts, infer_fn,
+                                max_batch=max_batch, capacity=num_workers,
+                                rng_seed=rng_seed)
+        super().__init__([host, device], scheduler, max_inflight=256,
+                         admission="wait")
 
-    # ---- stages ------------------------------------------------------------
-    def _next_key(self) -> jax.Array:
-        with self._lock:
-            self._key, sub = jax.random.split(self._key)
-        return sub
+    # legacy probes used by calibration drivers and tests
+    def _host_path(self, seeds: np.ndarray) -> jnp.ndarray:
+        return self.executors["host"].process(np.asarray(seeds))
 
     def _device_path(self, seeds: np.ndarray) -> jnp.ndarray:
-        """Fully padded on-device pipeline (the 'GPU path'): one static shape
-        (max_batch), jitted end to end."""
-        seeds_p = np.full((self.max_batch,), -1, np.int32)
-        seeds_p[:min(seeds.shape[0], self.max_batch)] = \
-            seeds[:self.max_batch]
-        hops = device_sample(self._next_key(), *self.graph_dev,
-                             jnp.asarray(seeds_p), self.fanouts)
-        hop_feats = [self.store.lookup(h) for h in hops]
-        return self.infer_fn(hop_feats, hops)
+        return self.executors["device"].process(np.asarray(seeds))
 
-    def _host_path(self, seeds: np.ndarray) -> jnp.ndarray:
-        """Exact host sampling (the 'CPU path') in the same dense layout;
-        seeds bucket-padded so jit shapes stay O(log max_batch)."""
-        seeds_p = pad_to_bucket(seeds.astype(np.int32))
-        hops_np = host_sample_dense(self.rng, self.graph, seeds_p,
-                                    self.fanouts)
-        hops = [jnp.asarray(h) for h in hops_np]
-        hop_feats = [self.store.lookup(h) for h in hops]
-        return self.infer_fn(hop_feats, hops)
-
-    def process_batch(self, batch: list[Request]) -> None:
-        seeds = batch_seeds(batch)
-        dest = self.scheduler.route(seeds)
-        out = (self._host_path(seeds) if dest == "host"
-               else self._device_path(seeds))
-        jax.block_until_ready(out)
-        now = time.perf_counter()
-        with self._lock:
-            for r in batch:
-                r.done = now
-                self._metrics.latencies.append(r.latency)
-            self._metrics.requests += len(batch)
-            if dest == "host":
-                self._metrics.routed_host += 1
-            else:
-                self._metrics.routed_device += 1
-
-    # ---- pipeline loop -------------------------------------------------
-    def _worker(self) -> None:
-        while True:
-            batch = self._queue.get()  # shared queue: work stealing (§4.3(2))
-            if batch is None:
-                self._queue.task_done()
-                return
-            try:
-                self.process_batch(batch)
-            finally:
-                self._queue.task_done()
-
-    def serve_stream(self, requests: Sequence[Request], batcher, *,
-                     gap_s: float = 0.0) -> ServeMetrics:
-        """Client-stream serving: requests arrive one by one (``gap_s``
-        apart), the DynamicBatcher closes batches by deadline / PSGS budget /
-        max size, and closed batches enter the shared worker queue. This is
-        the paper's end-to-end serving loop (§4.2.2)."""
-        self._metrics = ServeMetrics()
-        self._metrics.started = time.perf_counter()
-        workers = [threading.Thread(target=self._worker, daemon=True)
-                   for _ in range(self.num_workers)]
-        for w in workers:
-            w.start()
-        for r in requests:
-            if gap_s:
-                time.sleep(gap_s)
-            r.arrival = time.perf_counter()
-            out = batcher.add(r)
-            if out:
-                self._queue.put(out)
-        tail = batcher.flush()
-        if tail:
-            self._queue.put(tail)
-        self._queue.join()
-        for _ in workers:
-            self._queue.put(None)
-        for w in workers:
-            w.join()
-        self._metrics.finished = time.perf_counter()
-        return self._metrics
-
-    def warmup(self, batch: list[Request], *, rounds: int = 2) -> None:
-        """Compile/warm both executor paths outside the measured window."""
-        seeds = batch_seeds(batch)
-        for _ in range(rounds):
-            jax.block_until_ready(self._host_path(seeds))
-            jax.block_until_ready(self._device_path(seeds))
-
-    def run(self, batches: Sequence[list[Request]], *,
-            pace_s: Optional[float] = None) -> ServeMetrics:
-        """Process batches through the multiplexed pipeline. ``pace_s``
-        spaces arrivals (client-stream emulation) and re-stamps request
-        arrival at enqueue time so latency = queueing + processing."""
-        self._metrics = ServeMetrics()
-        self._metrics.started = time.perf_counter()
-        workers = [threading.Thread(target=self._worker, daemon=True)
-                   for _ in range(self.num_workers)]
-        for w in workers:
-            w.start()
-        for b in batches:
-            if pace_s:
-                time.sleep(pace_s)
-            now = time.perf_counter()
-            for r in b:
-                r.arrival = now  # client-observed latency starts at enqueue
-            self._queue.put(b)
-        self._queue.join()
-        for _ in workers:
-            self._queue.put(None)
-        for w in workers:
-            w.join()
-        self._metrics.finished = time.perf_counter()
-        return self._metrics
+    def process_batch(self, batch: list) -> None:
+        fut = self.submit_batch(batch)
+        if fut is not None:
+            fut.result()
+            self.drain()  # metrics accounting runs after the result is set

@@ -1,161 +1,15 @@
-"""PSGS-guided hybrid scheduling (paper §4.2).
+"""Deprecated shim — PSGS-guided scheduling moved to ``repro.serving.router``.
 
-Offline, a serving-workload generator measures end-to-end processing latency
-of batches with varying accumulated PSGS on both executors (host sampler vs
-device sampler). Per executor we fit an *average* and a *maximum* latency
-curve over PSGS. The four operating points of Fig. 6(b):
-
-    1 cpu_preferred        : host.max  ∩ device.avg
-    2 gpu_preferred        : host.avg  ∩ device.max
-    3 latency_preferred    : host.max  ∩ device.max   (bound tail latency)
-    4 throughput_preferred : host.avg  ∩ device.avg   (maximize throughput)
-
-At serving time the scheduler accumulates per-seed PSGS lookups for each
-batch (O(1) each) and routes the batch to the device only when the sum
-exceeds the selected threshold (§4.2.2).
+The binary threshold scheduler (paper §4.2, Fig. 6(b)) is now the 2-executor
+special case of :class:`repro.serving.router.CostModelRouter`. Import from
+``repro.serving`` in new code; this module keeps historical imports working.
 """
-from __future__ import annotations
+from repro.serving.router import (CalibrationResult, CostModelRouter,
+                                  HybridScheduler, LatencyCurve,
+                                  StaticScheduler, calibrate,
+                                  calibrate_executors)
 
-import dataclasses
-import time
-from typing import Callable, Sequence
-
-import numpy as np
-
-from repro.core.psgs import batch_psgs
-
-
-@dataclasses.dataclass
-class LatencyCurve:
-    """Piecewise-linear latency-vs-PSGS curve (avg + tail) fit from samples."""
-
-    psgs: np.ndarray      # (B,) bin centers, ascending
-    avg: np.ndarray       # (B,) mean latency per bin (seconds)
-    mx: np.ndarray        # (B,) tail (max or p99) latency per bin
-
-    @staticmethod
-    def fit(samples_psgs: Sequence[float], samples_lat: Sequence[float],
-            *, bins: int = 12, tail: float = 1.0) -> "LatencyCurve":
-        p = np.asarray(samples_psgs, dtype=np.float64)
-        l = np.asarray(samples_lat, dtype=np.float64)
-        order = np.argsort(p)
-        p, l = p[order], l[order]
-        edges = np.quantile(p, np.linspace(0, 1, bins + 1))
-        edges[-1] += 1e-9
-        centers, avgs, maxs = [], [], []
-        for i in range(bins):
-            m = (p >= edges[i]) & (p < edges[i + 1])
-            if not m.any():
-                continue
-            centers.append(p[m].mean())
-            avgs.append(l[m].mean())
-            maxs.append(np.quantile(l[m], tail) if tail < 1.0 else l[m].max())
-        return LatencyCurve(np.asarray(centers), np.asarray(avgs),
-                            np.asarray(maxs))
-
-    def eval_avg(self, q: float | np.ndarray) -> np.ndarray:
-        return np.interp(q, self.psgs, self.avg)
-
-    def eval_max(self, q: float | np.ndarray) -> np.ndarray:
-        return np.interp(q, self.psgs, self.mx)
-
-
-@dataclasses.dataclass
-class CalibrationResult:
-    host: LatencyCurve
-    device: LatencyCurve
-
-    def _cross(self, f_host: Callable, f_dev: Callable) -> float:
-        lo = min(self.host.psgs.min(), self.device.psgs.min())
-        hi = max(self.host.psgs.max(), self.device.psgs.max())
-        grid = np.linspace(lo, hi, 512)
-        diff = f_host(grid) - f_dev(grid)
-        sign = np.signbit(diff)
-        flips = np.flatnonzero(sign[1:] != sign[:-1])
-        if flips.size == 0:
-            # no intersection: host always faster → +inf threshold (never use
-            # device); device always faster → 0 (always device)
-            return float("inf") if diff[-1] < 0 else 0.0
-        i = flips[0]
-        # linear interpolation of the crossing, clamped to the measured range
-        x0, x1, d0, d1 = grid[i], grid[i + 1], diff[i], diff[i + 1]
-        denom = d1 - d0
-        if abs(denom) < 1e-15:
-            return float(x0)
-        return float(np.clip(x0 + (x1 - x0) * (0 - d0) / denom, lo, hi))
-
-    def threshold(self, policy: str) -> float:
-        h, d = self.host, self.device
-        if policy == "cpu_preferred":
-            return self._cross(h.eval_max, d.eval_avg)
-        if policy == "gpu_preferred":
-            return self._cross(h.eval_avg, d.eval_max)
-        if policy in ("latency_preferred", "strict"):
-            return self._cross(h.eval_max, d.eval_max)
-        if policy in ("throughput_preferred", "loose"):
-            return self._cross(h.eval_avg, d.eval_avg)
-        raise ValueError(f"unknown policy {policy!r}")
-
-
-def calibrate(host_run: Callable[[np.ndarray], None],
-              device_run: Callable[[np.ndarray], None],
-              batches: Sequence[np.ndarray], psgs_table: np.ndarray,
-              *, repeats: int = 3, warmup: int = 1,
-              tail: float = 1.0) -> CalibrationResult:
-    """Measure both executors on the same batches (paper: measurements taken
-    at near-full utilization with no queueing; here: steady-state repeats
-    after warmup) and fit the curves."""
-    def measure(run):
-        ps, ls = [], []
-        for b in batches:
-            q = batch_psgs(psgs_table, b)
-            for _ in range(warmup):
-                run(b)
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                run(b)
-                ls.append(time.perf_counter() - t0)
-                ps.append(q)
-        return ps, ls
-
-    hp, hl = measure(host_run)
-    dp, dl = measure(device_run)
-    return CalibrationResult(host=LatencyCurve.fit(hp, hl, tail=tail),
-                             device=LatencyCurve.fit(dp, dl, tail=tail))
-
-
-class HybridScheduler:
-    """Routes request batches between executors by accumulated PSGS."""
-
-    def __init__(self, psgs_table: np.ndarray, threshold: float,
-                 policy: str = "latency_preferred"):
-        self.psgs_table = psgs_table
-        self.threshold = float(threshold)
-        self.policy = policy
-        self.routed = {"host": 0, "device": 0}
-
-    @staticmethod
-    def from_calibration(psgs_table: np.ndarray, calib: CalibrationResult,
-                         policy: str = "latency_preferred") -> "HybridScheduler":
-        return HybridScheduler(psgs_table, calib.threshold(policy), policy)
-
-    def batch_cost(self, seeds: np.ndarray) -> float:
-        return batch_psgs(self.psgs_table, seeds)
-
-    def route(self, seeds: np.ndarray) -> str:
-        dest = "host" if self.batch_cost(seeds) < self.threshold else "device"
-        self.routed[dest] += 1
-        return dest
-
-
-class StaticScheduler:
-    """Baselines: always-host ("CPU sampling") / always-device ("GPU")."""
-
-    def __init__(self, dest: str):
-        assert dest in ("host", "device")
-        self.dest = dest
-        self.routed = {"host": 0, "device": 0}
-
-    def route(self, seeds: np.ndarray) -> str:
-        self.routed[self.dest] += 1
-        return self.dest
+__all__ = [
+    "LatencyCurve", "CalibrationResult", "calibrate", "calibrate_executors",
+    "CostModelRouter", "HybridScheduler", "StaticScheduler",
+]

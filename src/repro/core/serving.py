@@ -14,6 +14,11 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+from repro.serving.executors import pad_to_bucket  # canonical home moved
+
+__all__ = ["Request", "WorkloadGenerator", "DynamicBatcher", "batch_seeds",
+           "pad_to_bucket"]
+
 
 @dataclasses.dataclass
 class Request:
@@ -104,14 +109,3 @@ class DynamicBatcher:
 
 def batch_seeds(batch: list[Request]) -> np.ndarray:
     return np.concatenate([r.seeds for r in batch])
-
-
-def pad_to_bucket(arr: np.ndarray, *, min_size: int = 16,
-                  fill: int = -1) -> np.ndarray:
-    """Pad a dynamic-size host array up to the next power-of-two bucket so
-    jit re-compilation is bounded to O(log max_size) shapes."""
-    n = max(int(arr.shape[0]), 1)
-    size = max(min_size, 1 << (n - 1).bit_length())
-    out = np.full((size,) + arr.shape[1:], fill, dtype=arr.dtype)
-    out[:n] = arr
-    return out

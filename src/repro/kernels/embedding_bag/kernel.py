@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _bag_kernel(ids_ref, w_ref, table_ref, o_ref, acc_ref, cnt_ref, *,
                 bag: int, weighted: bool, mean: bool):
@@ -73,7 +75,7 @@ def embedding_bag_pallas(table: jnp.ndarray, ids: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((nb * block_rows, d), table.dtype),
         scratch_shapes=[pltpu.VMEM((block_rows, d), jnp.float32),
                         pltpu.VMEM((block_rows, 128), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(ids_p, w_p, table)

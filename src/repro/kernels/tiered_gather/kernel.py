@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _tiered_kernel(tier_ref, slot_ref, hot_ref, warm_ref, o_ref, *,
                    rows: int):
@@ -60,7 +62,7 @@ def tiered_gather_pallas(tier: jnp.ndarray, slot: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb * block_rows, d), hot.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(tier_p, slot_p, hot, warm)

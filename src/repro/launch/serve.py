@@ -1,11 +1,16 @@
-"""Quiver serving launcher — the paper's end-to-end path.
+"""Quiver serving launcher — the paper's end-to-end path on the
+executor-graph stack.
 
     PYTHONPATH=src python -m repro.launch.serve --nodes 20000 --requests 400 \
         --policy latency_preferred
 
 Builds the full stack: synthetic skewed graph → PSGS/FAP metrics → feature
-placement → tiered store → latency calibration → PSGS-guided hybrid
-scheduler → multiplexed serving pipeline; then reports throughput/latency.
+placement → tiered store → per-executor latency calibration → N-way
+cost-model router → futures-based serving engine; then reports
+throughput/latency. With ``--sharded`` (requires ≥2 devices, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU) a third,
+distributed executor joins the registry: mesh-local sampling + one-sided
+sharded feature reads.
 """
 from __future__ import annotations
 
@@ -16,12 +21,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DynamicBatcher, HybridScheduler, ServingEngine,
-                        StaticScheduler, TieredFeatureStore, TopologySpec,
-                        WorkloadGenerator, calibrate, compute_fap,
+from repro.compat import make_mesh
+from repro.core import (ShardedFeatureStore, TieredFeatureStore,
+                        TopologySpec, WorkloadGenerator, compute_fap,
                         compute_psgs, quiver_placement)
 from repro.graph import power_law_graph
 from repro.models.gnn_basic import sage_init, sage_layered
+from repro.serving import (CostModelRouter, DeviceExecutor, HostExecutor,
+                           ServingEngine, ShardedExecutor, StaticScheduler,
+                           calibrate_executors)
 
 
 def build_stack(*, nodes: int, avg_degree: float, d_feat: int,
@@ -52,6 +60,42 @@ def build_stack(*, nodes: int, avg_degree: float, d_feat: int,
     return graph, feats, psgs, fap, store, gen, infer_fn
 
 
+def build_executors(graph, store, fanouts, infer_fn, psgs, *,
+                    num_workers: int, max_batch: int, sharded: bool,
+                    feats=None, fap=None, hot_frac: float = 0.25):
+    """Executor registry: host + device, plus the distributed (sharded)
+    executor when requested and the runtime has ≥2 devices."""
+    executors = {
+        "host": HostExecutor(graph, store, fanouts, infer_fn,
+                             capacity=num_workers, psgs_table=psgs),
+        "device": DeviceExecutor(graph.device_arrays(), store, fanouts,
+                                 infer_fn, max_batch=max_batch,
+                                 capacity=num_workers, psgs_table=psgs),
+    }
+    if sharded:
+        world = len(jax.devices())
+        if world < 2:
+            raise SystemExit(
+                "--sharded needs ≥2 devices; on CPU set "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        mesh = make_mesh((world,), ("x",))
+        # rebuild a placement whose warm tier is sharded over the real mesh;
+        # size HBM (hot+warm) to cover every node so the sharded store —
+        # which serves only the HBM tiers — is exact for any batch
+        topo = TopologySpec(num_pods=1, devices_per_pod=world,
+                            rows_per_device=max(-(-graph.num_nodes // world),
+                                                64),
+                            rows_host=max(graph.num_nodes // 2, 64),
+                            hot_replicate_fraction=hot_frac)
+        splan = quiver_placement(fap, topo)
+        sstore = ShardedFeatureStore.from_tiered(
+            TieredFeatureStore.build(feats, splan), mesh, "x")
+        executors["sharded"] = ShardedExecutor(
+            mesh, "x", graph.device_arrays(), sstore, fanouts, infer_fn,
+            max_batch=max_batch, psgs_table=psgs, tier_table=splan.tier)
+    return executors
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--nodes", type=int, default=20000)
@@ -66,6 +110,12 @@ def main() -> None:
                             "latency_preferred", "throughput_preferred",
                             "host_only", "device_only"])
     p.add_argument("--hot-frac", type=float, default=0.25)
+    p.add_argument("--sharded", action="store_true",
+                   help="register the distributed executor (needs ≥2 devices)")
+    p.add_argument("--max-inflight", type=int, default=64,
+                   help="admission window: outstanding batches")
+    p.add_argument("--admission", default="wait", choices=["wait", "shed"],
+                   help="behavior when the admission window is full")
     args = p.parse_args()
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
 
@@ -75,29 +125,42 @@ def main() -> None:
     print(f"[serve] graph: {graph.num_nodes} nodes / {graph.num_edges} edges;"
           f" tiers: {store.plan.tier_counts()}")
 
-    if args.policy in ("host_only", "device_only"):
-        sched = StaticScheduler("host" if args.policy == "host_only"
-                                else "device")
+    static_policy = args.policy in ("host_only", "device_only")
+    if args.sharded and static_policy:
+        print("[serve] note: static policy can never route to the sharded "
+              "executor; skipping its construction")
+    executors = build_executors(graph, store, fanouts, infer_fn, psgs,
+                                num_workers=args.workers,
+                                max_batch=args.batch,
+                                sharded=args.sharded and not static_policy,
+                                feats=feats, fap=fap,
+                                hot_frac=args.hot_frac)
+    print(f"[serve] executors: {sorted(executors)}")
+
+    if static_policy:
+        router = StaticScheduler("host" if args.policy == "host_only"
+                                 else "device")
     else:
-        # calibration (paper Fig. 6): measure both executors across PSGS range
-        engine_probe = ServingEngine(graph, store, fanouts, infer_fn,
-                                     StaticScheduler("host"), num_workers=1)
+        # calibration (paper Fig. 6), generalized to every registered
+        # executor: measure across the PSGS range, fit avg+tail curves
         batches = []
         order = np.argsort(psgs)
         for q in np.linspace(0.05, 0.95, 8):
             seeds = order[int(q * graph.num_nodes):][:args.batch]
             batches.append(seeds.astype(np.int64))
-        calib = calibrate(
-            lambda b: jax.block_until_ready(engine_probe._host_path(b)),
-            lambda b: jax.block_until_ready(engine_probe._device_path(b)),
-            batches, psgs, repeats=2)
-        thr = calib.threshold(args.policy)
-        print(f"[serve] calibrated threshold ({args.policy}): {thr:.1f}")
-        sched = HybridScheduler(psgs, thr, args.policy)
+        curves = calibrate_executors(executors, batches, psgs, repeats=2)
+        router = CostModelRouter.from_curves(psgs, curves, args.policy,
+                                             executors=executors)
+        mid = float(np.median(psgs)) * args.batch
+        ests = {n: router.estimate(n, mid) * 1e3 for n in router.names}
+        print(f"[serve] calibrated est @median-batch (ms): "
+              f"{ {k: round(v, 2) for k, v in ests.items()} }")
 
-    engine = ServingEngine(graph, store, fanouts, infer_fn, sched,
-                           num_workers=args.workers)
+    engine = ServingEngine(executors, router,
+                           max_inflight=args.max_inflight,
+                           admission=args.admission)
     reqs = list(gen.stream(args.requests, seeds_per_request=args.batch))
+    engine.warmup([reqs[0]])
     batches = [[r] for r in reqs]
     metrics = engine.run(batches)
     print(json.dumps(metrics.summary(), indent=2))

@@ -1,0 +1,33 @@
+"""Executor-graph serving stack: pluggable executors, N-way cost-model
+routing, and the futures-based serving engine.
+
+Layering (each importable without ``repro.core``; the legacy
+``repro.core.{pipeline,scheduler}`` modules are thin shims onto this
+package):
+
+    executors.py  Executor protocol + Host/Device/Sharded executors
+    router.py     LatencyCurve calibration + CostModelRouter (N-way) and the
+                  binary HybridScheduler / StaticScheduler special cases
+    engine.py     ServingEngine: admission control, per-batch futures
+
+To add a new executor: subclass ``BaseExecutor``, implement
+``process(seeds) -> one output row per seed``, calibrate it with
+``calibrate_executors`` and register the curve on a ``CostModelRouter``
+plus the executor on the ``ServingEngine``.
+"""
+from repro.serving.executors import (BaseExecutor, DeviceExecutor, Executor,
+                                     HostExecutor, ShardedExecutor,
+                                     pad_to_bucket)
+from repro.serving.router import (POLICIES, CalibrationResult,
+                                  CostModelRouter, HybridScheduler,
+                                  LatencyCurve, StaticScheduler, calibrate,
+                                  calibrate_executors)
+from repro.serving.engine import ServeMetrics, ServingEngine
+
+__all__ = [
+    "Executor", "BaseExecutor", "HostExecutor", "DeviceExecutor",
+    "ShardedExecutor", "pad_to_bucket", "POLICIES", "LatencyCurve",
+    "CalibrationResult", "calibrate", "calibrate_executors",
+    "CostModelRouter", "HybridScheduler", "StaticScheduler",
+    "ServingEngine", "ServeMetrics",
+]

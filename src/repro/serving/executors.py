@@ -1,0 +1,296 @@
+"""Pluggable serving executors (paper §4.2–§4.3, generalized).
+
+Quiver's serving contribution is *workload-aware routing between executors*:
+the paper ships exactly two (host sampler vs device sampler). This module
+turns "executor" into a first-class, pluggable unit so the router can choose
+among N of them:
+
+  ``HostExecutor``     exact dynamic-shape sampling on the host (CPU path).
+  ``DeviceExecutor``   padded static-shape sampling on one accelerator
+                       (GPU path); oversized batches are *chunked*, never
+                       silently truncated.
+  ``ShardedExecutor``  the distributed path: mesh-local sampling under
+                       ``shard_map`` plus one-sided sharded feature reads
+                       through ``ShardedFeatureStore.lookup``.
+
+Every executor owns ``capacity`` worker lanes (the paper's "multiplexed
+pipelines in a processor", §4.3(1)) and exposes
+
+  ``cost(seeds)``   accumulated PSGS of the batch — O(1) per seed,
+  ``submit(seeds)`` → ``concurrent.futures.Future`` of the model output,
+  ``capacity``      number of batches it can process concurrently.
+
+This module must stay importable without ``repro.core`` (the core package
+shims onto it), so it depends only on ``repro.graph`` + numpy/jax.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Optional, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import shard_map
+from repro.graph.sampler import (_sample_one_hop, device_sample,
+                                 host_sample_dense)
+
+
+def pad_to_bucket(arr: np.ndarray, *, min_size: int = 16,
+                  fill: int = -1) -> np.ndarray:
+    """Pad a dynamic-size host array up to the next power-of-two bucket so
+    jit re-compilation is bounded to O(log max_size) shapes."""
+    n = max(int(arr.shape[0]), 1)
+    size = max(min_size, 1 << (n - 1).bit_length())
+    out = np.full((size,) + arr.shape[1:], fill, dtype=arr.dtype)
+    out[:arr.shape[0]] = arr  # arr may be empty: pad-only bucket
+    return out
+
+
+def _accumulated_psgs(psgs_table: np.ndarray, seeds: np.ndarray) -> float:
+    """Accumulated PSGS of a batch (paper §4.2.2). Local copy of
+    ``repro.core.psgs.batch_psgs`` so this package stays core-free."""
+    seeds = np.asarray(seeds)
+    valid = seeds >= 0
+    return float(psgs_table[seeds[valid]].sum())
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """What the router and engine require of an executor."""
+
+    name: str
+    kind: str           # "host" | "device" | ... (policy stat selection)
+    capacity: int
+
+    def cost(self, seeds: np.ndarray) -> float: ...
+
+    def submit(self, seeds: np.ndarray) -> Future: ...
+
+
+class BaseExecutor:
+    """Shared machinery: worker lanes, PSGS costing, inflight accounting.
+
+    Subclasses implement ``process(seeds) -> jnp.ndarray`` returning one
+    output row per seed (padding is an internal concern — callers never see
+    truncated or zero-filled extra rows).
+    """
+
+    kind = "device"
+
+    def __init__(self, name: str, *, capacity: int = 1,
+                 psgs_table: Optional[np.ndarray] = None,
+                 rng_seed: int = 0):
+        self.name = name
+        self.capacity = int(capacity)
+        self.psgs_table = psgs_table
+        self._pool = ThreadPoolExecutor(max_workers=self.capacity,
+                                        thread_name_prefix=f"exec-{name}")
+        self._lock = threading.Lock()
+        self._inflight = 0
+        self._key = jax.random.key(rng_seed)
+        self._seed_rng = np.random.default_rng(rng_seed)
+
+    # -- cost model signal ---------------------------------------------------
+    def cost(self, seeds: np.ndarray) -> float:
+        """Routing signal: accumulated PSGS (or batch size if no table)."""
+        seeds = np.asarray(seeds)
+        if self.psgs_table is None:
+            return float((seeds >= 0).sum())
+        return _accumulated_psgs(self.psgs_table, seeds)
+
+    # -- rng (thread-safe draws for concurrent lanes) ------------------------
+    def _next_key(self) -> jax.Array:
+        with self._lock:
+            self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _child_rng(self) -> np.random.Generator:
+        with self._lock:
+            seed = int(self._seed_rng.integers(0, 2**63))
+        return np.random.default_rng(seed)
+
+    # -- execution -----------------------------------------------------------
+    @property
+    def inflight(self) -> int:
+        with self._lock:
+            return self._inflight
+
+    def process(self, seeds: np.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def supports(self, seeds: np.ndarray) -> bool:
+        """Eligibility for a batch — routers skip executors returning False
+        (e.g. the sharded executor cannot serve cold-tier seeds exactly)."""
+        return True
+
+    def run(self, seeds: np.ndarray) -> jnp.ndarray:
+        """Synchronous convenience path (calibration, warmup, debugging)."""
+        out = self.process(np.asarray(seeds))
+        jax.block_until_ready(out)
+        return out
+
+    def submit(self, seeds: np.ndarray) -> Future:
+        with self._lock:
+            self._inflight += 1
+        fut = self._pool.submit(self.run, seeds)
+        fut.add_done_callback(self._one_done)
+        return fut
+
+    def _one_done(self, _fut: Future) -> None:
+        with self._lock:
+            self._inflight -= 1
+
+    def warmup(self, seeds: np.ndarray, *, rounds: int = 2) -> None:
+        for _ in range(rounds):
+            self.run(seeds)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
+
+class HostExecutor(BaseExecutor):
+    """Exact host sampling (the 'CPU path') in the dense fan-out layout;
+    seeds bucket-padded so jit shapes stay O(log max_batch)."""
+
+    kind = "host"
+
+    def __init__(self, graph, store, fanouts: Sequence[int],
+                 infer_fn: Callable, *, capacity: int = 1,
+                 psgs_table: Optional[np.ndarray] = None, rng_seed: int = 0,
+                 name: str = "host"):
+        super().__init__(name, capacity=capacity, psgs_table=psgs_table,
+                         rng_seed=rng_seed)
+        self.graph = graph
+        self.store = store
+        self.fanouts = tuple(fanouts)
+        self.infer_fn = infer_fn
+
+    def process(self, seeds: np.ndarray) -> jnp.ndarray:
+        n = int(seeds.shape[0])
+        seeds_p = pad_to_bucket(np.asarray(seeds).astype(np.int32))
+        hops_np = host_sample_dense(self._child_rng(), self.graph, seeds_p,
+                                    self.fanouts)
+        hops = [jnp.asarray(h) for h in hops_np]
+        hop_feats = [self.store.lookup(h) for h in hops]
+        return self.infer_fn(hop_feats, hops)[:n]
+
+
+class DeviceExecutor(BaseExecutor):
+    """Fully padded on-device pipeline (the 'GPU path'): one static shape
+    (``max_batch``), jitted end to end. Batches larger than ``max_batch``
+    are processed in ``max_batch``-sized chunks and re-concatenated — no
+    seed is ever dropped (the old ``_device_path`` silently truncated)."""
+
+    kind = "device"
+
+    def __init__(self, graph_dev: tuple[jnp.ndarray, jnp.ndarray], store,
+                 fanouts: Sequence[int], infer_fn: Callable, *,
+                 max_batch: int = 128, capacity: int = 1,
+                 psgs_table: Optional[np.ndarray] = None, rng_seed: int = 0,
+                 name: str = "device"):
+        super().__init__(name, capacity=capacity, psgs_table=psgs_table,
+                         rng_seed=rng_seed)
+        self.graph_dev = graph_dev
+        self.store = store
+        self.fanouts = tuple(fanouts)
+        self.infer_fn = infer_fn
+        self.max_batch = int(max_batch)
+
+    def process(self, seeds: np.ndarray) -> jnp.ndarray:
+        seeds = np.asarray(seeds)
+        n = int(seeds.shape[0])
+        outs = []
+        for lo in range(0, max(n, 1), self.max_batch):
+            chunk = seeds[lo:lo + self.max_batch]
+            seeds_p = np.full((self.max_batch,), -1, np.int32)
+            seeds_p[:chunk.shape[0]] = chunk
+            hops = device_sample(self._next_key(), *self.graph_dev,
+                                 jnp.asarray(seeds_p), self.fanouts)
+            hop_feats = [self.store.lookup(h) for h in hops]
+            outs.append(self.infer_fn(hop_feats, hops)[:chunk.shape[0]])
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+
+class ShardedExecutor(BaseExecutor):
+    """Distributed serving path over a device mesh axis.
+
+    Sampling runs mesh-local under ``shard_map`` (each device samples its
+    contiguous slice of the seed vector against the replicated CSR topology);
+    features come from ``ShardedFeatureStore.lookup`` — the one-sided
+    allgather/reduce-scatter exchange of paper §5.3. Rows placed on the
+    HOST/DISK tiers resolve to zeros here (the sharded store serves the
+    HBM tiers only): either build the sharded placement with full HBM
+    coverage, or pass ``tier_table`` (the placement's per-node tier array)
+    so :meth:`supports` declares cold-seed batches ineligible and the
+    router keeps them on the host executor.
+
+    ``max_batch`` is rounded up to a multiple of the mesh world size so the
+    per-device shard is static.
+    """
+
+    kind = "device"
+
+    def __init__(self, mesh, axis_name: str,
+                 graph_dev: tuple[jnp.ndarray, jnp.ndarray],
+                 sharded_store, fanouts: Sequence[int], infer_fn: Callable, *,
+                 max_batch: int = 128, capacity: int = 1,
+                 psgs_table: Optional[np.ndarray] = None,
+                 tier_table: Optional[np.ndarray] = None, rng_seed: int = 0,
+                 name: str = "sharded"):
+        super().__init__(name, capacity=capacity, psgs_table=psgs_table,
+                         rng_seed=rng_seed)
+        self.tier_table = tier_table
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        self.mesh = mesh
+        self.axis = axis_name
+        self.sstore = sharded_store
+        self.world = int(sharded_store.world)
+        self.max_batch = -(-int(max_batch) // self.world) * self.world
+        self.fanouts = tuple(fanouts)
+        self.infer_fn = infer_fn
+        rep = NamedSharding(mesh, P())
+        self.graph_dev = tuple(jax.device_put(a, rep) for a in graph_dev)
+
+        fanouts_t = self.fanouts
+        axis = axis_name
+
+        def sample_body(indptr, indices, seeds_l, key):
+            # per-device stream: fold the lane key with the device index
+            key = jax.random.fold_in(key, jax.lax.axis_index(axis))
+            hops = [seeds_l]
+            frontier = seeds_l
+            for fan in fanouts_t:
+                key, sub = jax.random.split(key)
+                frontier = _sample_one_hop(sub, indptr, indices, frontier,
+                                           fan)
+                hops.append(frontier)
+            return tuple(hops)
+
+        self._sample = jax.jit(shard_map(
+            sample_body, mesh=mesh,
+            in_specs=(P(), P(), P(axis), P()), out_specs=P(axis)))
+
+    def supports(self, seeds: np.ndarray) -> bool:
+        if self.tier_table is None:
+            return True
+        seeds = np.asarray(seeds)
+        seeds = seeds[seeds >= 0]
+        # tiers 0/1 are the HBM (hot/warm) tiers the sharded store serves
+        return bool((self.tier_table[seeds] <= 1).all())
+
+    def process(self, seeds: np.ndarray) -> jnp.ndarray:
+        seeds = np.asarray(seeds)
+        n = int(seeds.shape[0])
+        outs = []
+        for lo in range(0, max(n, 1), self.max_batch):
+            chunk = seeds[lo:lo + self.max_batch]
+            seeds_p = np.full((self.max_batch,), -1, np.int32)
+            seeds_p[:chunk.shape[0]] = chunk
+            hops = list(self._sample(*self.graph_dev, jnp.asarray(seeds_p),
+                                     self._next_key()))
+            hop_feats = [self.sstore.lookup(h) for h in hops]
+            outs.append(self.infer_fn(hop_feats, hops)[:chunk.shape[0]])
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)

@@ -1,0 +1,307 @@
+"""Cost-model routing over a registry of executors (paper §4.2, generalized).
+
+Offline, a serving-workload generator measures end-to-end processing latency
+of batches with varying accumulated PSGS on every executor. Per executor we
+fit an *average* and a *maximum* latency curve over PSGS
+(:class:`LatencyCurve`). The four operating points of Fig. 6(b) select which
+statistic each executor is judged by:
+
+    1 cpu_preferred        : host.max  vs device.avg
+    2 gpu_preferred        : host.avg  vs device.max
+    3 latency_preferred    : host.max  vs device.max   (bound tail latency)
+    4 throughput_preferred : host.avg  vs device.avg   (maximize throughput)
+
+The paper's scheduler reduces this to a single PSGS threshold because it has
+exactly two executors and single-crossing curves; :class:`HybridScheduler`
+(kept below, re-exported from ``repro.core.scheduler``) is that special case.
+:class:`CostModelRouter` is the N-way generalization: a batch goes to the
+executor whose policy-selected curve value at the batch's accumulated PSGS is
+minimal — with two executors this is exactly the threshold rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.executors import Executor, _accumulated_psgs
+
+POLICIES = ("cpu_preferred", "gpu_preferred", "latency_preferred",
+            "throughput_preferred")
+
+
+def _policy_stat(policy: str, kind: str) -> str:
+    """Which curve ("avg" | "max") policy ``policy`` judges a ``kind``-kind
+    executor by. Host-kind executors are the CPU sampler of Fig. 6(b); every
+    other kind (device, sharded, ...) takes the device role."""
+    if policy in ("latency_preferred", "strict"):
+        return "max"
+    if policy in ("throughput_preferred", "loose"):
+        return "avg"
+    if policy == "cpu_preferred":
+        return "max" if kind == "host" else "avg"
+    if policy == "gpu_preferred":
+        return "avg" if kind == "host" else "max"
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+@dataclasses.dataclass
+class LatencyCurve:
+    """Piecewise-linear latency-vs-PSGS curve (avg + tail) fit from samples."""
+
+    psgs: np.ndarray      # (B,) bin centers, ascending
+    avg: np.ndarray       # (B,) mean latency per bin (seconds)
+    mx: np.ndarray        # (B,) tail (max or p99) latency per bin
+
+    @staticmethod
+    def fit(samples_psgs: Sequence[float], samples_lat: Sequence[float],
+            *, bins: int = 12, tail: float = 1.0) -> "LatencyCurve":
+        p = np.asarray(samples_psgs, dtype=np.float64)
+        l = np.asarray(samples_lat, dtype=np.float64)
+        order = np.argsort(p)
+        p, l = p[order], l[order]
+        edges = np.quantile(p, np.linspace(0, 1, bins + 1))
+        edges[-1] += 1e-9
+        centers, avgs, maxs = [], [], []
+        for i in range(bins):
+            m = (p >= edges[i]) & (p < edges[i + 1])
+            if not m.any():
+                continue
+            centers.append(p[m].mean())
+            avgs.append(l[m].mean())
+            maxs.append(np.quantile(l[m], tail) if tail < 1.0 else l[m].max())
+        return LatencyCurve(np.asarray(centers), np.asarray(avgs),
+                            np.asarray(maxs))
+
+    def eval_avg(self, q: float | np.ndarray) -> np.ndarray:
+        return np.interp(q, self.psgs, self.avg)
+
+    def eval_max(self, q: float | np.ndarray) -> np.ndarray:
+        return np.interp(q, self.psgs, self.mx)
+
+    def eval(self, q: float | np.ndarray, stat: str) -> np.ndarray:
+        return self.eval_max(q) if stat == "max" else self.eval_avg(q)
+
+
+@dataclasses.dataclass
+class CalibrationResult:
+    """Binary host/device calibration (the paper's Fig. 6 setting)."""
+
+    host: LatencyCurve
+    device: LatencyCurve
+
+    def _cross(self, f_host: Callable, f_dev: Callable) -> float:
+        lo = min(self.host.psgs.min(), self.device.psgs.min())
+        hi = max(self.host.psgs.max(), self.device.psgs.max())
+        grid = np.linspace(lo, hi, 512)
+        diff = f_host(grid) - f_dev(grid)
+        sign = np.signbit(diff)
+        flips = np.flatnonzero(sign[1:] != sign[:-1])
+        if flips.size == 0:
+            # no intersection: host always faster → +inf threshold (never use
+            # device); device always faster → 0 (always device)
+            return float("inf") if diff[-1] < 0 else 0.0
+        i = flips[0]
+        # linear interpolation of the crossing, clamped to the measured range
+        x0, x1, d0, d1 = grid[i], grid[i + 1], diff[i], diff[i + 1]
+        denom = d1 - d0
+        if abs(denom) < 1e-15:
+            return float(x0)
+        return float(np.clip(x0 + (x1 - x0) * (0 - d0) / denom, lo, hi))
+
+    def threshold(self, policy: str) -> float:
+        h, d = self.host, self.device
+        if policy == "cpu_preferred":
+            return self._cross(h.eval_max, d.eval_avg)
+        if policy == "gpu_preferred":
+            return self._cross(h.eval_avg, d.eval_max)
+        if policy in ("latency_preferred", "strict"):
+            return self._cross(h.eval_max, d.eval_max)
+        if policy in ("throughput_preferred", "loose"):
+            return self._cross(h.eval_avg, d.eval_avg)
+        raise ValueError(f"unknown policy {policy!r}")
+
+
+def calibrate_executors(executors: Mapping[str, Callable] | Sequence[Executor],
+                        batches: Sequence[np.ndarray],
+                        psgs_table: np.ndarray, *, repeats: int = 3,
+                        warmup: int = 1, tail: float = 1.0
+                        ) -> dict[str, LatencyCurve]:
+    """Measure every executor on the same batches and fit one
+    :class:`LatencyCurve` each (N-way generalization of :func:`calibrate`).
+
+    ``executors`` maps name → a synchronous runner — either a plain callable
+    taking a seed array or an :class:`Executor` (its blocking ``run`` is
+    used). Measurements follow the paper's protocol: steady-state repeats
+    after warmup, no queueing.
+    """
+    if not isinstance(executors, Mapping):
+        executors = {ex.name: ex for ex in executors}
+    curves: dict[str, LatencyCurve] = {}
+    for name, ex in executors.items():
+        run = ex.run if hasattr(ex, "run") else ex
+        ps, ls = [], []
+        for b in batches:
+            q = _accumulated_psgs(psgs_table, b)
+            for _ in range(warmup):
+                run(b)
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                run(b)
+                ls.append(time.perf_counter() - t0)
+                ps.append(q)
+        curves[name] = LatencyCurve.fit(ps, ls, tail=tail)
+    return curves
+
+
+def calibrate(host_run: Callable[[np.ndarray], None],
+              device_run: Callable[[np.ndarray], None],
+              batches: Sequence[np.ndarray], psgs_table: np.ndarray,
+              *, repeats: int = 3, warmup: int = 1,
+              tail: float = 1.0) -> CalibrationResult:
+    """Binary special case kept for the paper's Fig. 6 experiments."""
+    curves = calibrate_executors({"host": host_run, "device": device_run},
+                                 batches, psgs_table, repeats=repeats,
+                                 warmup=warmup, tail=tail)
+    return CalibrationResult(host=curves["host"], device=curves["device"])
+
+
+class CostModelRouter:
+    """N-way routing over a registry of calibrated executors.
+
+    ``route(seeds)`` evaluates every registered executor's policy-selected
+    latency curve at the batch's accumulated PSGS and picks the minimum
+    (ties break toward earlier registration). With ``load_aware=True`` the
+    estimate is additionally scaled by ``1 + inflight/capacity`` for
+    registered executor objects, shifting load off busy executors — off by
+    default so the two-executor case stays bit-identical to the paper's
+    threshold policies.
+    """
+
+    def __init__(self, psgs_table: np.ndarray,
+                 policy: str = "latency_preferred", *,
+                 load_aware: bool = False):
+        self.psgs_table = psgs_table
+        self.policy = policy
+        self.load_aware = load_aware
+        self._curves: dict[str, LatencyCurve] = {}
+        self._kinds: dict[str, str] = {}
+        self._executors: dict[str, Executor] = {}
+        self.routed: dict[str, int] = {}
+
+    # -- registry ------------------------------------------------------------
+    def register(self, name: str, curve: LatencyCurve, *,
+                 kind: Optional[str] = None,
+                 executor: Optional[Executor] = None) -> "CostModelRouter":
+        if kind is None:
+            kind = getattr(executor, "kind", "device")
+        self._curves[name] = curve
+        self._kinds[name] = kind
+        if executor is not None:
+            self._executors[name] = executor
+        self.routed.setdefault(name, 0)
+        return self
+
+    @property
+    def names(self) -> list[str]:
+        return list(self._curves)
+
+    @staticmethod
+    def from_curves(psgs_table: np.ndarray,
+                    curves: Mapping[str, LatencyCurve],
+                    policy: str = "latency_preferred", *,
+                    kinds: Optional[Mapping[str, str]] = None,
+                    executors: Optional[Mapping[str, Executor]] = None,
+                    load_aware: bool = False) -> "CostModelRouter":
+        r = CostModelRouter(psgs_table, policy, load_aware=load_aware)
+        for name, curve in curves.items():
+            executor = (executors or {}).get(name)
+            if kinds and name in kinds:
+                kind = kinds[name]
+            elif executor is not None:
+                kind = getattr(executor, "kind", "device")
+            else:
+                kind = "host" if name == "host" else "device"
+            r.register(name, curve, kind=kind, executor=executor)
+        return r
+
+    @staticmethod
+    def from_calibration(psgs_table: np.ndarray, calib: CalibrationResult,
+                         policy: str = "latency_preferred"
+                         ) -> "CostModelRouter":
+        """The 2-executor special case: host+device curves from a binary
+        calibration — routing equals the PSGS-threshold rule."""
+        return CostModelRouter.from_curves(
+            psgs_table, {"host": calib.host, "device": calib.device}, policy)
+
+    # -- routing -------------------------------------------------------------
+    def batch_cost(self, seeds: np.ndarray) -> float:
+        return _accumulated_psgs(self.psgs_table, seeds)
+
+    def estimate(self, name: str, q: float) -> float:
+        stat = _policy_stat(self.policy, self._kinds[name])
+        est = float(self._curves[name].eval(q, stat))
+        if self.load_aware and name in self._executors:
+            ex = self._executors[name]
+            est *= 1.0 + ex.inflight / max(ex.capacity, 1)
+        return est
+
+    def _eligible(self, seeds: np.ndarray) -> list[str]:
+        names = [n for n in self._curves
+                 if n not in self._executors
+                 or getattr(self._executors[n], "supports",
+                            lambda _s: True)(seeds)]
+        # degrade rather than refuse: if nothing claims support, consider all
+        return names or list(self._curves)
+
+    def route(self, seeds: np.ndarray) -> str:
+        if not self._curves:
+            raise RuntimeError("no executors registered")
+        q = self.batch_cost(seeds)
+        best, best_e = None, float("inf")
+        for name in self._eligible(seeds):
+            e = self.estimate(name, q)
+            if e < best_e:
+                best, best_e = name, e
+        self.routed[best] += 1
+        return best
+
+
+class HybridScheduler:
+    """Binary PSGS-threshold routing — the paper's scheduler, kept as the
+    2-executor special case of :class:`CostModelRouter`."""
+
+    def __init__(self, psgs_table: np.ndarray, threshold: float,
+                 policy: str = "latency_preferred"):
+        self.psgs_table = psgs_table
+        self.threshold = float(threshold)
+        self.policy = policy
+        self.routed = {"host": 0, "device": 0}
+
+    @staticmethod
+    def from_calibration(psgs_table: np.ndarray, calib: CalibrationResult,
+                         policy: str = "latency_preferred") -> "HybridScheduler":
+        return HybridScheduler(psgs_table, calib.threshold(policy), policy)
+
+    def batch_cost(self, seeds: np.ndarray) -> float:
+        return _accumulated_psgs(self.psgs_table, seeds)
+
+    def route(self, seeds: np.ndarray) -> str:
+        dest = "host" if self.batch_cost(seeds) < self.threshold else "device"
+        self.routed[dest] += 1
+        return dest
+
+
+class StaticScheduler:
+    """Baselines: always route to one named executor ("CPU sampling" /
+    "GPU"; any registered executor name works)."""
+
+    def __init__(self, dest: str):
+        self.dest = dest
+        self.routed: dict[str, int] = {dest: 0}
+
+    def route(self, seeds: np.ndarray) -> str:
+        self.routed[self.dest] += 1
+        return self.dest

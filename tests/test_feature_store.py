@@ -73,8 +73,8 @@ topo = TopologySpec(num_pods=2, devices_per_pod=4, rows_per_device=128,
                     rows_host=256, hot_replicate_fraction=0.25)
 plan = quiver_placement(fap, topo)
 store = TieredFeatureStore.build(feats, plan)
-mesh = jax.make_mesh((8,), ("x",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("x",))
 ss = ShardedFeatureStore.from_tiered(store, mesh, "x")
 ids = np.random.default_rng(2).integers(0, n, size=8 * 32).astype(np.int32)
 tt = plan.tier[ids]

@@ -1,6 +1,7 @@
 """Feature placement invariants (paper §5.2) + baselines + expert placement."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (TopologySpec, degree_placement, expert_placement,
