@@ -20,6 +20,7 @@ MODULES = [
     "feature_collection",  # Fig. 16
     "serve_throughput",    # Fig. 9
     "policy_cdf",          # Fig. 10
+    "workload_drift",      # online adaptation vs frozen placement
     "scalability",         # Fig. 11/12 (from dry-run artifacts)
     "roofline",            # roofline report (from dry-run artifacts)
 ]

@@ -15,7 +15,8 @@ import numpy as np
 
 from repro.core import DynamicBatcher
 from repro.launch.serve import build_stack
-from repro.serving import (CalibrationResult, CostModelRouter,
+from repro.serving import (AdaptiveConfig, AdaptiveController,
+                           CalibrationResult, CostModelRouter,
                            DeviceExecutor, HostExecutor, ServingEngine,
                            calibrate_executors)
 
@@ -25,35 +26,51 @@ def main() -> None:
     p.add_argument("--requests", type=int, default=150)
     p.add_argument("--nodes", type=int, default=8000)
     p.add_argument("--batch-seeds", type=int, default=8)
+    p.add_argument("--adaptive", action="store_true",
+                   help="hook the online workload-adaptation loop into the "
+                        "engine (live FAP re-placement + drift refit)")
     args = p.parse_args()
 
-    graph, feats, psgs, fap, store, gen, infer_fn = build_stack(
-        nodes=args.nodes, avg_degree=10.0, d_feat=64, fanouts=(6, 4),
-        hot_frac=0.3)
+    def fresh_stack():
+        graph, feats, psgs, fap, store, gen, infer_fn = build_stack(
+            nodes=args.nodes, avg_degree=10.0, d_feat=64, fanouts=(6, 4),
+            hot_frac=0.3)
+        executors = {
+            "host": HostExecutor(graph, store, (6, 4), infer_fn, capacity=2,
+                                 psgs_table=psgs),
+            "device": DeviceExecutor(graph.device_arrays(), store, (6, 4),
+                                     infer_fn, max_batch=32, capacity=2,
+                                     psgs_table=psgs),
+        }
+        # calibrate every executor (paper Fig. 6)
+        order = np.argsort(psgs)
+        batches = [order[int(q * len(order)):][:args.batch_seeds]
+                   .astype(np.int64) for q in np.linspace(0.05, 0.95, 6)]
+        curves = calibrate_executors(executors, batches, psgs, repeats=2)
+        return graph, psgs, store, gen, executors, curves
+
+    graph, psgs, store, gen, executors, curves = fresh_stack()
     print(f"[stack] {graph.num_nodes} nodes, tiers "
           f"{store.plan.tier_counts()}")
 
-    executors = {
-        "host": HostExecutor(graph, store, (6, 4), infer_fn, capacity=2,
-                             psgs_table=psgs),
-        "device": DeviceExecutor(graph.device_arrays(), store, (6, 4),
-                                 infer_fn, max_batch=32, capacity=2,
-                                 psgs_table=psgs),
-    }
-
-    # calibrate every executor once (paper Fig. 6)
-    order = np.argsort(psgs)
-    batches = [order[int(q * len(order)):][:args.batch_seeds]
-               .astype(np.int64) for q in np.linspace(0.05, 0.95, 6)]
-    curves = calibrate_executors(executors, batches, psgs, repeats=2)
-    calib = CalibrationResult(host=curves["host"], device=curves["device"])
-
     report = {}
     for policy in ("latency_preferred", "throughput_preferred"):
+        if args.adaptive and report:
+            # live migration mutates the store: rebuild per policy so one
+            # policy's adaptation cannot contaminate the next one's run
+            graph, psgs, store, gen, executors, curves = fresh_stack()
+        calib = CalibrationResult(host=curves["host"],
+                                  device=curves["device"])
         thr = calib.threshold(policy)  # PSGS budget for the batcher
         router = CostModelRouter.from_curves(psgs, curves, policy,
                                              executors=executors)
-        engine = ServingEngine(executors, router, max_inflight=64)
+        controller = None
+        if args.adaptive:
+            controller = AdaptiveController(
+                graph, (6, 4), store, router, psgs_table=psgs,
+                config=AdaptiveConfig(interval_batches=16))
+        engine = ServingEngine(executors, router, max_inflight=64,
+                               hooks=[controller] if controller else [])
         gen.rng = np.random.default_rng(5)
         reqs = list(gen.stream(args.requests,
                                seeds_per_request=args.batch_seeds))
@@ -64,6 +81,8 @@ def main() -> None:
                                  psgs_table=psgs, max_batch=16)
         m = engine.serve_stream(reqs, batcher, gap_s=0.002)
         report[policy] = {"threshold": thr, **m.summary()}
+        if controller is not None:
+            report[policy]["adaptation"] = controller.report()
     print(json.dumps(report, indent=2))
 
 

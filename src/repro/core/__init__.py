@@ -7,7 +7,8 @@ from repro.core.pipeline import ServeMetrics, ServingEngine
 from repro.core.placement import (PlacementPlan, TopologySpec,
                                   degree_placement, expert_placement,
                                   freq_placement, hash_placement,
-                                  p3_placement, quiver_placement)
+                                  migration_pairs, p3_placement,
+                                  quiver_placement)
 from repro.core.psgs import batch_psgs, compute_psgs, monte_carlo_psgs
 from repro.core.scheduler import (CalibrationResult, CostModelRouter,
                                   HybridScheduler, LatencyCurve,
@@ -20,7 +21,8 @@ __all__ = [
     "compute_psgs", "monte_carlo_psgs", "batch_psgs", "compute_fap",
     "monte_carlo_fap", "TopologySpec", "PlacementPlan", "quiver_placement",
     "hash_placement", "degree_placement", "freq_placement", "p3_placement",
-    "expert_placement", "TieredFeatureStore", "ShardedFeatureStore",
+    "expert_placement", "migration_pairs", "TieredFeatureStore",
+    "ShardedFeatureStore",
     "LatencyCurve", "CalibrationResult", "calibrate", "calibrate_executors",
     "CostModelRouter", "HybridScheduler",
     "StaticScheduler", "Request", "WorkloadGenerator", "DynamicBatcher",

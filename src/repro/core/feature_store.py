@@ -22,6 +22,7 @@ shrinks collective payloads and improves gather locality.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from functools import partial
 from typing import Optional
 
@@ -57,6 +58,13 @@ class TieredFeatureStore:
     slot_t: jnp.ndarray       # paper: "feature lookup table" via UVA)
     owner_t: jnp.ndarray      # (N,) global warm owner (pod*G + dev), -1 else
     warm_base: jnp.ndarray    # (world,) row offset of each owner's warm shard
+    # Online migration support: every lookup reads one consistent snapshot of
+    # (tables, tier arrays); swap_assignments publishes a new snapshot
+    # atomically under this lock (copy-on-write — in-flight lookups keep
+    # serving from the old snapshot, so serving never pauses or torn-reads).
+    _mig_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+    migrated_rows: int = 0    # lifetime count of rows moved between tiers
 
     @staticmethod
     def build(features: np.ndarray, plan: PlacementPlan) -> "TieredFeatureStore":
@@ -111,37 +119,51 @@ class TieredFeatureStore:
             warm_base=jnp.asarray(base, jnp.int32))
 
     # -- lookup -------------------------------------------------------------
+    def _snapshot(self) -> tuple:
+        """Consistent view (hot, warm, host, disk, tier_t, slot_t). Arrays
+        are replaced — never mutated — by migration, so holding the
+        references is enough to keep serving from one coherent placement."""
+        with self._mig_lock:
+            return (self.hot, self.warm, self.host, self.disk,
+                    self.tier_t, self.slot_t)
+
     def lookup(self, ids: jnp.ndarray, *, include_host: bool = True,
                dedup: bool = True) -> jnp.ndarray:
         """Gather features for (possibly padded-with--1) ids, (M, d)."""
+        snap = self._snapshot()
         if dedup:
             uniq, inv = fixed_size_unique(jnp.asarray(ids, jnp.int32),
                                           int(ids.shape[0]))
-            rows = self._lookup_unique(uniq, include_host)
+            rows = self._lookup_unique(uniq, include_host, snap)
             out = rows[inv]
             return jnp.where((jnp.asarray(ids) >= 0)[:, None], out, 0.0)
-        rows = self._lookup_unique(jnp.asarray(ids, jnp.int32), include_host)
+        rows = self._lookup_unique(jnp.asarray(ids, jnp.int32), include_host,
+                                   snap)
         return jnp.where((jnp.asarray(ids) >= 0)[:, None], rows, 0.0)
 
-    def _lookup_unique(self, ids: jnp.ndarray, include_host: bool) -> jnp.ndarray:
+    def _lookup_unique(self, ids: jnp.ndarray, include_host: bool,
+                       snap: Optional[tuple] = None) -> jnp.ndarray:
+        hot, warm, host, disk, tier_t, slot_t = (snap if snap is not None
+                                                 else self._snapshot())
         safe = jnp.maximum(ids, 0)
-        tier = self.tier_t[safe]
-        slot = self.slot_t[safe]
-        out = jnp.zeros((ids.shape[0], self.feat_dim), self.hot.dtype)
+        tier = tier_t[safe]
+        slot = slot_t[safe]
+        out = jnp.zeros((ids.shape[0], self.feat_dim), hot.dtype)
         out = jnp.where((tier == TIER_HOT)[:, None],
-                        self.hot[jnp.minimum(slot, self.hot.shape[0] - 1)], out)
+                        hot[jnp.minimum(slot, hot.shape[0] - 1)], out)
         out = jnp.where((tier == TIER_WARM)[:, None],
-                        self.warm[jnp.minimum(slot, self.warm.shape[0] - 1)],
+                        warm[jnp.minimum(slot, warm.shape[0] - 1)],
                         out)
         if include_host:
-            host_rows = self._host_fetch(ids, tier, slot)
+            host_rows = self._host_fetch(ids, tier, slot, host, disk)
             out = jnp.where((tier >= TIER_HOST)[:, None], host_rows, out)
         return jnp.where((ids >= 0)[:, None], out, 0.0)
 
-    def _host_fetch(self, ids, tier, slot):
+    def _host_fetch(self, ids, tier, slot, host=None, disk=None):
         """PCIe-analogue slow path: host callback, ids sorted by address
         (the paper's TLB optimization) before the gather."""
-        host, disk = self.host, self.disk
+        if host is None:
+            host, disk = self.host, self.disk
 
         def cb(tier_np, slot_np):
             tier_np = np.asarray(tier_np)
@@ -171,6 +193,78 @@ class TieredFeatureStore:
                 "warm": int((t == TIER_WARM).sum()),
                 "host": int((t == TIER_HOST).sum()),
                 "disk": int((t == TIER_DISK).sum())}
+
+    # -- online migration ----------------------------------------------------
+    def swap_assignments(self, pairs: list[tuple[int, int]]) -> int:
+        """Exchange the complete (tier, slot, owner) assignments — and the
+        stored feature rows — of disjoint node pairs, atomically w.r.t.
+        concurrent :meth:`lookup`.
+
+        Each node inherits its partner's placement wholesale, so per-tier
+        counts, per-device capacity and the owner-major warm layout are all
+        preserved; ``lookup(i)`` returns bit-identical features before,
+        during and after the swap (the lookup-equivalence invariant — the
+        rows travel with the nodes). New arrays are built copy-on-write and
+        published under the migration lock; in-flight lookups keep reading
+        the previous snapshot. Returns the number of rows moved.
+        """
+        if not pairs:
+            return 0
+        flat = [n for ab in pairs for n in ab]
+        if len(set(flat)) != len(flat):
+            raise ValueError("migration pairs must be disjoint")
+
+        tier = np.asarray(self.tier_t).copy()
+        slot = np.asarray(self.slot_t).copy()
+        owner = np.asarray(self.owner_t).copy()
+        stores = {TIER_HOT: self.hot, TIER_WARM: self.warm,
+                  TIER_HOST: self.host, TIER_DISK: self.disk}
+
+        # 1) read every feature row out of its current tier store
+        feat = {n: np.asarray(stores[int(tier[n])][int(slot[n])])
+                for n in flat}
+
+        # 2) exchange table entries — all on copies (plan arrays too, so a
+        #    failure anywhere before publish leaves the store untouched and
+        #    plan never disagrees with the live tier tables)
+        plan = self.plan
+        p_tier, p_slot = plan.tier.copy(), plan.slot.copy()
+        p_pod, p_dev = plan.pod_owner.copy(), plan.device_owner.copy()
+        for a, b in pairs:
+            for table in (tier, slot, owner, p_tier, p_slot, p_pod, p_dev):
+                table[a], table[b] = table[b], table[a]
+
+        # 3) write each row into its new home, copy-on-write per tier store
+        writes: dict[int, tuple[list[int], list[np.ndarray]]] = {}
+        for n in flat:
+            rows, vals = writes.setdefault(int(tier[n]), ([], []))
+            rows.append(int(slot[n]))
+            vals.append(feat[n])
+        new_stores = dict(stores)
+        for t, (rows, vals) in writes.items():
+            arr = stores[t]
+            vals_np = np.stack(vals)
+            if isinstance(arr, jnp.ndarray):
+                new_stores[t] = arr.at[np.asarray(rows)].set(
+                    jnp.asarray(vals_np, arr.dtype))
+            else:
+                arr = arr.copy()
+                arr[np.asarray(rows)] = vals_np
+                new_stores[t] = arr
+
+        # 4) publish the new snapshot (tier tables + plan) atomically
+        with self._mig_lock:
+            self.hot = new_stores[TIER_HOT]
+            self.warm = new_stores[TIER_WARM]
+            self.host = new_stores[TIER_HOST]
+            self.disk = new_stores[TIER_DISK]
+            self.tier_t = jnp.asarray(tier, jnp.int32)
+            self.slot_t = jnp.asarray(slot, jnp.int32)
+            self.owner_t = jnp.asarray(owner, jnp.int32)
+            plan.tier, plan.slot = p_tier, p_slot
+            plan.pod_owner, plan.device_owner = p_pod, p_dev
+            self.migrated_rows += 2 * len(pairs)
+        return 2 * len(pairs)
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,18 @@ class WorkloadGenerator:
             raise ValueError(distribution)
         self._next_id = 0
 
+    def set_seed_prob(self, p: Optional[np.ndarray]) -> None:
+        """Shift the live seed distribution mid-stream (workload drift
+        emulation). ``None`` reverts to uniform; otherwise ``p`` is
+        normalized over the node set."""
+        if p is None:
+            self.p = None
+            return
+        p = np.asarray(p, dtype=np.float64)
+        if p.shape != (self.num_nodes,):
+            raise ValueError(f"seed_prob must have shape ({self.num_nodes},)")
+        self.p = p / max(p.sum(), 1e-12)
+
     def make_request(self, seeds_per_request: int = 1) -> Request:
         seeds = self.rng.choice(self.num_nodes, size=seeds_per_request,
                                 p=self.p)

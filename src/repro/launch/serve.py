@@ -27,7 +27,8 @@ from repro.core import (ShardedFeatureStore, TieredFeatureStore,
                         compute_psgs, quiver_placement)
 from repro.graph import power_law_graph
 from repro.models.gnn_basic import sage_init, sage_layered
-from repro.serving import (CostModelRouter, DeviceExecutor, HostExecutor,
+from repro.serving import (AdaptiveConfig, AdaptiveController,
+                           CostModelRouter, DeviceExecutor, HostExecutor,
                            ServingEngine, ShardedExecutor, StaticScheduler,
                            calibrate_executors)
 
@@ -116,6 +117,16 @@ def main() -> None:
                    help="admission window: outstanding batches")
     p.add_argument("--admission", default="wait", choices=["wait", "shed"],
                    help="behavior when the admission window is full")
+    p.add_argument("--adaptive", action="store_true",
+                   help="enable the online workload-adaptation loop: live "
+                        "FAP re-placement + router drift refit")
+    p.add_argument("--adapt-interval", type=int, default=32,
+                   help="control period in completed batches")
+    p.add_argument("--adapt-rows", type=int, default=64,
+                   help="max feature rows migrated per control step")
+    p.add_argument("--drift-threshold", type=float, default=0.25,
+                   help="relative latency-curve drift that triggers a "
+                        "router refit")
     args = p.parse_args()
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
 
@@ -156,14 +167,26 @@ def main() -> None:
         print(f"[serve] calibrated est @median-batch (ms): "
               f"{ {k: round(v, 2) for k, v in ests.items()} }")
 
+    hooks = []
+    controller = None
+    if args.adaptive:
+        controller = AdaptiveController(
+            graph, fanouts, store,
+            router if not static_policy else None, psgs_table=psgs,
+            config=AdaptiveConfig(interval_batches=args.adapt_interval,
+                                  rows_per_step=args.adapt_rows,
+                                  drift_threshold=args.drift_threshold))
+        hooks.append(controller)
     engine = ServingEngine(executors, router,
                            max_inflight=args.max_inflight,
-                           admission=args.admission)
+                           admission=args.admission, hooks=hooks)
     reqs = list(gen.stream(args.requests, seeds_per_request=args.batch))
     engine.warmup([reqs[0]])
     batches = [[r] for r in reqs]
     metrics = engine.run(batches)
     print(json.dumps(metrics.summary(), indent=2))
+    if controller is not None:
+        print("[serve] adaptation:", json.dumps(controller.report()))
 
 
 if __name__ == "__main__":

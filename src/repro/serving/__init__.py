@@ -8,7 +8,11 @@ package):
     executors.py  Executor protocol + Host/Device/Sharded executors
     router.py     LatencyCurve calibration + CostModelRouter (N-way) and the
                   binary HybridScheduler / StaticScheduler special cases
-    engine.py     ServingEngine: admission control, per-batch futures
+    engine.py     ServingEngine: admission control, per-batch futures,
+                  telemetry hooks
+    adaptive.py   online workload adaptation: decayed seed-frequency sketch,
+                  live FAP re-placement (bounded tier migration) and router
+                  drift refit (AdaptiveController plugs into engine hooks)
 
 To add a new executor: subclass ``BaseExecutor``, implement
 ``process(seeds) -> one output row per seed``, calibrate it with
@@ -23,11 +27,14 @@ from repro.serving.router import (POLICIES, CalibrationResult,
                                   LatencyCurve, StaticScheduler, calibrate,
                                   calibrate_executors)
 from repro.serving.engine import ServeMetrics, ServingEngine
+from repro.serving.adaptive import (AdaptiveConfig, AdaptiveController,
+                                    FrequencySketch, curve_drift)
 
 __all__ = [
     "Executor", "BaseExecutor", "HostExecutor", "DeviceExecutor",
     "ShardedExecutor", "pad_to_bucket", "POLICIES", "LatencyCurve",
     "CalibrationResult", "calibrate", "calibrate_executors",
     "CostModelRouter", "HybridScheduler", "StaticScheduler",
-    "ServingEngine", "ServeMetrics",
+    "ServingEngine", "ServeMetrics", "AdaptiveConfig", "AdaptiveController",
+    "FrequencySketch", "curve_drift",
 ]

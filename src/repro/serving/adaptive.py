@@ -1,0 +1,228 @@
+"""Online workload adaptation: live FAP re-placement + router drift refit.
+
+The paper computes its workload metrics offline: FAP ranks features once,
+the placement plan and the per-executor latency curves are frozen at
+startup. A drifting request mix (a hot subgraph emerging at serve time)
+leaves the feature tiers and routing thresholds stale. This module closes
+the loop, in the spirit of OMEGA's serve-time recomputation
+(arXiv:2501.08547) and data-driven online GNN scheduling (arXiv:2411.16342):
+
+  FrequencySketch       decayed seed-access counts, fed by the engine on
+                        every admitted batch (``on_admit`` hook).
+  AdaptiveController    periodically (every ``interval_batches`` completions)
+                        (a) recomputes FAP with the *empirical* seed
+                        distribution, (b) derives the target placement,
+                        (c) migrates a bounded number of rows between the
+                        HOT/WARM/HOST tiers of the live TieredFeatureStore
+                        (swap-based — serving never pauses, lookups stay
+                        bit-identical), and (d) refits per-executor
+                        LatencyCurves from live ``(psgs, latency)`` samples,
+                        swapping them into the CostModelRouter when the
+                        measured drift exceeds a threshold.
+
+Wire-up::
+
+    controller = AdaptiveController(graph, fanouts, store, router,
+                                    psgs_table=psgs)
+    engine = ServingEngine(executors, router, hooks=[controller])
+
+The controller runs its control step inline on the completion-callback
+thread that crossed the period boundary: that one lane stalls for the
+recompute (O(edges) FAP pass + a migration bounded by ``rows_per_step``),
+while every other lane's callbacks — and every concurrent lookup — keep
+serving from the previous placement snapshot (steps hold a dedicated lock;
+telemetry takes a separate short-lived one).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.fap import compute_fap
+from repro.core.placement import migration_pairs, quiver_placement
+from repro.serving.router import CostModelRouter, LatencyCurve
+
+
+class FrequencySketch:
+    """Exponentially-decayed seed-access frequency over the node set.
+
+    ``observe`` is called from executor callback threads; ``decay`` once per
+    control period, so the sketch tracks the *recent* request mix: with decay
+    ``d`` per period, a seed last hot ``k`` periods ago retains weight d^k.
+    """
+
+    def __init__(self, num_nodes: int, *, decay: float = 0.9):
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.num_nodes = int(num_nodes)
+        self.decay = float(decay)
+        self.counts = np.zeros(self.num_nodes, dtype=np.float64)
+        self.total_observed = 0
+        self._lock = threading.Lock()
+
+    def observe(self, seeds: np.ndarray) -> None:
+        seeds = np.asarray(seeds)
+        seeds = seeds[seeds >= 0]
+        with self._lock:
+            np.add.at(self.counts, seeds, 1.0)
+            self.total_observed += int(seeds.size)
+
+    def decay_step(self) -> None:
+        with self._lock:
+            self.counts *= self.decay
+
+    def empirical_prob(self, *, prior_weight: float = 0.2) -> np.ndarray:
+        """Normalized access distribution, blended with a uniform prior so
+        never-seen nodes keep non-zero FAP mass (cold-start safety)."""
+        with self._lock:
+            c = self.counts.copy()
+        total = c.sum()
+        uniform = np.full(self.num_nodes, 1.0 / self.num_nodes)
+        if total <= 0.0:
+            return uniform
+        return (1.0 - prior_weight) * (c / total) + prior_weight * uniform
+
+
+@dataclasses.dataclass
+class AdaptiveConfig:
+    interval_batches: int = 32     # control period, in completed batches
+    rows_per_step: int = 64        # migration budget per control step
+    decay: float = 0.9             # sketch decay per control period
+    prior_weight: float = 0.2      # uniform blend in the empirical seed dist
+    min_refit_samples: int = 24    # live samples before a curve refit
+    curve_bins: int = 8
+    curve_tail: float = 1.0        # tail statistic for the refit curves
+    drift_threshold: float = 0.25  # mean relative avg-curve error to swap
+    sample_window: int = 512       # live (psgs, latency) samples kept/executor
+    fap_truncated: bool = False    # forwarded to compute_fap
+
+
+def curve_drift(old: LatencyCurve, new: LatencyCurve) -> float:
+    """Mean relative disagreement of the two average-latency curves,
+    evaluated on the new curve's calibrated support."""
+    grid = np.asarray(new.psgs, dtype=np.float64)
+    a = np.asarray(old.eval_avg(grid), dtype=np.float64)
+    b = np.asarray(new.eval_avg(grid), dtype=np.float64)
+    return float(np.mean(np.abs(b - a) / np.maximum(np.abs(a), 1e-12)))
+
+
+class AdaptiveController:
+    """Telemetry-driven control loop over a live serving stack.
+
+    Implements the engine hook protocol (``on_admit`` / ``on_batch_complete``)
+    and owns the whole adaptation state: the frequency sketch, the live
+    latency samples, and the migration/refit counters in :attr:`stats`.
+    ``router`` may be ``None`` (placement-only adaptation).
+    """
+
+    def __init__(self, graph, fanouts: Sequence[int], store,
+                 router: Optional[CostModelRouter] = None, *,
+                 psgs_table: Optional[np.ndarray] = None,
+                 config: Optional[AdaptiveConfig] = None):
+        self.graph = graph
+        self.fanouts = tuple(int(f) for f in fanouts)
+        self.store = store
+        self.router = router
+        self.psgs_table = psgs_table
+        self.config = config or AdaptiveConfig()
+        self.sketch = FrequencySketch(graph.num_nodes,
+                                      decay=self.config.decay)
+        self.samples: dict[str, collections.deque] = {}
+        self.stats = {"steps": 0, "migrated_rows": 0, "refits": 0,
+                      "batches_seen": 0, "last_drift": {}}
+        self._since_step = 0
+        # _lock guards telemetry (samples/stats/counters) and is only ever
+        # held briefly; _step_lock serializes control steps. The heavy work
+        # (FAP recompute, placement, migration) runs under _step_lock alone,
+        # so completion callbacks on other lanes never block behind it.
+        self._lock = threading.Lock()
+        self._step_lock = threading.Lock()
+        self.enabled = True
+
+    # -- engine hook protocol ------------------------------------------------
+    def on_admit(self, name: str, seeds: np.ndarray) -> None:
+        self.sketch.observe(seeds)
+
+    def on_batch_complete(self, name: str, seeds: np.ndarray,
+                          latency_s: float) -> None:
+        due = False
+        with self._lock:
+            if self.psgs_table is not None:
+                seeds = np.asarray(seeds)
+                q = float(self.psgs_table[seeds[seeds >= 0]].sum())
+                dq = self.samples.setdefault(
+                    name,
+                    collections.deque(maxlen=self.config.sample_window))
+                dq.append((q, float(latency_s)))
+            self.stats["batches_seen"] += 1
+            self._since_step += 1
+            if (self.enabled
+                    and self._since_step >= self.config.interval_batches):
+                self._since_step = 0
+                due = True
+        if due:
+            self.step()
+
+    # -- control step --------------------------------------------------------
+    def target_plan(self):
+        """Placement the *current* empirical workload asks for."""
+        p0 = self.sketch.empirical_prob(prior_weight=self.config.prior_weight)
+        fap = compute_fap(self.graph, self.fanouts, seed_prob=p0,
+                          truncated=self.config.fap_truncated)
+        return quiver_placement(fap, self.store.plan.topology), fap
+
+    def step(self) -> dict:
+        """One control step: re-place (bounded) + refit curves. Thread-safe;
+        concurrent steps serialize on their own lock — telemetry callbacks
+        from other lanes are never blocked by the recompute."""
+        with self._step_lock:
+            target, fap = self.target_plan()
+            pairs = migration_pairs(self.store.plan.tier, target.tier, fap,
+                                    budget=max(self.config.rows_per_step // 2,
+                                               1))
+            moved = self.store.swap_assignments(pairs)
+            refits = self.refit_curves()
+            self.sketch.decay_step()
+            with self._lock:
+                self.stats["steps"] += 1
+                self.stats["migrated_rows"] += moved
+            return {"migrated_rows": moved, "refits": refits,
+                    "pending": int((target.tier != self.store.plan.tier)
+                                   .sum())}
+
+    def refit_curves(self) -> int:
+        """Refit per-executor curves from live samples; swap any whose drift
+        against the router's current curve exceeds the threshold."""
+        if self.router is None:
+            return 0
+        swapped = 0
+        with self._lock:
+            items = [(name, list(dq)) for name, dq in self.samples.items()]
+        for name, dq in items:
+            if len(dq) < self.config.min_refit_samples:
+                continue
+            ps, ls = zip(*dq)
+            new = LatencyCurve.fit(ps, ls, bins=self.config.curve_bins,
+                                   tail=self.config.curve_tail)
+            try:
+                old = self.router.curve(name)
+            except KeyError:
+                continue
+            drift = curve_drift(old, new)
+            self.stats["last_drift"][name] = drift
+            if drift > self.config.drift_threshold:
+                self.router.update_curve(name, new)
+                swapped += 1
+        with self._lock:
+            self.stats["refits"] += swapped
+        return swapped
+
+    def report(self) -> dict:
+        return {**{k: v for k, v in self.stats.items() if k != "last_drift"},
+                "last_drift": {k: round(v, 4)
+                               for k, v in self.stats["last_drift"].items()},
+                "seeds_observed": self.sketch.total_observed}

@@ -60,6 +60,10 @@ class ServeMetrics:
         return self.requests / dur
 
     def percentile(self, q: float) -> float:
+        # all-shed runs have no completed latencies; report 0.0 like
+        # summary() does instead of crashing on an empty quantile
+        if not self.latencies:
+            return 0.0
         return float(np.quantile(np.asarray(self.latencies), q))
 
     def summary(self) -> dict:
@@ -89,7 +93,7 @@ class ServingEngine:
 
     def __init__(self, executors: Mapping[str, Executor] | Iterable[Executor],
                  router, *, max_inflight: int = 64,
-                 admission: str = "wait"):
+                 admission: str = "wait", hooks: Sequence = ()):
         if isinstance(executors, Mapping):
             self.executors: dict[str, Executor] = dict(executors)
         else:
@@ -101,6 +105,10 @@ class ServingEngine:
                              f"got {admission!r}")
         self.router = router
         self.admission = admission
+        # telemetry hooks (e.g. serving.adaptive.AdaptiveController): called
+        # with every admitted batch and every completion — the feed for
+        # online FAP re-placement and latency-curve refitting
+        self.hooks = list(hooks)
         self.max_inflight = int(max_inflight)
         self._window = threading.BoundedSemaphore(self.max_inflight)
         self._lock = threading.Lock()
@@ -117,6 +125,25 @@ class ServingEngine:
         self.executors[executor.name] = executor
         return self
 
+    def add_hook(self, hook) -> "ServingEngine":
+        """Attach a telemetry hook. Optional methods, all best-effort:
+        ``on_admit(name, seeds)`` after a batch is admitted and routed,
+        ``on_batch_complete(name, seeds, latency_s)`` after it finishes."""
+        self.hooks.append(hook)
+        return self
+
+    def _notify(self, method: str, *args) -> None:
+        for h in self.hooks:
+            fn = getattr(h, method, None)
+            if fn is None:
+                continue
+            try:
+                fn(*args)
+            except BaseException as exc:  # surface hook bugs via drain()
+                with self._lock:
+                    if self._error is None:
+                        self._error = exc
+
     # -- per-batch futures ---------------------------------------------------
     def submit_batch(self, batch: list) -> Optional[Future]:
         """Route one closed batch and submit it to its executor.
@@ -132,22 +159,34 @@ class ServingEngine:
         metrics = self._metrics  # bind this run: stragglers from a failed
         with self._acct:         # run must not pollute the next run's stats
             self._inflight_batches += 1
+        name = None
         try:
             # route only admitted batches, so router.routed matches executed
             # work and load-aware estimates see post-admission inflight
             seeds = _batch_seeds(batch)
             name = self.router.route(seeds)
+            submitted_at = time.perf_counter()
             fut = self.executors[name].submit(seeds)
         except BaseException:
+            if name is not None:
+                # the router already counted this batch but the executor
+                # never accepted it — roll the count back so router.routed
+                # keeps matching work that actually executed
+                routed = getattr(self.router, "routed", None)
+                if isinstance(routed, dict) and routed.get(name, 0) > 0:
+                    routed[name] -= 1
             self._window.release()
             self._finish_one()
             raise
+        self._notify("on_admit", name, seeds)
         fut.add_done_callback(
-            lambda f: self._complete(f, batch, name, metrics))
+            lambda f: self._complete(f, batch, name, metrics, seeds,
+                                     submitted_at))
         return fut
 
     def _complete(self, fut: Future, batch: list, name: str,
-                  metrics: ServeMetrics) -> None:
+                  metrics: ServeMetrics, seeds: np.ndarray,
+                  submitted_at: float) -> None:
         self._window.release()
         now = time.perf_counter()
         with self._lock:
@@ -160,6 +199,10 @@ class ServingEngine:
                     metrics.latencies.append(r.latency)
                 metrics.requests += len(batch)
                 metrics.routed[name] = metrics.routed.get(name, 0) + 1
+        if fut.exception() is None:
+            # per-batch service time (lane queueing + processing): the live
+            # counterpart of the offline calibration samples
+            self._notify("on_batch_complete", name, seeds, now - submitted_at)
         self._finish_one()
 
     def _finish_one(self) -> None:
@@ -190,37 +233,44 @@ class ServingEngine:
         apart), the DynamicBatcher closes batches by deadline / PSGS budget /
         max size, and closed batches are admitted to the executor graph
         (paper §4.2.2)."""
-        self._reset()
-        for r in requests:
-            if gap_s:
-                time.sleep(gap_s)
-            r.arrival = time.perf_counter()
-            out = batcher.add(r)
-            if out:
-                self.submit_batch(out)
-        tail = batcher.flush()
-        if tail:
-            self.submit_batch(tail)
-        self.drain()
-        self._metrics.finished = time.perf_counter()
-        return self._metrics
+        metrics = self._reset()
+        try:
+            for r in requests:
+                if gap_s:
+                    time.sleep(gap_s)
+                r.arrival = time.perf_counter()
+                out = batcher.add(r)
+                if out:
+                    self.submit_batch(out)
+            tail = batcher.flush()
+            if tail:
+                self.submit_batch(tail)
+            self.drain()
+        finally:
+            # stamp even when drain() re-raises an executor failure, so a
+            # partially-failed run reports throughput over real wall time
+            # instead of dividing by finished=0
+            metrics.finished = time.perf_counter()
+        return metrics
 
     def run(self, batches: Sequence[list], *,
             pace_s: Optional[float] = None) -> ServeMetrics:
         """Process pre-formed batches. ``pace_s`` spaces arrivals
         (client-stream emulation) and re-stamps request arrival at submit
         time so latency = queueing + processing."""
-        self._reset()
-        for b in batches:
-            if pace_s:
-                time.sleep(pace_s)
-            now = time.perf_counter()
-            for r in b:
-                r.arrival = now
-            self.submit_batch(b)
-        self.drain()
-        self._metrics.finished = time.perf_counter()
-        return self._metrics
+        metrics = self._reset()
+        try:
+            for b in batches:
+                if pace_s:
+                    time.sleep(pace_s)
+                now = time.perf_counter()
+                for r in b:
+                    r.arrival = now
+                self.submit_batch(b)
+            self.drain()
+        finally:
+            metrics.finished = time.perf_counter()
+        return metrics
 
     def warmup(self, batch, *, rounds: int = 2) -> None:
         """Compile/warm every registered executor outside the measured

@@ -49,7 +49,15 @@ def _policy_stat(policy: str, kind: str) -> str:
 
 @dataclasses.dataclass
 class LatencyCurve:
-    """Piecewise-linear latency-vs-PSGS curve (avg + tail) fit from samples."""
+    """Piecewise-linear latency-vs-PSGS curve (avg + tail) fit from samples.
+
+    Queries above the calibrated PSGS range extrapolate linearly along the
+    last (non-negative-slope) segment instead of ``np.interp``'s flat
+    continuation — a flat tail silently underestimated the cost of batches
+    far larger than anything calibrated, starving the cheap executor.
+    :meth:`covers` flags out-of-range queries for callers that want to
+    trigger recalibration instead.
+    """
 
     psgs: np.ndarray      # (B,) bin centers, ascending
     avg: np.ndarray       # (B,) mean latency per bin (seconds)
@@ -60,12 +68,22 @@ class LatencyCurve:
             *, bins: int = 12, tail: float = 1.0) -> "LatencyCurve":
         p = np.asarray(samples_psgs, dtype=np.float64)
         l = np.asarray(samples_lat, dtype=np.float64)
+        if p.size == 0:
+            raise ValueError("LatencyCurve.fit needs at least one sample")
         order = np.argsort(p)
         p, l = p[order], l[order]
-        edges = np.quantile(p, np.linspace(0, 1, bins + 1))
+        # Degenerate sample sets (fewer samples than bins, or repeated /
+        # constant PSGS) produce duplicate quantile edges; without dedup all
+        # but one duplicate bin came back empty and the curve collapsed to a
+        # near-empty point set. Dedupe, and fall back to one all-inclusive
+        # bin when every sample shares one PSGS value.
+        bins = max(1, min(int(bins), p.size))
+        edges = np.unique(np.quantile(p, np.linspace(0, 1, bins + 1)))
+        if edges.size < 2:
+            edges = np.array([edges[0], edges[0] + 1e-9])
         edges[-1] += 1e-9
         centers, avgs, maxs = [], [], []
-        for i in range(bins):
+        for i in range(edges.size - 1):
             m = (p >= edges[i]) & (p < edges[i + 1])
             if not m.any():
                 continue
@@ -75,11 +93,30 @@ class LatencyCurve:
         return LatencyCurve(np.asarray(centers), np.asarray(avgs),
                             np.asarray(maxs))
 
+    def covers(self, q: float | np.ndarray) -> bool | np.ndarray:
+        """Whether ``q`` falls inside the calibrated PSGS range."""
+        inside = (np.asarray(q) >= self.psgs[0]) & (np.asarray(q)
+                                                    <= self.psgs[-1])
+        return bool(inside) if np.ndim(q) == 0 else inside
+
+    def _eval(self, q: float | np.ndarray, ys: np.ndarray) -> np.ndarray:
+        out = np.interp(q, self.psgs, ys)
+        if self.psgs.size >= 2:
+            # latency is non-decreasing in work: clamp the extrapolation
+            # slope at >= 0 so a noisy last bin can't make huge batches
+            # look *cheaper* than the calibrated maximum
+            dq = float(self.psgs[-1] - self.psgs[-2])
+            slope = max(float(ys[-1] - ys[-2]) / max(dq, 1e-12), 0.0)
+            out = np.where(np.asarray(q) > self.psgs[-1],
+                           ys[-1] + slope * (np.asarray(q) - self.psgs[-1]),
+                           out)
+        return out
+
     def eval_avg(self, q: float | np.ndarray) -> np.ndarray:
-        return np.interp(q, self.psgs, self.avg)
+        return self._eval(q, self.avg)
 
     def eval_max(self, q: float | np.ndarray) -> np.ndarray:
-        return np.interp(q, self.psgs, self.mx)
+        return self._eval(q, self.mx)
 
     def eval(self, q: float | np.ndarray, stat: str) -> np.ndarray:
         return self.eval_max(q) if stat == "max" else self.eval_avg(q)
@@ -207,6 +244,17 @@ class CostModelRouter:
     @property
     def names(self) -> list[str]:
         return list(self._curves)
+
+    def curve(self, name: str) -> LatencyCurve:
+        return self._curves[name]
+
+    def update_curve(self, name: str, curve: LatencyCurve) -> None:
+        """Swap in a freshly fitted curve (online recalibration). The swap is
+        a single reference assignment, so concurrent ``route()`` calls see
+        either the old or the new curve — never a torn mix."""
+        if name not in self._curves:
+            raise KeyError(f"unknown executor {name!r}")
+        self._curves[name] = curve
 
     @staticmethod
     def from_curves(psgs_table: np.ndarray,

@@ -1,0 +1,346 @@
+"""Online workload adaptation (serving/adaptive.py) + the serving-metrics
+and calibration bugfixes that ride along: lookup-equivalence across live
+tier migration, router drift refit, empty-percentile regression, degenerate
+LatencyCurve fits, and router/engine counter agreement on failed submits."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Request, TieredFeatureStore, TopologySpec,
+                        compute_fap, compute_psgs, migration_pairs,
+                        quiver_placement)
+from repro.core.placement import TIER_HOST, TIER_HOT
+from repro.graph import power_law_graph
+from repro.models.gnn_basic import sage_init, sage_layered
+from repro.serving import (AdaptiveConfig, AdaptiveController,
+                           CostModelRouter, FrequencySketch, HostExecutor,
+                           LatencyCurve, ServeMetrics, ServingEngine,
+                           StaticScheduler)
+
+
+# ---------------------------------------------------------------------------
+# Fixtures
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def migr_stack():
+    n, d, fan = 900, 12, (4, 3)
+    g = power_law_graph(n, 6.0, seed=0)
+    feats = np.random.default_rng(1).normal(size=(n, d)).astype(np.float32)
+    fap = compute_fap(g, fan)
+    topo = TopologySpec(num_pods=1, devices_per_pod=1, rows_per_device=220,
+                        rows_host=330, hot_replicate_fraction=0.3)
+    return g, fan, feats, fap, topo
+
+
+def _fresh_store(migr_stack):
+    g, fan, feats, fap, topo = migr_stack
+    return TieredFeatureStore.build(feats, quiver_placement(fap, topo))
+
+
+# ---------------------------------------------------------------------------
+# Migration: lookup equivalence before / during / after
+# ---------------------------------------------------------------------------
+def test_migration_pairs_preserve_tier_counts(migr_stack):
+    g, fan, feats, fap, topo = migr_stack
+    cur = quiver_placement(fap, topo)
+    drifted = fap.copy()
+    rng = np.random.default_rng(3)
+    drifted[rng.permutation(g.num_nodes)[:50]] += fap.max() * 2
+    tgt = quiver_placement(drifted, topo)
+    pairs = migration_pairs(cur.tier, tgt.tier, drifted, budget=30)
+    assert 0 < len(pairs) <= 30
+    flat = [n for ab in pairs for n in ab]
+    assert len(set(flat)) == len(flat)  # disjoint
+    for a, b in pairs:
+        assert cur.tier[a] > cur.tier[b]          # promote into hotter tier
+        assert tgt.tier[a] == cur.tier[b]         # a lands on its target
+
+
+def test_swap_assignments_lookup_equivalence_and_validity(migr_stack):
+    g, fan, feats, fap, topo = migr_stack
+    store = _fresh_store(migr_stack)
+    ids = jnp.asarray(np.arange(g.num_nodes), jnp.int32)
+    before = np.asarray(store.lookup(ids))
+    np.testing.assert_allclose(before, feats, rtol=1e-6)
+
+    drifted = fap.copy()
+    cold = np.argsort(fap)[:60]
+    drifted[cold] += fap.max() * 3
+    tgt = quiver_placement(drifted, topo)
+    total = 0
+    for _ in range(12):  # bounded steps until convergence
+        pairs = migration_pairs(store.plan.tier, tgt.tier, drifted, budget=25)
+        if not pairs:
+            break
+        total += store.swap_assignments(pairs)
+        after = np.asarray(store.lookup(ids))
+        np.testing.assert_allclose(after, feats, rtol=1e-6)  # during
+    assert total > 0 and store.migrated_rows == total
+    assert (store.plan.tier == tgt.tier).all()  # converged
+    store.plan.validate()                       # capacity invariants hold
+    assert store.tier_histogram(cold)["hot"] + \
+        store.tier_histogram(cold)["warm"] == 60
+
+
+def test_swap_assignments_rejects_overlapping_pairs(migr_stack):
+    store = _fresh_store(migr_stack)
+    hot = int(np.flatnonzero(store.plan.tier == TIER_HOT)[0])
+    host = np.flatnonzero(store.plan.tier == TIER_HOST)[:2]
+    with pytest.raises(ValueError, match="disjoint"):
+        store.swap_assignments([(int(host[0]), hot), (int(host[1]), hot)])
+
+
+def test_lookup_equivalence_under_concurrent_migration(migr_stack):
+    """Property: a reader thread doing lookups while the main thread runs
+    migration steps must only ever observe the exact features (a torn
+    tier/slot/array mix would surface as wrong rows)."""
+    g, fan, feats, fap, topo = migr_stack
+    store = _fresh_store(migr_stack)
+    probe = np.random.default_rng(7).integers(0, g.num_nodes, 64)
+    probe_j = jnp.asarray(probe, jnp.int32)
+    expected = feats[probe]
+    stop = threading.Event()
+    errors: list[str] = []
+
+    def reader():
+        while not stop.is_set():
+            got = np.asarray(store.lookup(probe_j))
+            if not np.allclose(got, expected, rtol=1e-5):
+                errors.append("torn lookup during migration")
+                return
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        drifted = fap.copy()
+        drifted[np.argsort(fap)[:80]] += fap.max() * 3
+        tgt = quiver_placement(drifted, topo)
+        for _ in range(10):
+            pairs = migration_pairs(store.plan.tier, tgt.tier, drifted,
+                                    budget=20)
+            if not pairs:
+                break
+            store.swap_assignments(pairs)
+    finally:
+        stop.set()
+        t.join(timeout=30)
+    assert not errors
+    np.testing.assert_allclose(np.asarray(store.lookup(probe_j)), expected,
+                               rtol=1e-6)
+
+
+def test_migration_property_hypothesis(migr_stack):
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    g, fan, feats, fap, topo = migr_stack
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(st.integers(0, g.num_nodes - 1), min_size=1, max_size=40,
+                    unique=True),
+           st.integers(1, 20))
+    def prop(hot_ids, budget):
+        store = _fresh_store(migr_stack)
+        drifted = fap.copy()
+        drifted[np.asarray(hot_ids)] += fap.max() * 2
+        tgt = quiver_placement(drifted, topo)
+        counts_before = store.plan.tier_counts()
+        store.swap_assignments(
+            migration_pairs(store.plan.tier, tgt.tier, drifted,
+                            budget=budget))
+        assert store.plan.tier_counts() == counts_before
+        ids = jnp.asarray(np.arange(g.num_nodes), jnp.int32)
+        np.testing.assert_allclose(np.asarray(store.lookup(ids)), feats,
+                                   rtol=1e-6)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# FrequencySketch + controller control loop
+# ---------------------------------------------------------------------------
+def test_frequency_sketch_decay_and_prior():
+    s = FrequencySketch(10, decay=0.5)
+    assert np.allclose(s.empirical_prob(), 0.1)  # cold start → uniform
+    s.observe(np.array([3, 3, 3, 3, -1]))        # padding ignored
+    assert s.total_observed == 4
+    p = s.empirical_prob(prior_weight=0.0)
+    assert p[3] == pytest.approx(1.0)
+    s.decay_step()
+    s.observe(np.array([5, 5]))
+    p = s.empirical_prob(prior_weight=0.0)
+    assert p[3] == pytest.approx(0.5) and p[5] == pytest.approx(0.5)
+    p = s.empirical_prob(prior_weight=0.2)
+    assert p.sum() == pytest.approx(1.0) and p[0] > 0  # never-seen kept warm
+
+
+def test_controller_migrates_hotspot_into_hbm(migr_stack):
+    g, fan, feats, fap, topo = migr_stack
+    store = _fresh_store(migr_stack)
+    cold = np.argsort(fap)[:30]
+    assert (store.plan.tier[cold] >= TIER_HOST).all()
+    ctl = AdaptiveController(
+        g, fan, store, config=AdaptiveConfig(rows_per_step=1000,
+                                             prior_weight=0.1))
+    for _ in range(4):
+        ctl.on_admit("host", np.repeat(cold, 4))
+    for _ in range(4):
+        r = ctl.step()
+        if r["pending"] == 0:
+            break
+    hist = store.tier_histogram(cold)
+    assert hist["hot"] + hist["warm"] == 30  # hotspot now lives in HBM
+    assert ctl.report()["migrated_rows"] == store.migrated_rows > 0
+
+
+def test_engine_hooks_drive_controller_live(migr_stack):
+    """End-to-end: ServingEngine hooks feed the sketch and trigger control
+    steps while serving; the hot-spotted cold nodes end up in HBM tiers."""
+    g, fan, feats, fap, topo = migr_stack
+    store = _fresh_store(migr_stack)
+    psgs = compute_psgs(g, fan)
+    params = sage_init(jax.random.key(0), [feats.shape[1], 16, 16])
+
+    @jax.jit
+    def infer_fn(hop_feats, hop_ids):
+        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
+        return sage_layered(params, hop_feats, fan, hop_masks=masks)
+
+    host = HostExecutor(g, store, fan, infer_fn, psgs_table=psgs)
+    ctl = AdaptiveController(
+        g, fan, store, psgs_table=psgs,
+        config=AdaptiveConfig(interval_batches=4, rows_per_step=400))
+    engine = ServingEngine({"host": host}, StaticScheduler("host"),
+                           hooks=[ctl])
+    cold = np.argsort(fap)[:16]
+    reqs = [[Request(i, cold.copy(), time.perf_counter())]
+            for i in range(12)]
+    m = engine.run(reqs)
+    assert m.requests == 12
+    assert ctl.stats["steps"] >= 2          # control loop ran mid-serving
+    assert store.migrated_rows > 0
+    hist = store.tier_histogram(cold)
+    assert hist["hot"] + hist["warm"] == 16
+
+
+def test_router_switches_executor_after_drift_refit():
+    """Satellite: live samples contradicting the offline curves must flip
+    the routing decision once refit_curves swaps the drifted curve in."""
+    class _G:  # controller only needs num_nodes for the sketch here
+        num_nodes = 8
+
+    table = np.full(8, 10.0, np.float32)
+    flat = LatencyCurve(psgs=np.array([0.0, 100.0]),
+                        avg=np.array([1e-3, 1e-3]), mx=np.array([1e-3, 1e-3]))
+    slow = LatencyCurve(psgs=np.array([0.0, 100.0]),
+                        avg=np.array([5e-3, 5e-3]), mx=np.array([5e-3, 5e-3]))
+    router = CostModelRouter(table, "latency_preferred")
+    router.register("host", flat, kind="host")
+    router.register("device", slow, kind="device")
+    seeds = np.array([0, 1])
+    assert router.route(seeds) == "host"  # offline curves: host is cheap
+
+    store = type("S", (), {"plan": None})()
+    ctl = AdaptiveController(_G(), (2,), store, router, psgs_table=table,
+                             config=AdaptiveConfig(min_refit_samples=8,
+                                                   drift_threshold=0.25,
+                                                   curve_bins=4,
+                                                   interval_batches=10**9))
+    # live telemetry: host now 10x slower than calibrated, device unchanged
+    for i in range(16):
+        ctl.on_batch_complete("host", np.array([i % 8]), 1e-2 + i * 1e-5)
+        ctl.on_batch_complete("device", np.array([i % 8]), 5e-3)
+    swapped = ctl.refit_curves()
+    assert swapped >= 1
+    assert ctl.stats["last_drift"]["host"] > 0.25
+    assert router.route(seeds) == "device"  # refit flipped the decision
+
+
+# ---------------------------------------------------------------------------
+# Satellite: ServeMetrics.percentile on an all-shed run
+# ---------------------------------------------------------------------------
+def test_percentile_empty_latencies_returns_zero():
+    m = ServeMetrics(shed=7)
+    assert m.percentile(0.99) == 0.0  # crashed before the fix
+    assert m.summary()["p99_ms"] == 0.0
+
+
+def test_percentile_nonempty_still_exact():
+    m = ServeMetrics(latencies=[0.1, 0.2, 0.3, 0.4])
+    assert m.percentile(0.5) == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: LatencyCurve degenerate fits + out-of-range extrapolation
+# ---------------------------------------------------------------------------
+def test_latency_curve_fit_fewer_samples_than_bins():
+    c = LatencyCurve.fit([1.0, 2.0, 3.0], [0.1, 0.2, 0.3], bins=12)
+    assert c.psgs.size >= 2
+    assert float(c.eval_avg(2.0)) == pytest.approx(0.2, rel=0.2)
+
+
+def test_latency_curve_fit_constant_psgs():
+    c = LatencyCurve.fit([5.0] * 10, np.linspace(0.1, 0.2, 10), bins=8)
+    assert c.psgs.size == 1
+    assert float(c.eval_avg(5.0)) == pytest.approx(0.15)
+    assert float(c.eval_max(123.0)) == pytest.approx(0.2)
+
+
+def test_latency_curve_extrapolates_beyond_calibrated_range():
+    q = np.linspace(10, 100, 200)
+    c = LatencyCurve.fit(q, 1e-4 * q, bins=8)
+    hi = float(c.psgs[-1])
+    # np.interp alone would return the flat edge value (~1e-2) at 10x range
+    far = float(c.eval_avg(hi * 10))
+    assert far > float(c.eval_avg(hi)) * 5
+    assert far == pytest.approx(1e-4 * hi * 10, rel=0.1)
+    assert c.covers(hi) and not c.covers(hi * 10)
+    # noisy decreasing tail must not extrapolate downward
+    dec = LatencyCurve(psgs=np.array([1.0, 2.0]), avg=np.array([2.0, 1.0]),
+                       mx=np.array([2.0, 1.0]))
+    assert float(dec.eval_avg(100.0)) == pytest.approx(1.0)
+
+
+def test_latency_curve_single_sample():
+    c = LatencyCurve.fit([4.0], [0.5], bins=6)
+    assert float(c.eval_avg(4.0)) == pytest.approx(0.5)
+    assert float(c.eval_avg(400.0)) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: router/engine counter divergence on failed submit
+# ---------------------------------------------------------------------------
+class _BoomExecutor:
+    """Quacks like an Executor but always fails at submit()."""
+    name = "boom"
+    kind = "device"
+    capacity = 1
+    inflight = 0
+
+    def cost(self, seeds):
+        return 1.0
+
+    def submit(self, seeds):
+        raise RuntimeError("submit rejected")
+
+
+def test_router_count_rolled_back_when_submit_raises():
+    router = StaticScheduler("boom")
+    engine = ServingEngine({"boom": _BoomExecutor()}, router)
+    with pytest.raises(RuntimeError, match="submit rejected"):
+        engine.submit_batch([Request(0, np.array([0]), time.perf_counter())])
+    # the router must not count work that never executed
+    assert router.routed == {"boom": 0}
+
+
+def test_metrics_finished_stamped_when_drain_reraises():
+    router = StaticScheduler("boom")
+    engine = ServingEngine({"boom": _BoomExecutor()}, router)
+    with pytest.raises(RuntimeError):
+        engine.run([[Request(0, np.array([0]), time.perf_counter())]])
+    m = engine._metrics
+    assert m.finished > m.started > 0  # throughput denominator is real time
