@@ -62,22 +62,25 @@ def build_serving_stack(*, nodes: int = 6000, avg_degree: float = 10.0,
                 store=store, infer_fn=infer_fn, fanouts=fanouts, topo=topo)
 
 
-def make_executors(stack, *, num_workers: int = 2, max_batch: int = 128):
-    """Host + device executor pair over a built stack (executor-graph API)."""
+def make_executors(stack, *, num_workers: int = 2, max_batch: int = 128,
+                   fused: bool = True):
+    """Host + device executor pair over a built stack (executor-graph API).
+    ``fused=False`` selects the legacy per-hop feature-collection path."""
     g = stack["graph"]
     host = HostExecutor(g, stack["store"], stack["fanouts"],
                         stack["infer_fn"], capacity=num_workers,
-                        psgs_table=stack["psgs"])
+                        psgs_table=stack["psgs"], fused=fused)
     device = DeviceExecutor(g.device_arrays(), stack["store"],
                             stack["fanouts"], stack["infer_fn"],
                             max_batch=max_batch, capacity=num_workers,
-                            psgs_table=stack["psgs"])
+                            psgs_table=stack["psgs"], fused=fused)
     return {"host": host, "device": device}
 
 
 def make_engine(stack, router, *, num_workers: int = 2, max_batch: int = 128,
-                max_inflight: int = 64,
-                admission: str = "wait") -> ServingEngine:
+                max_inflight: int = 64, admission: str = "wait",
+                fused: bool = True) -> ServingEngine:
     return ServingEngine(
-        make_executors(stack, num_workers=num_workers, max_batch=max_batch),
+        make_executors(stack, num_workers=num_workers, max_batch=max_batch,
+                       fused=fused),
         router, max_inflight=max_inflight, admission=admission)

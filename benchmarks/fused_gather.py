@@ -1,0 +1,130 @@
+"""Fused feature-collection benchmark: per-hop lookups vs lookup_hops.
+
+Quiver's throughput case rests on cheap feature aggregation: the serving
+executors used to collect features with one ``store.lookup(h)`` per hop —
+2·(L+1) tier gathers plus (L+1) host round-trips per sample. The fused path
+(``TieredFeatureStore.lookup_hops``) deduplicates ids once across hops and
+issues ONE address-sorted ``tiered_gather`` dispatch for the device tiers
+plus ONE host callback. This benchmark reports, on the serve_throughput
+workload:
+
+  1. dispatch counts per sample, per-hop vs fused (the structural win),
+  2. store-level feature-collection latency for both paths,
+  3. end-to-end serving throughput/p99 with executors flipped between the
+     legacy and the fused path, plus a fused + micro-batched stream run
+     (the PSGS-aware coalescing stage that feeds the gather big batches).
+
+    PYTHONPATH=src python benchmarks/fused_gather.py [--dry-run]
+
+``--dry-run`` shrinks every dimension so CI can smoke the full path.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # direct `python benchmarks/fused_gather.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import build_serving_stack, emit, make_engine, timeit
+from repro.core import DynamicBatcher, MicroBatcher
+from repro.graph.sampler import host_sample_dense
+from repro.serving import HybridScheduler, pad_to_bucket
+
+
+def _sample_hops(stack, seeds: np.ndarray, seed: int = 0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    hops = host_sample_dense(rng, stack["graph"],
+                             pad_to_bucket(seeds.astype(np.int32)),
+                             stack["fanouts"])
+    return [jnp.asarray(h) for h in hops]
+
+
+def run(dry_run: bool = False) -> dict:
+    nodes = 800 if dry_run else 5000
+    n_req, per = (10, 8) if dry_run else (60, 8)
+    stack = build_serving_stack(nodes=nodes)
+    store, psgs, gen = stack["store"], stack["psgs"], stack["gen"]
+    results: dict = {}
+
+    # -- 1) dispatch counts per sample ---------------------------------------
+    hops = _sample_hops(stack, gen.make_request(per).seeds)
+    store.reset_stats()
+    per_hop_feats = [store.lookup(h) for h in hops]
+    jax.block_until_ready(per_hop_feats)
+    d_old = store.reset_stats()
+    fused_feats = store.lookup_hops(hops)
+    jax.block_until_ready(fused_feats)
+    d_new = store.reset_stats()
+    old_n = d_old["device_gathers"] + d_old["host_fetches"]
+    new_n = d_new["device_gathers"] + d_new["host_fetches"]
+    results["dispatches"] = {"per_hop": old_n, "fused": new_n}
+    emit("fused_gather/dispatches_per_sample", float(new_n),
+         f"per_hop={old_n};reduction={old_n / max(new_n, 1):.1f}x")
+
+    # -- 2) store-level feature-collection latency ---------------------------
+    t_old = timeit(lambda: [store.lookup(h) for h in hops])
+    t_new = timeit(lambda: store.lookup_hops(hops))
+    results["collect_us"] = {"per_hop": t_old * 1e6, "fused": t_new * 1e6}
+    emit("fused_gather/collect_per_hop_us", t_old * 1e6)
+    emit("fused_gather/collect_fused_us", t_new * 1e6,
+         f"speedup={t_old / max(t_new, 1e-12):.2f}x")
+
+    # -- 3) end-to-end serving: legacy vs fused vs fused+micro ---------------
+    thr = float(np.median(psgs)) * per * 2
+    for mode in ("per_hop", "fused", "fused_micro"):
+        engine = make_engine(stack, HybridScheduler(psgs, thr),
+                             num_workers=2, max_batch=32,
+                             fused=mode != "per_hop")
+        gen.rng = np.random.default_rng(7)  # same workload for all modes
+        reqs = list(gen.stream(n_req, seeds_per_request=per))
+        engine.warmup([reqs[0]])
+        store.reset_stats()
+        if mode == "fused_micro":
+            micro = MicroBatcher(deadline_s=0.004, max_seeds=4 * per,
+                                 psgs_table=psgs)
+            m = engine.serve_stream(reqs, DynamicBatcher(deadline_s=0.0,
+                                                         max_batch=1),
+                                    micro=micro)
+            extra = f";super_batches={micro.emitted}"
+        else:
+            m = engine.run([[r] for r in reqs])
+            extra = ""
+        stats = store.reset_stats()
+        s = m.summary()
+        results[mode] = {"rps": s["throughput_rps"], "p99_ms": s["p99_ms"],
+                         "dispatches": stats["device_gathers"]
+                         + stats["host_fetches"]}
+        emit(f"fused_gather/{mode}_rps", s["throughput_rps"],
+             f"p99={s['p99_ms']:.1f}ms;"
+             f"dispatches={results[mode]['dispatches']}" + extra)
+        engine.close()
+
+    win = results["fused"]["rps"] / max(results["per_hop"]["rps"], 1e-9)
+    emit("fused_gather/serve_speedup_x", win,
+         "fused vs per-hop end-to-end throughput")
+    return results
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dry-run", action="store_true",
+                   help="tiny sizes; CI smoke for the full fused path")
+    args = p.parse_args()
+    t0 = time.time()
+    results = run(dry_run=args.dry_run)
+    d = results["dispatches"]
+    print(f"# fused path: {d['per_hop']} -> {d['fused']} dispatches/sample, "
+          f"serve speedup {results['fused']['rps'] / max(results['per_hop']['rps'], 1e-9):.2f}x "
+          f"({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

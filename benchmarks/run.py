@@ -19,6 +19,7 @@ MODULES = [
     "placement_compare",   # Fig. 15
     "feature_collection",  # Fig. 16
     "serve_throughput",    # Fig. 9
+    "fused_gather",        # fused feature-collection hot path
     "policy_cdf",          # Fig. 10
     "workload_drift",      # online adaptation vs frozen placement
     "scalability",         # Fig. 11/12 (from dry-run artifacts)

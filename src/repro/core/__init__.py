@@ -1,6 +1,10 @@
 """Quiver's primary contribution: workload metrics (PSGS/FAP), workload-aware
-feature placement, the tiered one-sided-read feature store, the PSGS-guided
-hybrid scheduler, and the multiplexed serving pipeline."""
+feature placement, the tiered one-sided-read feature store (with the fused
+``lookup_hops`` serving hot path), and request batching/workload generation.
+
+The serving engine, executors and routing live in :mod:`repro.serving`;
+``repro.core.pipeline`` and ``repro.core.scheduler`` remain as deprecation
+shims re-exporting from there."""
 from repro.core.fap import compute_fap, monte_carlo_fap
 from repro.core.feature_store import ShardedFeatureStore, TieredFeatureStore
 from repro.core.pipeline import ServeMetrics, ServingEngine
@@ -14,8 +18,8 @@ from repro.core.scheduler import (CalibrationResult, CostModelRouter,
                                   HybridScheduler, LatencyCurve,
                                   StaticScheduler, calibrate,
                                   calibrate_executors)
-from repro.core.serving import (DynamicBatcher, Request, WorkloadGenerator,
-                                batch_seeds, pad_to_bucket)
+from repro.core.serving import (DynamicBatcher, MicroBatcher, Request,
+                                WorkloadGenerator, batch_seeds, pad_to_bucket)
 
 __all__ = [
     "compute_psgs", "monte_carlo_psgs", "batch_psgs", "compute_fap",
@@ -26,5 +30,6 @@ __all__ = [
     "LatencyCurve", "CalibrationResult", "calibrate", "calibrate_executors",
     "CostModelRouter", "HybridScheduler",
     "StaticScheduler", "Request", "WorkloadGenerator", "DynamicBatcher",
-    "batch_seeds", "pad_to_bucket", "ServingEngine", "ServeMetrics",
+    "MicroBatcher", "batch_seeds", "pad_to_bucket", "ServingEngine",
+    "ServeMetrics",
 ]

@@ -18,6 +18,16 @@ XLA program so no host mediation happens at all:
 The paper's address-sort/TLB optimization survives as: ids are deduplicated
 (``fixed_size_unique``) and sorted before every gather/exchange, which both
 shrinks collective payloads and improves gather locality.
+
+Fused feature collection (serving hot path): :meth:`TieredFeatureStore.
+lookup_hops` collapses the per-hop ``[store.lookup(h) for h in hops]``
+pattern into ONE pipeline — concatenate all hops, deduplicate ids once
+across hops, do a single address-sorted gather over the device-resident
+HOT/WARM tiers (dispatching the Pallas ``tiered_gather`` kernel) plus a
+single host callback for the HOST/DISK tiers, then scatter rows back per
+hop. For an L-layer sample this replaces 2·(L+1) device gathers and (L+1)
+host round-trips with 1 + 1, and the cross-hop dedup shrinks the gathered
+row count (hop frontiers overlap heavily on skewed graphs).
 """
 from __future__ import annotations
 
@@ -37,6 +47,14 @@ from repro.compat import shard_map
 from repro.core.placement import (PlacementPlan, TIER_DISK, TIER_HOST,
                                   TIER_HOT, TIER_WARM)
 from repro.graph.sampler import fixed_size_unique
+from repro.kernels.tiered_gather.ops import tiered_gather
+
+
+def _new_stats() -> dict[str, int]:
+    """Dispatch accounting shared by both lookup paths (benchmark signal:
+    ``benchmarks/fused_gather.py`` reports the per-request reduction)."""
+    return {"lookup_calls": 0, "fused_calls": 0,
+            "device_gathers": 0, "host_fetches": 0}
 
 
 @dataclasses.dataclass
@@ -65,6 +83,14 @@ class TieredFeatureStore:
     _mig_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
     migrated_rows: int = 0    # lifetime count of rows moved between tiers
+    # Dispatch accounting: how many tier-store gathers / host round-trips
+    # each lookup path issued (the fused path's whole point is to shrink
+    # these). Guarded by its own lock so hot-path increments never contend
+    # with migration publishes.
+    stats: dict = dataclasses.field(default_factory=_new_stats, repr=False,
+                                    compare=False)
+    _stats_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @staticmethod
     def build(features: np.ndarray, plan: PlacementPlan) -> "TieredFeatureStore":
@@ -127,10 +153,38 @@ class TieredFeatureStore:
             return (self.hot, self.warm, self.host, self.disk,
                     self.tier_t, self.slot_t)
 
+    def _count(self, **deltas: int) -> None:
+        with self._stats_lock:
+            for k, v in deltas.items():
+                self.stats[k] += v
+
+    def reset_stats(self) -> dict[str, int]:
+        """Zero the dispatch counters, returning the previous values."""
+        with self._stats_lock:
+            prev, self.stats = self.stats, _new_stats()
+        return prev
+
     def lookup(self, ids: jnp.ndarray, *, include_host: bool = True,
                dedup: bool = True) -> jnp.ndarray:
-        """Gather features for (possibly padded-with--1) ids, (M, d)."""
+        """Gather feature rows for one id vector.
+
+        Args:
+            ids: ``(M,)`` int node ids; ``-1`` entries are padding and
+                resolve to all-zero rows.
+            include_host: also resolve HOST/DISK-tier ids through the host
+                callback (the PCIe-analogue slow path). When ``False`` those
+                rows come back as zeros (device-only probe).
+            dedup: deduplicate + sort ids (``fixed_size_unique``) before
+                gathering — the paper's TLB/address-sort optimization.
+
+        Returns:
+            ``(M, d)`` feature matrix in the input id order, read from one
+            consistent placement snapshot (safe under concurrent
+            :meth:`swap_assignments`).
+        """
         snap = self._snapshot()
+        self._count(lookup_calls=1, device_gathers=2,
+                    host_fetches=1 if include_host else 0)
         if dedup:
             uniq, inv = fixed_size_unique(jnp.asarray(ids, jnp.int32),
                                           int(ids.shape[0]))
@@ -140,6 +194,78 @@ class TieredFeatureStore:
         rows = self._lookup_unique(jnp.asarray(ids, jnp.int32), include_host,
                                    snap)
         return jnp.where((jnp.asarray(ids) >= 0)[:, None], rows, 0.0)
+
+    def lookup_hops(self, hops, *, include_host: bool = True,
+                    use_pallas: Optional[bool] = None) -> list[jnp.ndarray]:
+        """Fused feature collection for a whole layered sample.
+
+        Collapses the per-hop ``[store.lookup(h) for h in hops]`` pattern
+        into one pipeline: concatenate all hop id vectors, deduplicate ids
+        ONCE across hops, gather the device-resident HOT/WARM tiers with a
+        single address-sorted dispatch of the Pallas ``tiered_gather``
+        kernel, resolve HOST/DISK ids with a single host callback, and
+        scatter rows back into per-hop order. Output is bit-identical to the
+        per-hop path (gathers copy rows; no arithmetic is reordered) and
+        reads one consistent placement snapshot for the *entire* sample,
+        so it is safe under concurrent :meth:`swap_assignments`.
+
+        Args:
+            hops: sequence of id vectors (``hops[0]`` the seeds, ``hops[k]``
+                the k-th frontier), each ``(M_k,)`` with ``-1`` padding.
+                At least one hop must be non-empty.
+            include_host: as in :meth:`lookup`.
+            use_pallas: force (``True``) or suppress (``False``) the Pallas
+                kernel for the device-tier gather; ``None`` picks it on TPU
+                and the jnp reference elsewhere (interpret mode is used for
+                the kernel off-TPU, so ``True`` is safe on CPU tests).
+
+        Returns:
+            List of ``(M_k, d)`` feature matrices, one per hop, matching
+            ``[self.lookup(h) for h in hops]`` bit-for-bit.
+
+        Raises:
+            ValueError: if ``hops`` is empty or all hops have zero length.
+        """
+        hops_j = [jnp.asarray(h, jnp.int32).reshape(-1) for h in hops]
+        sizes = [int(h.shape[0]) for h in hops_j]
+        total = sum(sizes)
+        if total == 0:
+            raise ValueError("lookup_hops needs at least one non-empty hop")
+        snap = self._snapshot()
+        self._count(fused_calls=1, device_gathers=1,
+                    host_fetches=1 if include_host else 0)
+        ids = hops_j[0] if len(hops_j) == 1 else jnp.concatenate(hops_j)
+        uniq, inv = fixed_size_unique(ids, total)
+        rows = self._fused_unique(uniq, include_host, snap, use_pallas)
+        out = jnp.where((ids >= 0)[:, None], rows[inv], 0.0)
+        offs = np.concatenate([[0], np.cumsum(sizes)])
+        return [out[int(offs[k]):int(offs[k + 1])]
+                for k in range(len(sizes))]
+
+    def _fused_unique(self, uniq: jnp.ndarray, include_host: bool,
+                      snap: tuple, use_pallas: Optional[bool]) -> jnp.ndarray:
+        """One gather per tier class for a deduplicated id vector: the
+        HOT/WARM rows stream through ``tiered_gather`` in ascending
+        (tier, slot) order — near-sequential DMAs, the paper's TLB
+        optimization — and HOST/DISK rows come from one ``_host_fetch``."""
+        hot, warm, host, disk, tier_t, slot_t = snap
+        safe = jnp.maximum(uniq, 0)
+        tier = tier_t[safe]
+        slot = slot_t[safe]
+        # address-sort key: tier-major, slot-minor. Slots are clamped into
+        # the device-tier span only for key construction (host-tier slots
+        # may exceed it; their gather result is zeros either way), which
+        # keeps the key within int32 for any store below ~5e8 rows/tier.
+        span = jnp.int32(max(int(hot.shape[0]), int(warm.shape[0]), 1))
+        key = tier.astype(jnp.int32) * span + jnp.minimum(slot, span - 1)
+        order = jnp.argsort(key)
+        dev_sorted = tiered_gather(tier[order], slot[order], hot, warm,
+                                   use_pallas=use_pallas)
+        out = jnp.zeros_like(dev_sorted).at[order].set(dev_sorted)
+        if include_host:
+            host_rows = self._host_fetch(uniq, tier, slot, host, disk)
+            out = jnp.where((tier >= TIER_HOST)[:, None], host_rows, out)
+        return jnp.where((uniq >= 0)[:, None], out, 0.0)
 
     def _lookup_unique(self, ids: jnp.ndarray, include_host: bool,
                        snap: Optional[tuple] = None) -> jnp.ndarray:
@@ -198,7 +324,7 @@ class TieredFeatureStore:
     def swap_assignments(self, pairs: list[tuple[int, int]]) -> int:
         """Exchange the complete (tier, slot, owner) assignments — and the
         stored feature rows — of disjoint node pairs, atomically w.r.t.
-        concurrent :meth:`lookup`.
+        concurrent :meth:`lookup` / :meth:`lookup_hops`.
 
         Each node inherits its partner's placement wholesale, so per-tier
         counts, per-device capacity and the owner-major warm layout are all
@@ -206,7 +332,18 @@ class TieredFeatureStore:
         during and after the swap (the lookup-equivalence invariant — the
         rows travel with the nodes). New arrays are built copy-on-write and
         published under the migration lock; in-flight lookups keep reading
-        the previous snapshot. Returns the number of rows moved.
+        the previous snapshot.
+
+        Args:
+            pairs: ``(a, b)`` node-id pairs to exchange. Node ids must be
+                pairwise disjoint across all pairs.
+
+        Returns:
+            Number of feature rows moved (``2 * len(pairs)``), also
+            accumulated into :attr:`migrated_rows`.
+
+        Raises:
+            ValueError: if any node id appears in more than one pair.
         """
         if not pairs:
             return 0
@@ -371,3 +508,28 @@ class ShardedFeatureStore:
             out_specs=P(axis))
         return fn(self.hot, self.warm, self.tier_t, self.slot_t, self.owner_t,
                   ids)
+
+    def lookup_hops(self, hops) -> list[jnp.ndarray]:
+        """Fused multi-hop variant of :meth:`lookup`: concatenate the hop id
+        vectors, run ONE ``shard_map`` exchange over the whole sample, and
+        split the rows back per hop — (L+1) collective launches collapse to
+        one. Every position is resolved independently inside the exchange
+        (remote warm reads answer any id from any device), so the rows are
+        bit-identical to per-hop calls regardless of how concatenation
+        re-partitions the ids over the mesh.
+
+        Args:
+            hops: sequence of ``(M_k,)`` id vectors, each with ``-1``
+                padding; every ``M_k`` (hence the total) must be a multiple
+                of the mesh world size, which executor padding guarantees.
+
+        Returns:
+            List of ``(M_k, d)`` feature matrices, one per hop.
+        """
+        hops_j = [jnp.asarray(h).reshape(-1) for h in hops]
+        sizes = [int(h.shape[0]) for h in hops_j]
+        out = self.lookup(hops_j[0] if len(hops_j) == 1
+                          else jnp.concatenate(hops_j))
+        offs = np.concatenate([[0], np.cumsum(sizes)])
+        return [out[int(offs[k]):int(offs[k + 1])]
+                for k in range(len(sizes))]

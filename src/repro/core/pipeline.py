@@ -10,6 +10,7 @@ them). Import from ``repro.serving`` in new code.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Sequence
 
 import jax.numpy as jnp
@@ -28,6 +29,10 @@ class ServingEngine(_EngineBase):
     def __init__(self, graph, store, fanouts: Sequence[int],
                  infer_fn: Callable, scheduler, *, num_workers: int = 2,
                  rng_seed: int = 0, max_batch: int = 128):
+        warnings.warn(
+            "repro.core.pipeline.ServingEngine is a deprecated shim; build "
+            "executors explicitly and use repro.serving.ServingEngine "
+            "(see docs/architecture.md)", DeprecationWarning, stacklevel=2)
         self.graph = graph
         self.graph_dev = graph.device_arrays()  # shared, read-only (§4.3(3))
         self.store = store

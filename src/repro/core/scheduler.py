@@ -1,8 +1,10 @@
 """Deprecated shim — PSGS-guided scheduling moved to ``repro.serving.router``.
 
 The binary threshold scheduler (paper §4.2, Fig. 6(b)) is now the 2-executor
-special case of :class:`repro.serving.router.CostModelRouter`. Import from
-``repro.serving`` in new code; this module keeps historical imports working.
+special case of :class:`repro.serving.router.CostModelRouter`. Import
+``HybridScheduler`` / ``CostModelRouter`` / ``LatencyCurve`` from
+``repro.serving`` in new code (see docs/architecture.md for the module map);
+this module only keeps historical ``repro.core.scheduler`` imports working.
 """
 from repro.serving.router import (CalibrationResult, CostModelRouter,
                                   HybridScheduler, LatencyCurve,

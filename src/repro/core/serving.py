@@ -14,10 +14,11 @@ from typing import Iterator, Optional
 
 import numpy as np
 
+from repro.serving.engine import MicroBatcher  # canonical home: serving pkg
 from repro.serving.executors import pad_to_bucket  # canonical home moved
 
-__all__ = ["Request", "WorkloadGenerator", "DynamicBatcher", "batch_seeds",
-           "pad_to_bucket"]
+__all__ = ["Request", "WorkloadGenerator", "DynamicBatcher", "MicroBatcher",
+           "batch_seeds", "pad_to_bucket"]
 
 
 @dataclasses.dataclass

@@ -29,8 +29,8 @@ from repro.graph import power_law_graph
 from repro.models.gnn_basic import sage_init, sage_layered
 from repro.serving import (AdaptiveConfig, AdaptiveController,
                            CostModelRouter, DeviceExecutor, HostExecutor,
-                           ServingEngine, ShardedExecutor, StaticScheduler,
-                           calibrate_executors)
+                           MicroBatcher, ServingEngine, ShardedExecutor,
+                           StaticScheduler, calibrate_executors)
 
 
 def build_stack(*, nodes: int, avg_degree: float, d_feat: int,
@@ -63,15 +63,20 @@ def build_stack(*, nodes: int, avg_degree: float, d_feat: int,
 
 def build_executors(graph, store, fanouts, infer_fn, psgs, *,
                     num_workers: int, max_batch: int, sharded: bool,
-                    feats=None, fap=None, hot_frac: float = 0.25):
+                    feats=None, fap=None, hot_frac: float = 0.25,
+                    fused: bool = True):
     """Executor registry: host + device, plus the distributed (sharded)
-    executor when requested and the runtime has ≥2 devices."""
+    executor when requested and the runtime has ≥2 devices. ``fused``
+    selects the single-dispatch feature-collection path
+    (``store.lookup_hops``); ``False`` keeps the legacy per-hop lookups."""
     executors = {
         "host": HostExecutor(graph, store, fanouts, infer_fn,
-                             capacity=num_workers, psgs_table=psgs),
+                             capacity=num_workers, psgs_table=psgs,
+                             fused=fused),
         "device": DeviceExecutor(graph.device_arrays(), store, fanouts,
                                  infer_fn, max_batch=max_batch,
-                                 capacity=num_workers, psgs_table=psgs),
+                                 capacity=num_workers, psgs_table=psgs,
+                                 fused=fused),
     }
     if sharded:
         world = len(jax.devices())
@@ -93,7 +98,8 @@ def build_executors(graph, store, fanouts, infer_fn, psgs, *,
             TieredFeatureStore.build(feats, splan), mesh, "x")
         executors["sharded"] = ShardedExecutor(
             mesh, "x", graph.device_arrays(), sstore, fanouts, infer_fn,
-            max_batch=max_batch, psgs_table=psgs, tier_table=splan.tier)
+            max_batch=max_batch, psgs_table=psgs, tier_table=splan.tier,
+            fused=fused)
     return executors
 
 
@@ -127,6 +133,18 @@ def main() -> None:
     p.add_argument("--drift-threshold", type=float, default=0.25,
                    help="relative latency-curve drift that triggers a "
                         "router refit")
+    p.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                   default=True,
+                   help="fused feature collection (cross-hop dedup + one "
+                        "tiered_gather dispatch); --no-fused keeps the "
+                        "legacy per-hop store lookups")
+    p.add_argument("--micro-batch", type=int, default=0,
+                   help="coalesce requests into gather-friendly "
+                        "super-batches of up to this many seeds before "
+                        "admission (0 = off)")
+    p.add_argument("--micro-deadline-ms", type=float, default=4.0,
+                   help="max milliseconds a request may wait in the "
+                        "micro-batching stage")
     args = p.parse_args()
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
 
@@ -145,7 +163,7 @@ def main() -> None:
                                 max_batch=args.batch,
                                 sharded=args.sharded and not static_policy,
                                 feats=feats, fap=fap,
-                                hot_frac=args.hot_frac)
+                                hot_frac=args.hot_frac, fused=args.fused)
     print(f"[serve] executors: {sorted(executors)}")
 
     if static_policy:
@@ -182,8 +200,19 @@ def main() -> None:
                            admission=args.admission, hooks=hooks)
     reqs = list(gen.stream(args.requests, seeds_per_request=args.batch))
     engine.warmup([reqs[0]])
-    batches = [[r] for r in reqs]
-    metrics = engine.run(batches)
+    if args.micro_batch > 0:
+        # stream path: per-request ingest, then the PSGS-aware coalescing
+        # stage feeds the fused gather super-batches under its deadline
+        from repro.core import DynamicBatcher
+        micro = MicroBatcher(deadline_s=args.micro_deadline_ms * 1e-3,
+                             max_seeds=args.micro_batch, psgs_table=psgs)
+        metrics = engine.serve_stream(
+            reqs, DynamicBatcher(deadline_s=0.0, max_batch=1), micro=micro)
+        print(f"[serve] micro-batching: {micro.emitted} super-batches, "
+              f"{micro.coalesced} coalesced")
+    else:
+        batches = [[r] for r in reqs]
+        metrics = engine.run(batches)
     print(json.dumps(metrics.summary(), indent=2))
     if controller is not None:
         print("[serve] adaptation:", json.dumps(controller.report()))

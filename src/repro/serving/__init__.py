@@ -26,7 +26,7 @@ from repro.serving.router import (POLICIES, CalibrationResult,
                                   CostModelRouter, HybridScheduler,
                                   LatencyCurve, StaticScheduler, calibrate,
                                   calibrate_executors)
-from repro.serving.engine import ServeMetrics, ServingEngine
+from repro.serving.engine import MicroBatcher, ServeMetrics, ServingEngine
 from repro.serving.adaptive import (AdaptiveConfig, AdaptiveController,
                                     FrequencySketch, curve_drift)
 
@@ -35,6 +35,6 @@ __all__ = [
     "ShardedExecutor", "pad_to_bucket", "POLICIES", "LatencyCurve",
     "CalibrationResult", "calibrate", "calibrate_executors",
     "CostModelRouter", "HybridScheduler", "StaticScheduler",
-    "ServingEngine", "ServeMetrics", "AdaptiveConfig", "AdaptiveController",
-    "FrequencySketch", "curve_drift",
+    "ServingEngine", "ServeMetrics", "MicroBatcher", "AdaptiveConfig",
+    "AdaptiveController", "FrequencySketch", "curve_drift",
 ]

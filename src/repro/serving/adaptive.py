@@ -65,6 +65,8 @@ class FrequencySketch:
         self._lock = threading.Lock()
 
     def observe(self, seeds: np.ndarray) -> None:
+        """Count one batch's seed accesses (``-1`` padding ignored).
+        Thread-safe; called from executor callback threads."""
         seeds = np.asarray(seeds)
         seeds = seeds[seeds >= 0]
         with self._lock:
@@ -72,6 +74,8 @@ class FrequencySketch:
             self.total_observed += int(seeds.size)
 
     def decay_step(self) -> None:
+        """Multiply every count by ``decay`` (called once per control
+        period, so old traffic fades geometrically)."""
         with self._lock:
             self.counts *= self.decay
 
@@ -145,10 +149,26 @@ class AdaptiveController:
 
     # -- engine hook protocol ------------------------------------------------
     def on_admit(self, name: str, seeds: np.ndarray) -> None:
+        """Engine hook: feed the admitted batch's seeds into the frequency
+        sketch (``-1`` padding is ignored by the sketch).
+
+        Args:
+            name: executor the batch was routed to (unused here).
+            seeds: ``(B,)`` seed ids of the admitted batch.
+        """
         self.sketch.observe(seeds)
 
     def on_batch_complete(self, name: str, seeds: np.ndarray,
                           latency_s: float) -> None:
+        """Engine hook: record a live ``(psgs, latency)`` sample for the
+        executor and run a control step when the period boundary is crossed
+        (inline, on this callback thread).
+
+        Args:
+            name: executor that served the batch.
+            seeds: ``(B,)`` seed ids of the batch.
+            latency_s: per-batch service time (queueing + processing).
+        """
         due = False
         with self._lock:
             if self.psgs_table is not None:
@@ -169,7 +189,13 @@ class AdaptiveController:
 
     # -- control step --------------------------------------------------------
     def target_plan(self):
-        """Placement the *current* empirical workload asks for."""
+        """Placement the *current* empirical workload asks for.
+
+        Returns:
+            ``(plan, fap)`` — the target :class:`PlacementPlan` from FAP
+            recomputed with the sketch's empirical seed distribution, and
+            that FAP vector itself.
+        """
         p0 = self.sketch.empirical_prob(prior_weight=self.config.prior_weight)
         fap = compute_fap(self.graph, self.fanouts, seed_prob=p0,
                           truncated=self.config.fap_truncated)
@@ -178,7 +204,13 @@ class AdaptiveController:
     def step(self) -> dict:
         """One control step: re-place (bounded) + refit curves. Thread-safe;
         concurrent steps serialize on their own lock — telemetry callbacks
-        from other lanes are never blocked by the recompute."""
+        from other lanes are never blocked by the recompute.
+
+        Returns:
+            ``{"migrated_rows", "refits", "pending"}`` — rows moved this
+            step, curves swapped, and nodes still off their target tier
+            (0 means the placement has converged for this workload).
+        """
         with self._step_lock:
             target, fap = self.target_plan()
             pairs = migration_pairs(self.store.plan.tier, target.tier, fap,
@@ -196,7 +228,12 @@ class AdaptiveController:
 
     def refit_curves(self) -> int:
         """Refit per-executor curves from live samples; swap any whose drift
-        against the router's current curve exceeds the threshold."""
+        against the router's current curve exceeds the threshold.
+
+        Returns:
+            Number of curves swapped into the router (0 when routerless,
+            under-sampled, or drift stayed below the threshold).
+        """
         if self.router is None:
             return 0
         swapped = 0
@@ -222,6 +259,8 @@ class AdaptiveController:
         return swapped
 
     def report(self) -> dict:
+        """Adaptation counters for logging: steps, migrated rows, refits,
+        batches seen, per-executor last drift, and seeds observed."""
         return {**{k: v for k, v in self.stats.items() if k != "last_drift"},
                 "last_drift": {k: round(v, 4)
                                for k, v in self.stats["last_drift"].items()},

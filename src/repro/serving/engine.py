@@ -36,6 +36,93 @@ def _batch_seeds(batch: Sequence) -> np.ndarray:
     return np.concatenate([r.seeds for r in batch])
 
 
+class MicroBatcher:
+    """PSGS-aware micro-batching stage between the request batcher and the
+    executor graph.
+
+    The fused feature-collection path (``TieredFeatureStore.lookup_hops``)
+    amortizes its one-dispatch-per-tier cost over the *unique* ids of a
+    sample, so it pays off most when batches are large enough for hop
+    frontiers to overlap. Under light load the ``DynamicBatcher`` closes
+    small batches (its deadline is per-request); this stage coalesces those
+    closed batches into gather-friendly super-batches under a second
+    latency deadline.
+
+    A super-batch closes when (a) its accumulated seed count reaches
+    ``max_seeds``, (b) its accumulated PSGS reaches ``psgs_budget`` (the
+    workload-aware bound — processing cost, not request count), or (c) the
+    coalescing deadline since the first queued request has expired.
+    Like ``DynamicBatcher``, the deadline is evaluated at ``add`` time —
+    an expired super-batch is emitted when the NEXT batch arrives (or at
+    the stream-end ``flush``), so on sparse streams the realized wait can
+    reach the inter-arrival gap, not ``deadline_s``. Size ``deadline_s``
+    against the expected arrival rate, or skip the stage for latency-
+    critical sparse traffic.
+    """
+
+    def __init__(self, *, deadline_s: float = 0.004, max_seeds: int = 256,
+                 psgs_budget: Optional[float] = None,
+                 psgs_table: Optional[np.ndarray] = None):
+        """Args:
+            deadline_s: max time a closed batch may wait for company.
+            max_seeds: seed-count bound of a super-batch.
+            psgs_budget: accumulated-PSGS bound (needs ``psgs_table``);
+                ``None`` disables the workload-aware close condition.
+            psgs_table: ``(N,)`` per-seed PSGS table for the budget.
+        """
+        self.deadline_s = float(deadline_s)
+        self.max_seeds = int(max_seeds)
+        self.psgs_budget = psgs_budget
+        self.psgs_table = psgs_table
+        self._pending: list = []
+        self._opened: Optional[float] = None
+        self._sources = 0
+        self._n_seeds = 0
+        self._acc_psgs = 0.0
+        self.emitted = 0      # super-batches emitted
+        self.coalesced = 0    # emitted super-batches built from >1 batch
+
+    def add(self, batch: list) -> Optional[list]:
+        """Queue one closed batch; return a super-batch if a bound was hit.
+
+        Args:
+            batch: a closed request batch (non-empty list of requests).
+
+        Returns:
+            The coalesced super-batch when seed-count / PSGS / deadline
+            closed it, else ``None`` (the batch is held for coalescing).
+        """
+        now = time.perf_counter()
+        if self._opened is None:
+            self._opened = now
+        self._pending.extend(batch)
+        self._sources += 1
+        self._n_seeds += sum(int(r.seeds.size) for r in batch)
+        if self.psgs_table is not None:
+            for r in batch:
+                self._acc_psgs += float(
+                    self.psgs_table[r.seeds[r.seeds >= 0]].sum())
+        full = self._n_seeds >= self.max_seeds
+        over_budget = (self.psgs_budget is not None
+                       and self._acc_psgs >= self.psgs_budget)
+        expired = now - self._opened >= self.deadline_s
+        if full or over_budget or expired:
+            return self.flush()
+        return None
+
+    def flush(self) -> Optional[list]:
+        """Emit whatever is queued (``None`` when empty)."""
+        if not self._pending:
+            return None
+        out, self._pending = self._pending, []
+        self.emitted += 1
+        if self._sources > 1:
+            self.coalesced += 1
+        self._opened, self._sources = None, 0
+        self._n_seeds, self._acc_psgs = 0, 0.0
+        return out
+
+
 @dataclasses.dataclass
 class ServeMetrics:
     latencies: list[float] = dataclasses.field(default_factory=list)
@@ -122,6 +209,9 @@ class ServingEngine:
 
     # -- registry ------------------------------------------------------------
     def register(self, executor: Executor) -> "ServingEngine":
+        """Add (or replace) an executor under its ``name``; returns the
+        engine for chaining. The router must know the name before a batch
+        can be routed there."""
         self.executors[executor.name] = executor
         return self
 
@@ -227,12 +317,29 @@ class ServingEngine:
         self._metrics.started = time.perf_counter()
         return self._metrics
 
-    def serve_stream(self, requests: Sequence, batcher, *,
-                     gap_s: float = 0.0) -> ServeMetrics:
+    def serve_stream(self, requests: Sequence, batcher, *, gap_s: float = 0.0,
+                     micro: Optional[MicroBatcher] = None) -> ServeMetrics:
         """Client-stream serving: requests arrive one by one (``gap_s``
         apart), the DynamicBatcher closes batches by deadline / PSGS budget /
         max size, and closed batches are admitted to the executor graph
-        (paper §4.2.2)."""
+        (paper §4.2.2).
+
+        Args:
+            requests: request stream (anything yielding ``Request``-like
+                objects with ``seeds``/``arrival``).
+            batcher: batch closer (``DynamicBatcher`` protocol:
+                ``add(request)`` / ``flush()``).
+            gap_s: inter-arrival gap, client emulation.
+            micro: optional :class:`MicroBatcher` coalescing stage — closed
+                batches are held (deadline evaluated on the next arrival;
+                see the class docstring for sparse-stream caveats) and
+                merged into gather-friendly super-batches before admission,
+                so the fused feature path sees large unique-id sets.
+
+        Returns:
+            The run's :class:`ServeMetrics` (latencies include any
+            micro-batching wait, since arrival is stamped at ingest).
+        """
         metrics = self._reset()
         try:
             for r in requests:
@@ -240,11 +347,17 @@ class ServingEngine:
                     time.sleep(gap_s)
                 r.arrival = time.perf_counter()
                 out = batcher.add(r)
+                if out and micro is not None:
+                    out = micro.add(out)
                 if out:
                     self.submit_batch(out)
-            tail = batcher.flush()
-            if tail:
-                self.submit_batch(tail)
+            for closer in ((batcher, micro) if micro is not None
+                           else (batcher,)):
+                tail = closer.flush()
+                if tail and closer is batcher and micro is not None:
+                    tail = micro.add(tail)
+                if tail:
+                    self.submit_batch(tail)
             self.drain()
         finally:
             # stamp even when drain() re-raises an executor failure, so a
@@ -282,6 +395,7 @@ class ServingEngine:
                 ex.run(seeds)
 
     def close(self) -> None:
+        """Shut down every executor's worker pool (blocking)."""
         for ex in self.executors.values():
             close = getattr(ex, "close", None)
             if close:

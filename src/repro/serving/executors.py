@@ -59,15 +59,42 @@ def _accumulated_psgs(psgs_table: np.ndarray, seeds: np.ndarray) -> float:
 
 @runtime_checkable
 class Executor(Protocol):
-    """What the router and engine require of an executor."""
+    """What the router and engine require of an executor.
+
+    Attributes:
+        name: registry key used by the router and the engine.
+        kind: ``"host"`` | ``"device"`` — selects which latency statistic
+            a routing policy judges this executor by (Fig. 6(b) roles).
+        capacity: number of concurrent worker lanes (batches in flight).
+    """
 
     name: str
     kind: str           # "host" | "device" | ... (policy stat selection)
     capacity: int
 
-    def cost(self, seeds: np.ndarray) -> float: ...
+    def cost(self, seeds: np.ndarray) -> float:
+        """Routing signal for a batch.
 
-    def submit(self, seeds: np.ndarray) -> Future: ...
+        Args:
+            seeds: ``(B,)`` seed node ids, ``-1`` entries ignored.
+
+        Returns:
+            Accumulated PSGS of the batch (batch size when the executor has
+            no PSGS table).
+        """
+        ...
+
+    def submit(self, seeds: np.ndarray) -> Future:
+        """Enqueue a batch on one of the executor's worker lanes.
+
+        Args:
+            seeds: ``(B,)`` seed node ids.
+
+        Returns:
+            A future resolving to the ``(B, d_out)`` model output (one row
+            per seed — padding is an internal concern).
+        """
+        ...
 
 
 class BaseExecutor:
@@ -82,10 +109,15 @@ class BaseExecutor:
 
     def __init__(self, name: str, *, capacity: int = 1,
                  psgs_table: Optional[np.ndarray] = None,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, fused: bool = True):
         self.name = name
         self.capacity = int(capacity)
         self.psgs_table = psgs_table
+        # fused feature collection: one cross-hop dedup + one gather per
+        # tier class (store.lookup_hops) instead of per-hop lookups. Output
+        # is bit-identical; the flag exists for equivalence testing and for
+        # stores that only implement lookup().
+        self.fused = bool(fused)
         self._pool = ThreadPoolExecutor(max_workers=self.capacity,
                                         thread_name_prefix=f"exec-{name}")
         self._lock = threading.Lock()
@@ -115,11 +147,32 @@ class BaseExecutor:
     # -- execution -----------------------------------------------------------
     @property
     def inflight(self) -> int:
+        """Batches currently submitted and not yet completed (the router's
+        load-aware signal)."""
         with self._lock:
             return self._inflight
 
     def process(self, seeds: np.ndarray) -> jnp.ndarray:
+        """Subclass hook: sample + collect features + infer for one batch.
+
+        Args:
+            seeds: ``(B,)`` seed node ids (``-1`` padding allowed).
+
+        Returns:
+            ``(B, d_out)`` model output, one row per input seed.
+
+        Raises:
+            NotImplementedError: on the base class.
+        """
         raise NotImplementedError
+
+    def _collect(self, store, hops) -> list[jnp.ndarray]:
+        """Feature collection for a layered sample: the fused single-dispatch
+        path (``store.lookup_hops``) when enabled and available, else the
+        legacy per-hop loop."""
+        if self.fused and hasattr(store, "lookup_hops"):
+            return store.lookup_hops(hops)
+        return [store.lookup(h) for h in hops]
 
     def supports(self, seeds: np.ndarray) -> bool:
         """Eligibility for a batch — routers skip executors returning False
@@ -133,6 +186,8 @@ class BaseExecutor:
         return out
 
     def submit(self, seeds: np.ndarray) -> Future:
+        """Enqueue a batch on a worker lane (see :class:`Executor.submit`);
+        resolves to the ``(B, d_out)`` output of :meth:`process`."""
         with self._lock:
             self._inflight += 1
         fut = self._pool.submit(self.run, seeds)
@@ -144,10 +199,13 @@ class BaseExecutor:
             self._inflight -= 1
 
     def warmup(self, seeds: np.ndarray, *, rounds: int = 2) -> None:
+        """Run ``rounds`` synchronous passes so jit compilation happens
+        outside any measured window."""
         for _ in range(rounds):
             self.run(seeds)
 
     def close(self) -> None:
+        """Shut down the worker-lane pool (blocks until lanes drain)."""
         self._pool.shutdown(wait=True)
 
 
@@ -160,21 +218,23 @@ class HostExecutor(BaseExecutor):
     def __init__(self, graph, store, fanouts: Sequence[int],
                  infer_fn: Callable, *, capacity: int = 1,
                  psgs_table: Optional[np.ndarray] = None, rng_seed: int = 0,
-                 name: str = "host"):
+                 fused: bool = True, name: str = "host"):
         super().__init__(name, capacity=capacity, psgs_table=psgs_table,
-                         rng_seed=rng_seed)
+                         rng_seed=rng_seed, fused=fused)
         self.graph = graph
         self.store = store
         self.fanouts = tuple(fanouts)
         self.infer_fn = infer_fn
 
     def process(self, seeds: np.ndarray) -> jnp.ndarray:
+        """Exact host sampling → (fused) feature collection → inference;
+        returns one output row per seed."""
         n = int(seeds.shape[0])
         seeds_p = pad_to_bucket(np.asarray(seeds).astype(np.int32))
         hops_np = host_sample_dense(self._child_rng(), self.graph, seeds_p,
                                     self.fanouts)
         hops = [jnp.asarray(h) for h in hops_np]
-        hop_feats = [self.store.lookup(h) for h in hops]
+        hop_feats = self._collect(self.store, hops)
         return self.infer_fn(hop_feats, hops)[:n]
 
 
@@ -190,9 +250,9 @@ class DeviceExecutor(BaseExecutor):
                  fanouts: Sequence[int], infer_fn: Callable, *,
                  max_batch: int = 128, capacity: int = 1,
                  psgs_table: Optional[np.ndarray] = None, rng_seed: int = 0,
-                 name: str = "device"):
+                 fused: bool = True, name: str = "device"):
         super().__init__(name, capacity=capacity, psgs_table=psgs_table,
-                         rng_seed=rng_seed)
+                         rng_seed=rng_seed, fused=fused)
         self.graph_dev = graph_dev
         self.store = store
         self.fanouts = tuple(fanouts)
@@ -200,6 +260,8 @@ class DeviceExecutor(BaseExecutor):
         self.max_batch = int(max_batch)
 
     def process(self, seeds: np.ndarray) -> jnp.ndarray:
+        """Padded device sampling → (fused) feature collection → inference,
+        chunked at ``max_batch``; returns one output row per seed."""
         seeds = np.asarray(seeds)
         n = int(seeds.shape[0])
         outs = []
@@ -209,7 +271,7 @@ class DeviceExecutor(BaseExecutor):
             seeds_p[:chunk.shape[0]] = chunk
             hops = device_sample(self._next_key(), *self.graph_dev,
                                  jnp.asarray(seeds_p), self.fanouts)
-            hop_feats = [self.store.lookup(h) for h in hops]
+            hop_feats = self._collect(self.store, hops)
             outs.append(self.infer_fn(hop_feats, hops)[:chunk.shape[0]])
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
 
@@ -239,9 +301,9 @@ class ShardedExecutor(BaseExecutor):
                  max_batch: int = 128, capacity: int = 1,
                  psgs_table: Optional[np.ndarray] = None,
                  tier_table: Optional[np.ndarray] = None, rng_seed: int = 0,
-                 name: str = "sharded"):
+                 fused: bool = True, name: str = "sharded"):
         super().__init__(name, capacity=capacity, psgs_table=psgs_table,
-                         rng_seed=rng_seed)
+                         rng_seed=rng_seed, fused=fused)
         self.tier_table = tier_table
         from jax.sharding import NamedSharding, PartitionSpec as P
         self.mesh = mesh
@@ -274,6 +336,9 @@ class ShardedExecutor(BaseExecutor):
             in_specs=(P(), P(), P(axis), P()), out_specs=P(axis)))
 
     def supports(self, seeds: np.ndarray) -> bool:
+        """Eligible only when every valid seed lives on an HBM tier (the
+        sharded store serves HOT/WARM exactly; cold seeds would read as
+        zeros). Always ``True`` without a ``tier_table``."""
         if self.tier_table is None:
             return True
         seeds = np.asarray(seeds)
@@ -282,6 +347,9 @@ class ShardedExecutor(BaseExecutor):
         return bool((self.tier_table[seeds] <= 1).all())
 
     def process(self, seeds: np.ndarray) -> jnp.ndarray:
+        """Mesh-local shard_map sampling → (fused) sharded feature reads →
+        inference, chunked at the mesh-padded ``max_batch``; returns one
+        output row per seed."""
         seeds = np.asarray(seeds)
         n = int(seeds.shape[0])
         outs = []
@@ -291,6 +359,6 @@ class ShardedExecutor(BaseExecutor):
             seeds_p[:chunk.shape[0]] = chunk
             hops = list(self._sample(*self.graph_dev, jnp.asarray(seeds_p),
                                      self._next_key()))
-            hop_feats = [self.sstore.lookup(h) for h in hops]
+            hop_feats = self._collect(self.sstore, hops)
             outs.append(self.infer_fn(hop_feats, hops)[:chunk.shape[0]])
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)

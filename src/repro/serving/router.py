@@ -232,6 +232,19 @@ class CostModelRouter:
     def register(self, name: str, curve: LatencyCurve, *,
                  kind: Optional[str] = None,
                  executor: Optional[Executor] = None) -> "CostModelRouter":
+        """Register an executor's calibrated latency curve.
+
+        Args:
+            name: executor name (must match the engine registry).
+            curve: calibrated avg+tail :class:`LatencyCurve` over PSGS.
+            kind: ``"host"`` | ``"device"`` policy role; defaults to the
+                executor's ``kind`` attribute (``"device"`` if absent).
+            executor: optional live executor — enables ``supports``-based
+                eligibility and load-aware estimates.
+
+        Returns:
+            The router, for chaining.
+        """
         if kind is None:
             kind = getattr(executor, "kind", "device")
         self._curves[name] = curve
@@ -243,15 +256,30 @@ class CostModelRouter:
 
     @property
     def names(self) -> list[str]:
+        """Registered executor names, in registration order."""
         return list(self._curves)
 
     def curve(self, name: str) -> LatencyCurve:
+        """Current latency curve for ``name``.
+
+        Raises:
+            KeyError: if ``name`` was never registered.
+        """
         return self._curves[name]
 
     def update_curve(self, name: str, curve: LatencyCurve) -> None:
         """Swap in a freshly fitted curve (online recalibration). The swap is
         a single reference assignment, so concurrent ``route()`` calls see
-        either the old or the new curve — never a torn mix."""
+        either the old or the new curve — never a torn mix.
+
+        Args:
+            name: a registered executor name.
+            curve: the replacement :class:`LatencyCurve`.
+
+        Raises:
+            KeyError: if ``name`` was never registered (guards against
+                typo'd refits silently creating unroutable entries).
+        """
         if name not in self._curves:
             raise KeyError(f"unknown executor {name!r}")
         self._curves[name] = curve
@@ -263,6 +291,10 @@ class CostModelRouter:
                     kinds: Optional[Mapping[str, str]] = None,
                     executors: Optional[Mapping[str, Executor]] = None,
                     load_aware: bool = False) -> "CostModelRouter":
+        """Build a router from a name → curve mapping (the usual output of
+        :func:`calibrate_executors`). ``kinds`` overrides the policy role
+        per name; otherwise the executor's ``kind`` decides, falling back to
+        ``"host"`` for the name ``"host"`` and ``"device"`` elsewhere."""
         r = CostModelRouter(psgs_table, policy, load_aware=load_aware)
         for name, curve in curves.items():
             executor = (executors or {}).get(name)
@@ -286,9 +318,25 @@ class CostModelRouter:
 
     # -- routing -------------------------------------------------------------
     def batch_cost(self, seeds: np.ndarray) -> float:
+        """Accumulated PSGS of a batch (``-1`` padding ignored) — the
+        x-coordinate every latency curve is evaluated at."""
         return _accumulated_psgs(self.psgs_table, seeds)
 
     def estimate(self, name: str, q: float) -> float:
+        """Policy-selected latency estimate for one executor.
+
+        Args:
+            name: registered executor name.
+            q: accumulated PSGS of the batch (see :meth:`batch_cost`).
+
+        Returns:
+            Estimated seconds from the avg or tail curve (whichever the
+            policy judges this executor's kind by), scaled by
+            ``1 + inflight/capacity`` when ``load_aware``.
+
+        Raises:
+            KeyError: if ``name`` was never registered.
+        """
         stat = _policy_stat(self.policy, self._kinds[name])
         est = float(self._curves[name].eval(q, stat))
         if self.load_aware and name in self._executors:
@@ -305,6 +353,19 @@ class CostModelRouter:
         return names or list(self._curves)
 
     def route(self, seeds: np.ndarray) -> str:
+        """Pick the executor with the minimal policy-selected estimate.
+
+        Args:
+            seeds: ``(B,)`` seed ids of the batch (``-1`` padding ignored).
+
+        Returns:
+            The chosen executor's name; the choice is tallied in
+            :attr:`routed`. Ineligible executors (``supports`` returned
+            ``False``) are skipped unless that would leave none.
+
+        Raises:
+            RuntimeError: if no executor was ever registered.
+        """
         if not self._curves:
             raise RuntimeError("no executors registered")
         q = self.batch_cost(seeds)
