@@ -62,18 +62,40 @@ def build_serving_stack(*, nodes: int = 6000, avg_degree: float = 10.0,
                 store=store, infer_fn=infer_fn, fanouts=fanouts, topo=topo)
 
 
+def make_model_infer_fn(stack, hidden: tuple[int, ...] = (64, 64), *,
+                        seed: int = 0):
+    """Another jitted GraphSAGE ``infer_fn`` over the stack's fanouts —
+    multi-model benchmarks give each co-served model its own widths.
+    Delegates to the launcher's builder so the two stay one definition."""
+    from repro.launch.serve import make_infer_fn
+    return make_infer_fn(stack["feats"].shape[1], tuple(hidden),
+                         stack["fanouts"], seed)
+
+
+def store_bytes(store) -> int:
+    """Resident bytes of a tiered store's feature arrays (all tiers) —
+    the shared-store-vs-isolated-engines memory comparison signal."""
+    return sum(int(np.asarray(a).nbytes)
+               for a in (store.hot, store.warm, store.host, store.disk))
+
+
 def make_executors(stack, *, num_workers: int = 2, max_batch: int = 128,
-                   fused: bool = True):
+                   fused: bool = True, infer_fn=None, store=None,
+                   rng_seed: int = 0):
     """Host + device executor pair over a built stack (executor-graph API).
-    ``fused=False`` selects the legacy per-hop feature-collection path."""
+    ``fused=False`` selects the legacy per-hop feature-collection path;
+    ``infer_fn``/``store`` override the stack's (multi-model benchmarks
+    build one executor pair per model over the shared store)."""
     g = stack["graph"]
-    host = HostExecutor(g, stack["store"], stack["fanouts"],
-                        stack["infer_fn"], capacity=num_workers,
-                        psgs_table=stack["psgs"], fused=fused)
-    device = DeviceExecutor(g.device_arrays(), stack["store"],
-                            stack["fanouts"], stack["infer_fn"],
-                            max_batch=max_batch, capacity=num_workers,
-                            psgs_table=stack["psgs"], fused=fused)
+    infer_fn = infer_fn if infer_fn is not None else stack["infer_fn"]
+    store = store if store is not None else stack["store"]
+    host = HostExecutor(g, store, stack["fanouts"], infer_fn,
+                        capacity=num_workers, psgs_table=stack["psgs"],
+                        fused=fused, rng_seed=rng_seed)
+    device = DeviceExecutor(g.device_arrays(), store, stack["fanouts"],
+                            infer_fn, max_batch=max_batch,
+                            capacity=num_workers, psgs_table=stack["psgs"],
+                            fused=fused, rng_seed=rng_seed)
     return {"host": host, "device": device}
 
 

@@ -70,12 +70,14 @@ def run(dry_run: bool = False) -> dict:
          f"per_hop={old_n};reduction={old_n / max(new_n, 1):.1f}x")
 
     # -- 2) store-level feature-collection latency ---------------------------
+    store.reset_stats()  # phase boundary: phase 1's probes must not bleed in
     t_old = timeit(lambda: [store.lookup(h) for h in hops])
     t_new = timeit(lambda: store.lookup_hops(hops))
     results["collect_us"] = {"per_hop": t_old * 1e6, "fused": t_new * 1e6}
     emit("fused_gather/collect_per_hop_us", t_old * 1e6)
     emit("fused_gather/collect_fused_us", t_new * 1e6,
          f"speedup={t_old / max(t_new, 1e-12):.2f}x")
+    store.reset_stats()  # phase boundary: drop the timing loops' dispatches
 
     # -- 3) end-to-end serving: legacy vs fused vs fused+micro ---------------
     thr = float(np.median(psgs)) * per * 2

@@ -6,7 +6,10 @@ Serves a GraphSAGE model over a skewed synthetic graph with batched requests
 through the full Quiver pipeline on the executor-graph stack — per-executor
 PSGS calibration, the four operating points as cost-model routing policies,
 dynamic PSGS-budget batching, per-batch futures with admission control — and
-prints a per-policy latency/throughput report.
+prints a per-policy latency/throughput report. With ``--multi-model`` a
+second, wider GraphSAGE joins the engine through a ``ModelRegistry`` sharing
+the same feature store: the report then shows both models' PSGS cut-points
+and per-model routing splits on one interleaved stream.
 """
 import argparse
 import json
@@ -14,11 +17,45 @@ import json
 import numpy as np
 
 from repro.core import DynamicBatcher
-from repro.launch.serve import build_stack
+from repro.launch.serve import build_stack, make_infer_fn
 from repro.serving import (AdaptiveConfig, AdaptiveController,
                            CalibrationResult, CostModelRouter,
-                           DeviceExecutor, HostExecutor, ServingEngine,
+                           DeviceExecutor, HostExecutor, ModelRegistry,
+                           ServingEngine, build_model_entry,
                            calibrate_executors)
+
+
+def run_multi_model(args) -> None:
+    """Two GraphSAGE variants (base + wide) co-served by one engine over
+    ONE shared store; requests interleave round-robin and each model routes
+    by its own calibrated curves."""
+    graph, feats, psgs, fap, store, gen, infer_fn = build_stack(
+        nodes=args.nodes, avg_degree=10.0, d_feat=64, fanouts=(6, 4),
+        hot_frac=0.3)
+    registry = ModelRegistry()
+    widths = {"base": (64, 64), "wide": (256, 256)}
+    for i, (name, hidden) in enumerate(widths.items()):
+        entry = build_model_entry(
+            name, graph=graph, store=store, fanouts=(6, 4),
+            infer_fn=make_infer_fn(64, hidden, (6, 4), seed=i),
+            psgs_table=psgs, capacity=2, max_batch=32, rng_seed=i)
+        registry.add(entry)
+    engine = ServingEngine(registry, max_inflight=64)
+    gen.rng = np.random.default_rng(5)
+    reqs = list(gen.stream(args.requests, seeds_per_request=args.batch_seeds,
+                           models=list(widths)))
+    engine.warmup([reqs[0]])
+    batcher = DynamicBatcher(deadline_s=0.02, psgs_table=psgs, max_batch=16)
+    m = engine.serve_stream(reqs, batcher, gap_s=0.002)
+    # crossover() returns inf when one executor dominates everywhere;
+    # json.dumps would emit the non-standard `Infinity` token, so map it
+    cuts = {name: registry.get(name).router.crossover("host", "device")
+            for name in registry}
+    report = {"cutpoints": {n: c if np.isfinite(c) else None
+                            for n, c in cuts.items()},
+              **m.summary()}
+    print(json.dumps(report, indent=2))
+    engine.close()
 
 
 def main() -> None:
@@ -29,7 +66,14 @@ def main() -> None:
     p.add_argument("--adaptive", action="store_true",
                    help="hook the online workload-adaptation loop into the "
                         "engine (live FAP re-placement + drift refit)")
+    p.add_argument("--multi-model", action="store_true",
+                   help="co-serve a second (wider) GraphSAGE through a "
+                        "ModelRegistry over the same shared feature store")
     args = p.parse_args()
+
+    if args.multi_model:
+        run_multi_model(args)
+        return
 
     def fresh_stack():
         graph, feats, psgs, fap, store, gen, infer_fn = build_stack(

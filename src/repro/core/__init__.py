@@ -2,24 +2,30 @@
 feature placement, the tiered one-sided-read feature store (with the fused
 ``lookup_hops`` serving hot path), and request batching/workload generation.
 
-The serving engine, executors and routing live in :mod:`repro.serving`;
-``repro.core.pipeline`` and ``repro.core.scheduler`` remain as deprecation
-shims re-exporting from there."""
+The serving engine, executors, routing and the multi-model registry live in
+:mod:`repro.serving`; ``repro.core.pipeline`` and ``repro.core.scheduler``
+remain as deprecation shims re-exporting from there. This package imports
+the canonical serving-layer objects directly (same classes the shims
+re-export), so merely importing ``repro.core`` stays warning-free — only
+touching the shims themselves (including the legacy ``ServingEngine``
+construction signature, resolved lazily below) emits the
+``DeprecationWarning``."""
 from repro.core.fap import compute_fap, monte_carlo_fap
 from repro.core.feature_store import ShardedFeatureStore, TieredFeatureStore
-from repro.core.pipeline import ServeMetrics, ServingEngine
 from repro.core.placement import (PlacementPlan, TopologySpec,
                                   degree_placement, expert_placement,
                                   freq_placement, hash_placement,
                                   migration_pairs, p3_placement,
                                   quiver_placement)
 from repro.core.psgs import batch_psgs, compute_psgs, monte_carlo_psgs
-from repro.core.scheduler import (CalibrationResult, CostModelRouter,
+from repro.core.serving import (DEFAULT_MODEL, DynamicBatcher, MicroBatcher,
+                                Request, WorkloadGenerator, batch_seeds,
+                                pad_to_bucket)
+from repro.serving.engine import ServeMetrics
+from repro.serving.router import (CalibrationResult, CostModelRouter,
                                   HybridScheduler, LatencyCurve,
                                   StaticScheduler, calibrate,
                                   calibrate_executors)
-from repro.core.serving import (DynamicBatcher, MicroBatcher, Request,
-                                WorkloadGenerator, batch_seeds, pad_to_bucket)
 
 __all__ = [
     "compute_psgs", "monte_carlo_psgs", "batch_psgs", "compute_fap",
@@ -31,5 +37,20 @@ __all__ = [
     "CostModelRouter", "HybridScheduler",
     "StaticScheduler", "Request", "WorkloadGenerator", "DynamicBatcher",
     "MicroBatcher", "batch_seeds", "pad_to_bucket", "ServingEngine",
-    "ServeMetrics",
+    "ServeMetrics", "DEFAULT_MODEL",
 ]
+
+
+def __getattr__(name: str):
+    # Lazy so `import repro.core` never triggers the shims' deprecation
+    # warnings: only callers actually touching the legacy surface — the
+    # two-executor ServingEngine signature, or attribute-style access to
+    # the shim submodules (`repro.core.pipeline.X`) — pay them.
+    if name == "ServingEngine":
+        from repro.core.pipeline import ServingEngine
+        globals()[name] = ServingEngine  # cache: warn once, resolve once
+        return ServingEngine
+    if name in ("pipeline", "scheduler"):
+        import importlib
+        return importlib.import_module(f"{__name__}.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

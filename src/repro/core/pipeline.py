@@ -21,6 +21,14 @@ from repro.serving.executors import DeviceExecutor, HostExecutor
 
 __all__ = ["ServeMetrics", "ServingEngine"]
 
+# one import-time warning per process (module execution happens once; later
+# imports hit the sys.modules cache) — the legacy ServingEngine below warns
+# again, per instantiation, with a construction-specific message
+warnings.warn(
+    "repro.core.pipeline is a deprecated shim; import ServingEngine / "
+    "ServeMetrics from repro.serving (see docs/architecture.md)",
+    DeprecationWarning, stacklevel=2)
+
 
 class ServingEngine(_EngineBase):
     """Legacy two-executor construction: batch → (hybrid) sample →

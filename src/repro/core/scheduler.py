@@ -6,10 +6,18 @@ special case of :class:`repro.serving.router.CostModelRouter`. Import
 ``repro.serving`` in new code (see docs/architecture.md for the module map);
 this module only keeps historical ``repro.core.scheduler`` imports working.
 """
+import warnings
+
 from repro.serving.router import (CalibrationResult, CostModelRouter,
                                   HybridScheduler, LatencyCurve,
                                   StaticScheduler, calibrate,
                                   calibrate_executors)
+
+# one import-time warning per process (later imports hit sys.modules)
+warnings.warn(
+    "repro.core.scheduler is a deprecated shim; import the routing API "
+    "from repro.serving (see docs/architecture.md)",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = [
     "LatencyCurve", "CalibrationResult", "calibrate", "calibrate_executors",

@@ -16,9 +16,10 @@ import numpy as np
 
 from repro.serving.engine import MicroBatcher  # canonical home: serving pkg
 from repro.serving.executors import pad_to_bucket  # canonical home moved
+from repro.serving.registry import DEFAULT_MODEL
 
 __all__ = ["Request", "WorkloadGenerator", "DynamicBatcher", "MicroBatcher",
-           "batch_seeds", "pad_to_bucket"]
+           "batch_seeds", "pad_to_bucket", "DEFAULT_MODEL"]
 
 
 @dataclasses.dataclass
@@ -27,6 +28,7 @@ class Request:
     seeds: np.ndarray            # (s,) seed node ids
     arrival: float               # seconds (perf_counter domain)
     done: Optional[float] = None
+    model: str = DEFAULT_MODEL   # registry entry that serves this request
 
     @property
     def latency(self) -> float:
@@ -69,21 +71,32 @@ class WorkloadGenerator:
             raise ValueError(f"seed_prob must have shape ({self.num_nodes},)")
         self.p = p / max(p.sum(), 1e-12)
 
-    def make_request(self, seeds_per_request: int = 1) -> Request:
+    def make_request(self, seeds_per_request: int = 1, *,
+                     model: str = DEFAULT_MODEL) -> Request:
         seeds = self.rng.choice(self.num_nodes, size=seeds_per_request,
                                 p=self.p)
         self._next_id += 1
         return Request(self._next_id, seeds.astype(np.int64),
-                       time.perf_counter())
+                       time.perf_counter(), model=model)
 
-    def stream(self, n: int, seeds_per_request: int = 1) -> Iterator[Request]:
-        for _ in range(n):
-            yield self.make_request(seeds_per_request)
+    def stream(self, n: int, seeds_per_request: int = 1, *,
+               models: Optional[list[str]] = None) -> Iterator[Request]:
+        """Yield ``n`` requests. ``models`` (optional) tags them round-robin
+        across the given model names — the interleaved multi-model client
+        mix; ``None`` keeps the untagged single-model stream."""
+        for i in range(n):
+            model = models[i % len(models)] if models else DEFAULT_MODEL
+            yield self.make_request(seeds_per_request, model=model)
 
 
 class DynamicBatcher:
     """Accumulates requests into batches closed by deadline / PSGS budget /
-    max size. ``psgs_budget=None`` degenerates to Batchsize-Bound."""
+    max size. ``psgs_budget=None`` degenerates to Batchsize-Bound.
+
+    Batches never mix models: ``ServingEngine.serve_stream`` keeps one
+    ``clone()`` per model, and ``add`` additionally closes the pending batch
+    whenever the incoming request carries a different ``model`` tag
+    (defense in depth for callers driving one instance by hand)."""
 
     def __init__(self, *, deadline_s: float = 0.002,
                  psgs_budget: Optional[float] = None, max_batch: int = 1024,
@@ -94,16 +107,38 @@ class DynamicBatcher:
         self.psgs_table = psgs_table
         self._pending: list[Request] = []
         self._opened: Optional[float] = None
+        self._model: Optional[str] = None
         self._acc_psgs = 0.0
 
+    def clone(self) -> "DynamicBatcher":
+        """Fresh empty batcher with the same bounds — multi-model streams
+        need one batcher per model. Built via ``type(self)`` so subclasses
+        stay subclasses (override when a subclass adds constructor
+        arguments)."""
+        return type(self)(deadline_s=self.deadline_s,
+                          psgs_budget=self.psgs_budget,
+                          max_batch=self.max_batch,
+                          psgs_table=self.psgs_table)
+
     def add(self, req: Request) -> Optional[list[Request]]:
-        """Add a request; returns a closed batch if a boundary was hit."""
+        """Add a request; returns a closed batch if a boundary was hit (or
+        the previous pending batch when ``req`` carries a different model
+        tag — the new request is then queued fresh)."""
+        model = getattr(req, "model", DEFAULT_MODEL)
+        closed = None
+        if self._pending and model != self._model:
+            closed = self.flush()
         if self._opened is None:
             self._opened = time.perf_counter()
+        self._model = model
         self._pending.append(req)
         if self.psgs_table is not None:
             self._acc_psgs += float(
                 self.psgs_table[req.seeds[req.seeds >= 0]].sum())
+        if closed is not None:
+            # the model boundary already closed a batch this call; the new
+            # request's own bounds are evaluated on the next add (or flush)
+            return closed
         full = len(self._pending) >= self.max_batch
         over_budget = (self.psgs_budget is not None
                        and self._acc_psgs >= self.psgs_budget)
@@ -116,7 +151,7 @@ class DynamicBatcher:
         if not self._pending:
             return None
         batch, self._pending = self._pending, []
-        self._opened, self._acc_psgs = None, 0.0
+        self._opened, self._acc_psgs, self._model = None, 0.0, None
         return batch
 
 

@@ -10,7 +10,10 @@ cost-model router → futures-based serving engine; then reports
 throughput/latency. With ``--sharded`` (requires ≥2 devices, e.g.
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU) a third,
 distributed executor joins the registry: mesh-local sampling + one-sided
-sharded feature reads.
+sharded feature reads. With repeatable ``--models name=preset`` flags the
+engine co-serves several GNNs over the ONE shared store — each model gets
+its own calibration and router (per-model PSGS cut-points), requests are
+tagged round-robin, and the report breaks down per model.
 """
 from __future__ import annotations
 
@@ -29,8 +32,33 @@ from repro.graph import power_law_graph
 from repro.models.gnn_basic import sage_init, sage_layered
 from repro.serving import (AdaptiveConfig, AdaptiveController,
                            CostModelRouter, DeviceExecutor, HostExecutor,
-                           MicroBatcher, ServingEngine, ShardedExecutor,
-                           StaticScheduler, calibrate_executors)
+                           MicroBatcher, ModelRegistry, ServingEngine,
+                           ShardedExecutor, StaticScheduler,
+                           build_model_entry, calibrate_executors)
+
+# --models presets: hidden layer widths of the GraphSAGE variant each model
+# serves (all share the graph, feature store and samplers — only the model
+# compute differs, which is exactly what per-model calibration captures)
+MODEL_PRESETS = {
+    "sage-small": (64, 64),
+    "sage-base": (128, 128),
+    "sage-wide": (256, 256),
+    "sage-deep": (128, 128, 128),
+}
+
+
+def make_infer_fn(d_feat: int, hidden: tuple[int, ...],
+                  fanouts: tuple[int, ...], seed: int = 0):
+    """Jitted GraphSAGE ``infer_fn(hop_feats, hop_ids)`` with the given
+    hidden widths — one per served model."""
+    params = sage_init(jax.random.key(seed), [d_feat, *hidden])
+
+    @jax.jit
+    def infer_fn(hop_feats, hop_ids):
+        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
+        return sage_layered(params, hop_feats, fanouts, hop_masks=masks)
+
+    return infer_fn
 
 
 def build_stack(*, nodes: int, avg_degree: float, d_feat: int,
@@ -51,14 +79,50 @@ def build_stack(*, nodes: int, avg_degree: float, d_feat: int,
     plan = quiver_placement(fap, topo)
     store = TieredFeatureStore.build(feats, plan)
 
-    params = sage_init(jax.random.key(seed), [d_feat, 128, 128])
-
-    @jax.jit
-    def infer_fn(hop_feats, hop_ids):
-        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
-        return sage_layered(params, hop_feats, fanouts, hop_masks=masks)
+    infer_fn = make_infer_fn(d_feat, (128, 128), fanouts, seed)
 
     return graph, feats, psgs, fap, store, gen, infer_fn
+
+
+def parse_model_specs(specs: list[str]) -> dict[str, tuple[int, ...]]:
+    """``name=preset`` flags → {model name: hidden widths}; raises
+    SystemExit on malformed specs, duplicate names or unknown presets."""
+    models: dict[str, tuple[int, ...]] = {}
+    for spec in specs:
+        name, sep, preset = spec.partition("=")
+        if not sep or not name:
+            raise SystemExit(f"--models expects name=preset, got {spec!r}")
+        if name in models:
+            raise SystemExit(f"--models: duplicate model name {name!r}")
+        if preset not in MODEL_PRESETS:
+            raise SystemExit(f"--models: unknown preset {preset!r}; "
+                             f"choose from {sorted(MODEL_PRESETS)}")
+        models[name] = MODEL_PRESETS[preset]
+    return models
+
+
+def build_sharded_store(graph, feats, fap, *, hot_frac: float = 0.25):
+    """Mesh + sharded feature store shared by every model's sharded
+    executor (built once — the whole point of co-serving is one copy of
+    the feature rows). Exits when the runtime has <2 devices."""
+    world = len(jax.devices())
+    if world < 2:
+        raise SystemExit(
+            "--sharded needs ≥2 devices; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    mesh = make_mesh((world,), ("x",))
+    # rebuild a placement whose warm tier is sharded over the real mesh;
+    # size HBM (hot+warm) to cover every node so the sharded store —
+    # which serves only the HBM tiers — is exact for any batch
+    topo = TopologySpec(num_pods=1, devices_per_pod=world,
+                        rows_per_device=max(-(-graph.num_nodes // world),
+                                            64),
+                        rows_host=max(graph.num_nodes // 2, 64),
+                        hot_replicate_fraction=hot_frac)
+    splan = quiver_placement(fap, topo)
+    sstore = ShardedFeatureStore.from_tiered(
+        TieredFeatureStore.build(feats, splan), mesh, "x")
+    return mesh, sstore, splan
 
 
 def build_executors(graph, store, fanouts, infer_fn, psgs, *,
@@ -79,28 +143,82 @@ def build_executors(graph, store, fanouts, infer_fn, psgs, *,
                                  fused=fused),
     }
     if sharded:
-        world = len(jax.devices())
-        if world < 2:
-            raise SystemExit(
-                "--sharded needs ≥2 devices; on CPU set "
-                "XLA_FLAGS=--xla_force_host_platform_device_count=8")
-        mesh = make_mesh((world,), ("x",))
-        # rebuild a placement whose warm tier is sharded over the real mesh;
-        # size HBM (hot+warm) to cover every node so the sharded store —
-        # which serves only the HBM tiers — is exact for any batch
-        topo = TopologySpec(num_pods=1, devices_per_pod=world,
-                            rows_per_device=max(-(-graph.num_nodes // world),
-                                                64),
-                            rows_host=max(graph.num_nodes // 2, 64),
-                            hot_replicate_fraction=hot_frac)
-        splan = quiver_placement(fap, topo)
-        sstore = ShardedFeatureStore.from_tiered(
-            TieredFeatureStore.build(feats, splan), mesh, "x")
+        mesh, sstore, splan = build_sharded_store(graph, feats, fap,
+                                                  hot_frac=hot_frac)
         executors["sharded"] = ShardedExecutor(
             mesh, "x", graph.device_arrays(), sstore, fanouts, infer_fn,
             max_batch=max_batch, psgs_table=psgs, tier_table=splan.tier,
             fused=fused)
     return executors
+
+
+def _serve_and_report(args, engine, psgs, reqs, controller) -> None:
+    """Shared tail of the single- and multi-model launcher paths: warmup,
+    the optional micro-batched stream (with ``--adapt-micro`` attachment)
+    or pre-formed batches, then the JSON report."""
+    engine.warmup([reqs[0]])
+    if args.micro_batch > 0:
+        # stream path: per-request ingest, then the PSGS-aware coalescing
+        # stage feeds the fused gather super-batches under its deadline
+        from repro.core import DynamicBatcher
+        micro = MicroBatcher(deadline_s=args.micro_deadline_ms * 1e-3,
+                             max_seeds=args.micro_batch, psgs_table=psgs)
+        if args.adapt_micro and controller is not None:
+            # auto-tuning nudges the stage of the first model on the stream
+            # (serve_stream clones one per further model)
+            controller.attach_micro(micro)
+        metrics = engine.serve_stream(
+            reqs, DynamicBatcher(deadline_s=0.0, max_batch=1), micro=micro)
+        print(f"[serve] micro-batching: {micro.emitted} super-batches, "
+              f"{micro.coalesced} coalesced, final bounds "
+              f"max_seeds={micro.max_seeds} "
+              f"deadline_ms={micro.deadline_s * 1e3:.2f}")
+    else:
+        metrics = engine.run([[r] for r in reqs])
+    print(json.dumps(metrics.summary(), indent=2))
+    if controller is not None:
+        print("[serve] adaptation:", json.dumps(controller.report()))
+
+
+def serve_multi_model(args, fanouts, graph, psgs, store, gen) -> None:
+    """The ``--models`` path: one engine, one shared store, N models.
+
+    Per model: its own ``infer_fn`` (preset hidden widths), executor set
+    over the shared store, calibration, and router — so each model gets its
+    own PSGS cut-point. Requests are tagged round-robin across the models;
+    admission stays global; the report breaks down per model.
+    """
+    specs = parse_model_specs(args.models)
+    order = np.argsort(psgs)
+    cal_batches = [order[int(q * graph.num_nodes):][:args.batch]
+                   .astype(np.int64) for q in np.linspace(0.05, 0.95, 8)]
+    registry = ModelRegistry()
+    for i, (name, hidden) in enumerate(specs.items()):
+        infer = make_infer_fn(args.d_feat, hidden, fanouts, seed=i)
+        entry = build_model_entry(
+            name, graph=graph, store=store, fanouts=fanouts, infer_fn=infer,
+            psgs_table=psgs, policy=args.policy, capacity=args.workers,
+            max_batch=args.batch, fused=args.fused, rng_seed=i,
+            calibration_batches=cal_batches)
+        registry.add(entry)
+        cut = entry.router.crossover("host", "device")
+        print(f"[serve] model {name!r} ({'x'.join(map(str, hidden))}): "
+              f"host/device PSGS cut-point {cut:.1f}")
+
+    hooks = []
+    controller = None
+    if args.adaptive:
+        controller = AdaptiveController(
+            graph, fanouts, store, registry.routers(), psgs_table=psgs,
+            config=AdaptiveConfig(interval_batches=args.adapt_interval,
+                                  rows_per_step=args.adapt_rows,
+                                  drift_threshold=args.drift_threshold))
+        hooks.append(controller)
+    engine = ServingEngine(registry, max_inflight=args.max_inflight,
+                           admission=args.admission, hooks=hooks)
+    reqs = list(gen.stream(args.requests, seeds_per_request=args.batch,
+                           models=list(specs)))
+    _serve_and_report(args, engine, psgs, reqs, controller)
 
 
 def main() -> None:
@@ -123,9 +241,21 @@ def main() -> None:
                    help="admission window: outstanding batches")
     p.add_argument("--admission", default="wait", choices=["wait", "shed"],
                    help="behavior when the admission window is full")
+    p.add_argument("--models", action="append", default=None,
+                   metavar="NAME=PRESET",
+                   help="co-serve a named model from a preset (repeatable; "
+                        f"presets: {sorted(MODEL_PRESETS)}). All models "
+                        "share the graph + feature store; each gets its own "
+                        "calibration, router and metrics. Omit for the "
+                        "single-model path.")
     p.add_argument("--adaptive", action="store_true",
                    help="enable the online workload-adaptation loop: live "
                         "FAP re-placement + router drift refit")
+    p.add_argument("--adapt-micro", action="store_true",
+                   help="let the adaptive controller auto-tune the micro-"
+                        "batcher deadline/max_seeds toward the measured "
+                        "latency-curve knee (needs --adaptive and "
+                        "--micro-batch > 0)")
     p.add_argument("--adapt-interval", type=int, default=32,
                    help="control period in completed batches")
     p.add_argument("--adapt-rows", type=int, default=64,
@@ -147,6 +277,9 @@ def main() -> None:
                         "micro-batching stage")
     args = p.parse_args()
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    if args.adapt_micro and not (args.adaptive and args.micro_batch > 0):
+        raise SystemExit("--adapt-micro needs --adaptive and "
+                         "--micro-batch > 0")
 
     graph, feats, psgs, fap, store, gen, infer_fn = build_stack(
         nodes=args.nodes, avg_degree=args.avg_degree, d_feat=args.d_feat,
@@ -155,6 +288,12 @@ def main() -> None:
           f" tiers: {store.plan.tier_counts()}")
 
     static_policy = args.policy in ("host_only", "device_only")
+    if args.models:
+        if static_policy:
+            raise SystemExit("--models needs a cost-model policy "
+                             "(per-model routing is the point)")
+        serve_multi_model(args, fanouts, graph, psgs, store, gen)
+        return
     if args.sharded and static_policy:
         print("[serve] note: static policy can never route to the sharded "
               "executor; skipping its construction")
@@ -199,23 +338,7 @@ def main() -> None:
                            max_inflight=args.max_inflight,
                            admission=args.admission, hooks=hooks)
     reqs = list(gen.stream(args.requests, seeds_per_request=args.batch))
-    engine.warmup([reqs[0]])
-    if args.micro_batch > 0:
-        # stream path: per-request ingest, then the PSGS-aware coalescing
-        # stage feeds the fused gather super-batches under its deadline
-        from repro.core import DynamicBatcher
-        micro = MicroBatcher(deadline_s=args.micro_deadline_ms * 1e-3,
-                             max_seeds=args.micro_batch, psgs_table=psgs)
-        metrics = engine.serve_stream(
-            reqs, DynamicBatcher(deadline_s=0.0, max_batch=1), micro=micro)
-        print(f"[serve] micro-batching: {micro.emitted} super-batches, "
-              f"{micro.coalesced} coalesced")
-    else:
-        batches = [[r] for r in reqs]
-        metrics = engine.run(batches)
-    print(json.dumps(metrics.summary(), indent=2))
-    if controller is not None:
-        print("[serve] adaptation:", json.dumps(controller.report()))
+    _serve_and_report(args, engine, psgs, reqs, controller)
 
 
 if __name__ == "__main__":

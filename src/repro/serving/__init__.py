@@ -1,5 +1,5 @@
 """Executor-graph serving stack: pluggable executors, N-way cost-model
-routing, and the futures-based serving engine.
+routing, multi-model registries, and the futures-based serving engine.
 
 Layering (each importable without ``repro.core``; the legacy
 ``repro.core.{pipeline,scheduler}`` modules are thin shims onto this
@@ -8,16 +8,24 @@ package):
     executors.py  Executor protocol + Host/Device/Sharded executors
     router.py     LatencyCurve calibration + CostModelRouter (N-way) and the
                   binary HybridScheduler / StaticScheduler special cases
-    engine.py     ServingEngine: admission control, per-batch futures,
-                  telemetry hooks
-    adaptive.py   online workload adaptation: decayed seed-frequency sketch,
-                  live FAP re-placement (bounded tier migration) and router
-                  drift refit (AdaptiveController plugs into engine hooks)
+    registry.py   ModelRegistry/ModelEntry: N models sharing the stores and
+                  samplers, each with its own infer_fn, executors and
+                  calibrated router (the single-model API is the 1-entry
+                  special case)
+    engine.py     ServingEngine: admission control (global across models),
+                  per-batch futures, per-model metrics, telemetry hooks
+    adaptive.py   online workload adaptation: decayed seed-frequency sketch
+                  (shared across models), live FAP re-placement (bounded
+                  tier migration), per-model router drift refit, and
+                  micro-batch auto-tuning (AdaptiveController plugs into
+                  engine hooks)
 
 To add a new executor: subclass ``BaseExecutor``, implement
 ``process(seeds) -> one output row per seed``, calibrate it with
 ``calibrate_executors`` and register the curve on a ``CostModelRouter``
-plus the executor on the ``ServingEngine``.
+plus the executor on the ``ServingEngine``. To co-serve another model:
+build its executors against the *shared* store (``build_model_entry``) and
+``ModelRegistry.register`` it — requests select it via ``Request.model``.
 """
 from repro.serving.executors import (BaseExecutor, DeviceExecutor, Executor,
                                      HostExecutor, ShardedExecutor,
@@ -26,7 +34,10 @@ from repro.serving.router import (POLICIES, CalibrationResult,
                                   CostModelRouter, HybridScheduler,
                                   LatencyCurve, StaticScheduler, calibrate,
                                   calibrate_executors)
-from repro.serving.engine import MicroBatcher, ServeMetrics, ServingEngine
+from repro.serving.registry import (DEFAULT_MODEL, ModelEntry, ModelRegistry,
+                                    build_model_entry)
+from repro.serving.engine import (MicroBatcher, ModelStats, ServeMetrics,
+                                  ServingEngine)
 from repro.serving.adaptive import (AdaptiveConfig, AdaptiveController,
                                     FrequencySketch, curve_drift)
 
@@ -35,6 +46,7 @@ __all__ = [
     "ShardedExecutor", "pad_to_bucket", "POLICIES", "LatencyCurve",
     "CalibrationResult", "calibrate", "calibrate_executors",
     "CostModelRouter", "HybridScheduler", "StaticScheduler",
-    "ServingEngine", "ServeMetrics", "MicroBatcher", "AdaptiveConfig",
-    "AdaptiveController", "FrequencySketch", "curve_drift",
+    "DEFAULT_MODEL", "ModelEntry", "ModelRegistry", "build_model_entry",
+    "ServingEngine", "ServeMetrics", "ModelStats", "MicroBatcher",
+    "AdaptiveConfig", "AdaptiveController", "FrequencySketch", "curve_drift",
 ]

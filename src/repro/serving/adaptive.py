@@ -15,16 +15,31 @@ the loop, in the spirit of OMEGA's serve-time recomputation
                         (c) migrates a bounded number of rows between the
                         HOT/WARM/HOST tiers of the live TieredFeatureStore
                         (swap-based — serving never pauses, lookups stay
-                        bit-identical), and (d) refits per-executor
-                        LatencyCurves from live ``(psgs, latency)`` samples,
-                        swapping them into the CostModelRouter when the
-                        measured drift exceeds a threshold.
+                        bit-identical), (d) refits LatencyCurves from live
+                        ``(psgs, latency)`` samples — *per model*, swapping
+                        them into that model's CostModelRouter when the
+                        measured drift exceeds a threshold — and (e)
+                        optionally nudges an attached MicroBatcher's
+                        ``deadline_s``/``max_seeds`` toward the measured
+                        knee of the live latency curve (micro-batch
+                        auto-tuning, clamped to configured bounds).
+
+Multi-model serving shares ONE sketch (FAP placement is store-wide — every
+model reads the same feature rows) but keeps latency samples and curve
+refits per ``(model, executor)``: two models over the same store have
+different curves, so their refits must never blend.
 
 Wire-up::
 
     controller = AdaptiveController(graph, fanouts, store, router,
                                     psgs_table=psgs)
     engine = ServingEngine(executors, router, hooks=[controller])
+
+or, multi-model (``registry`` is a ModelRegistry)::
+
+    controller = AdaptiveController(graph, fanouts, store,
+                                    registry.routers(), psgs_table=psgs)
+    engine = ServingEngine(registry, hooks=[controller])
 
 The controller runs its control step inline on the completion-callback
 thread that crossed the period boundary: that one lane stalls for the
@@ -38,12 +53,13 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
 from repro.core.fap import compute_fap
 from repro.core.placement import migration_pairs, quiver_placement
+from repro.serving.registry import DEFAULT_MODEL, ModelRegistry
 from repro.serving.router import CostModelRouter, LatencyCurve
 
 
@@ -53,6 +69,8 @@ class FrequencySketch:
     ``observe`` is called from executor callback threads; ``decay`` once per
     control period, so the sketch tracks the *recent* request mix: with decay
     ``d`` per period, a seed last hot ``k`` periods ago retains weight d^k.
+    One sketch serves every model of a registry — feature placement is
+    store-wide, so accesses blend across models by design.
     """
 
     def __init__(self, num_nodes: int, *, decay: float = 0.9):
@@ -103,6 +121,13 @@ class AdaptiveConfig:
     drift_threshold: float = 0.25  # mean relative avg-curve error to swap
     sample_window: int = 512       # live (psgs, latency) samples kept/executor
     fap_truncated: bool = False    # forwarded to compute_fap
+    # micro-batch auto-tuning (active only when a MicroBatcher is attached):
+    # per control step, nudge deadline_s/max_seeds a `micro_step` fraction of
+    # the way toward the knee of the live latency curve, clamped to bounds
+    micro_step: float = 0.5
+    micro_seeds_bounds: tuple[int, int] = (16, 4096)
+    micro_deadline_bounds: tuple[float, float] = (5e-4, 5e-2)
+    micro_deadline_frac: float = 0.5   # deadline target: frac of knee latency
 
 
 def curve_drift(old: LatencyCurve, new: LatencyCurve) -> float:
@@ -114,31 +139,56 @@ def curve_drift(old: LatencyCurve, new: LatencyCurve) -> float:
     return float(np.mean(np.abs(b - a) / np.maximum(np.abs(a), 1e-12)))
 
 
+def _normalize_routers(router) -> dict[str, CostModelRouter]:
+    """Model → router mapping from any accepted ``router`` argument: a
+    single router (default model), a mapping, a ModelRegistry, or None."""
+    if router is None:
+        return {}
+    if isinstance(router, ModelRegistry):
+        return router.routers()
+    if isinstance(router, Mapping):
+        return dict(router)
+    return {DEFAULT_MODEL: router}
+
+
 class AdaptiveController:
     """Telemetry-driven control loop over a live serving stack.
 
-    Implements the engine hook protocol (``on_admit`` / ``on_batch_complete``)
-    and owns the whole adaptation state: the frequency sketch, the live
-    latency samples, and the migration/refit counters in :attr:`stats`.
-    ``router`` may be ``None`` (placement-only adaptation).
+    Implements the engine hook protocol (``on_admit`` / ``on_batch_complete``
+    — model-aware: the engine passes the batch's model tag) and owns the
+    whole adaptation state: the shared frequency sketch, per-``(model,
+    executor)`` latency samples, and the migration/refit counters in
+    :attr:`stats`. ``router`` may be a single ``CostModelRouter`` (the
+    single-model case), a model → router mapping, a ``ModelRegistry``
+    (its routers are extracted), or ``None`` (placement-only adaptation).
+    Attach a ``MicroBatcher`` (constructor ``micro=`` or
+    :meth:`attach_micro`) to enable micro-batch auto-tuning.
     """
 
     def __init__(self, graph, fanouts: Sequence[int], store,
-                 router: Optional[CostModelRouter] = None, *,
-                 psgs_table: Optional[np.ndarray] = None,
-                 config: Optional[AdaptiveConfig] = None):
+                 router=None, *, psgs_table: Optional[np.ndarray] = None,
+                 config: Optional[AdaptiveConfig] = None, micro=None):
         self.graph = graph
         self.fanouts = tuple(int(f) for f in fanouts)
         self.store = store
-        self.router = router
+        self.routers = _normalize_routers(router)
+        # single-model view kept for pre-multi-model callers/logs
+        self.router = self.routers.get(DEFAULT_MODEL) or (
+            next(iter(self.routers.values()), None))
         self.psgs_table = psgs_table
         self.config = config or AdaptiveConfig()
+        self.micro = micro
         self.sketch = FrequencySketch(graph.num_nodes,
                                       decay=self.config.decay)
-        self.samples: dict[str, collections.deque] = {}
+        # live (psgs, latency) samples keyed (model, executor name): refits
+        # must never blend two models' curves even on shared executor names
+        self.samples: dict[tuple[str, str], collections.deque] = {}
         self.stats = {"steps": 0, "migrated_rows": 0, "refits": 0,
-                      "batches_seen": 0, "last_drift": {}}
+                      "batches_seen": 0, "micro_tunings": 0,
+                      "last_drift": {}}
         self._since_step = 0
+        self._psgs_seen = 0.0   # running Σ accumulated PSGS of sampled batches
+        self._seeds_seen = 0    # running seed count — per-seed PSGS estimate
         # _lock guards telemetry (samples/stats/counters) and is only ever
         # held briefly; _step_lock serializes control steps. The heavy work
         # (FAP recompute, placement, migration) runs under _step_lock alone,
@@ -147,37 +197,52 @@ class AdaptiveController:
         self._step_lock = threading.Lock()
         self.enabled = True
 
+    def attach_micro(self, micro) -> "AdaptiveController":
+        """Attach the live ``MicroBatcher`` whose ``deadline_s``/
+        ``max_seeds`` the control step may nudge; returns the controller
+        for chaining."""
+        self.micro = micro
+        return self
+
     # -- engine hook protocol ------------------------------------------------
-    def on_admit(self, name: str, seeds: np.ndarray) -> None:
+    def on_admit(self, name: str, seeds: np.ndarray,
+                 model: str = DEFAULT_MODEL) -> None:
         """Engine hook: feed the admitted batch's seeds into the frequency
         sketch (``-1`` padding is ignored by the sketch).
 
         Args:
             name: executor the batch was routed to (unused here).
             seeds: ``(B,)`` seed ids of the admitted batch.
+            model: model tag of the batch (unused — the sketch is shared:
+                placement is store-wide across models).
         """
         self.sketch.observe(seeds)
 
     def on_batch_complete(self, name: str, seeds: np.ndarray,
-                          latency_s: float) -> None:
+                          latency_s: float,
+                          model: str = DEFAULT_MODEL) -> None:
         """Engine hook: record a live ``(psgs, latency)`` sample for the
-        executor and run a control step when the period boundary is crossed
-        (inline, on this callback thread).
+        ``(model, executor)`` pair and run a control step when the period
+        boundary is crossed (inline, on this callback thread).
 
         Args:
             name: executor that served the batch.
             seeds: ``(B,)`` seed ids of the batch.
             latency_s: per-batch service time (queueing + processing).
+            model: model tag of the batch (defaults to the single model).
         """
         due = False
         with self._lock:
             if self.psgs_table is not None:
                 seeds = np.asarray(seeds)
-                q = float(self.psgs_table[seeds[seeds >= 0]].sum())
+                valid = seeds[seeds >= 0]
+                q = float(self.psgs_table[valid].sum())
                 dq = self.samples.setdefault(
-                    name,
+                    (model, name),
                     collections.deque(maxlen=self.config.sample_window))
                 dq.append((q, float(latency_s)))
+                self._psgs_seen += q
+                self._seeds_seen += int(valid.size)
             self.stats["batches_seen"] += 1
             self._since_step += 1
             if (self.enabled
@@ -202,14 +267,17 @@ class AdaptiveController:
         return quiver_placement(fap, self.store.plan.topology), fap
 
     def step(self) -> dict:
-        """One control step: re-place (bounded) + refit curves. Thread-safe;
-        concurrent steps serialize on their own lock — telemetry callbacks
-        from other lanes are never blocked by the recompute.
+        """One control step: re-place (bounded) + refit curves + tune the
+        micro-batcher. Thread-safe; concurrent steps serialize on their own
+        lock — telemetry callbacks from other lanes are never blocked by
+        the recompute.
 
         Returns:
-            ``{"migrated_rows", "refits", "pending"}`` — rows moved this
-            step, curves swapped, and nodes still off their target tier
-            (0 means the placement has converged for this workload).
+            ``{"migrated_rows", "refits", "pending", "micro"}`` — rows
+            moved this step, curves swapped, nodes still off their target
+            tier (0 means the placement has converged for this workload),
+            and the micro-batcher bounds after tuning (``None`` when no
+            micro-batcher is attached).
         """
         with self._step_lock:
             target, fap = self.target_plan()
@@ -218,49 +286,129 @@ class AdaptiveController:
                                                1))
             moved = self.store.swap_assignments(pairs)
             refits = self.refit_curves()
+            micro = self.tune_micro()
             self.sketch.decay_step()
             with self._lock:
                 self.stats["steps"] += 1
                 self.stats["migrated_rows"] += moved
             return {"migrated_rows": moved, "refits": refits,
+                    "micro": micro,
                     "pending": int((target.tier != self.store.plan.tier)
                                    .sum())}
 
     def refit_curves(self) -> int:
-        """Refit per-executor curves from live samples; swap any whose drift
-        against the router's current curve exceeds the threshold.
+        """Refit curves from live samples, per ``(model, executor)``; swap
+        any whose drift against that model's router curve exceeds the
+        threshold. Models without a registered router are skipped.
 
         Returns:
-            Number of curves swapped into the router (0 when routerless,
+            Number of curves swapped into the routers (0 when routerless,
             under-sampled, or drift stayed below the threshold).
         """
-        if self.router is None:
+        if not self.routers:
             return 0
         swapped = 0
         with self._lock:
-            items = [(name, list(dq)) for name, dq in self.samples.items()]
-        for name, dq in items:
-            if len(dq) < self.config.min_refit_samples:
+            items = [(key, list(dq)) for key, dq in self.samples.items()]
+        for (model, name), dq in items:
+            router = self.routers.get(model)
+            if router is None or len(dq) < self.config.min_refit_samples:
                 continue
             ps, ls = zip(*dq)
             new = LatencyCurve.fit(ps, ls, bins=self.config.curve_bins,
                                    tail=self.config.curve_tail)
             try:
-                old = self.router.curve(name)
+                old = router.curve(name)
             except KeyError:
                 continue
             drift = curve_drift(old, new)
-            self.stats["last_drift"][name] = drift
+            key = name if model == DEFAULT_MODEL else f"{model}/{name}"
+            self.stats["last_drift"][key] = drift
             if drift > self.config.drift_threshold:
-                self.router.update_curve(name, new)
+                router.update_curve(name, new)
                 swapped += 1
         with self._lock:
             self.stats["refits"] += swapped
         return swapped
 
+    # -- micro-batch auto-tuning ---------------------------------------------
+    def micro_targets(self) -> Optional[dict]:
+        """Measured-knee targets for the attached micro-batcher.
+
+        Fits one latency curve over *all* live samples (every model and
+        executor — the micro stage feeds them all), finds the PSGS with the
+        best latency-per-unit-work (the knee: below it, fixed dispatch
+        overhead dominates; past it, marginal cost is flat), and converts it
+        to a seed count via the observed mean per-seed PSGS. The deadline
+        target is ``micro_deadline_frac`` of the knee's own service latency
+        — waiting longer than a fraction of the work itself cannot pay off.
+
+        Returns:
+            ``{"max_seeds", "deadline_s", "knee_psgs"}`` clamped to the
+            configured bounds, or ``None`` when there are not yet
+            ``min_refit_samples`` samples (or no per-seed PSGS estimate).
+        """
+        with self._lock:
+            flat = [s for dq in self.samples.values() for s in dq]
+            psgs_seen, seeds_seen = self._psgs_seen, self._seeds_seen
+        if len(flat) < self.config.min_refit_samples or seeds_seen == 0:
+            return None
+        per_seed = psgs_seen / seeds_seen
+        if per_seed <= 0.0:
+            return None
+        ps, ls = zip(*flat)
+        curve = LatencyCurve.fit(ps, ls, bins=self.config.curve_bins,
+                                 tail=self.config.curve_tail)
+        lo, hi = float(curve.psgs[0]), float(curve.psgs[-1])
+        grid = np.linspace(max(lo, 1e-9), max(hi, lo + 1e-9), 256)
+        eff = np.asarray(curve.eval_avg(grid)) / grid   # s per unit PSGS
+        knee_q = float(grid[int(np.argmin(eff))])
+        s_lo, s_hi = self.config.micro_seeds_bounds
+        d_lo, d_hi = self.config.micro_deadline_bounds
+        return {
+            "max_seeds": int(np.clip(round(knee_q / per_seed), s_lo, s_hi)),
+            "deadline_s": float(np.clip(
+                float(curve.eval_avg(knee_q))
+                * self.config.micro_deadline_frac, d_lo, d_hi)),
+            "knee_psgs": knee_q,
+        }
+
+    def tune_micro(self) -> Optional[dict]:
+        """Nudge the attached micro-batcher's ``max_seeds``/``deadline_s`` a
+        ``micro_step`` fraction of the way toward :meth:`micro_targets`
+        (clamped to the configured bounds; plain attribute writes — the
+        batcher reads them per ``add``, so no torn state is possible).
+
+        Returns:
+            The batcher's bounds after the nudge plus the knee estimate, or
+            ``None`` when no micro-batcher is attached / targets are not
+            yet measurable.
+        """
+        if self.micro is None:
+            return None
+        targets = self.micro_targets()
+        if targets is None:
+            return None
+        step = float(np.clip(self.config.micro_step, 0.0, 1.0))
+        s_lo, s_hi = self.config.micro_seeds_bounds
+        d_lo, d_hi = self.config.micro_deadline_bounds
+        cur_seeds, cur_dl = self.micro.max_seeds, self.micro.deadline_s
+        new_seeds = int(np.clip(
+            round(cur_seeds + step * (targets["max_seeds"] - cur_seeds)),
+            s_lo, s_hi))
+        new_dl = float(np.clip(
+            cur_dl + step * (targets["deadline_s"] - cur_dl), d_lo, d_hi))
+        self.micro.max_seeds = new_seeds
+        self.micro.deadline_s = new_dl
+        with self._lock:
+            self.stats["micro_tunings"] += 1
+        return {"max_seeds": new_seeds, "deadline_s": new_dl,
+                "knee_psgs": targets["knee_psgs"]}
+
     def report(self) -> dict:
         """Adaptation counters for logging: steps, migrated rows, refits,
-        batches seen, per-executor last drift, and seeds observed."""
+        micro tunings, batches seen, per-``(model/)executor`` last drift,
+        and seeds observed."""
         return {**{k: v for k, v in self.stats.items() if k != "last_drift"},
                 "last_drift": {k: round(v, 4)
                                for k, v in self.stats["last_drift"].items()},

@@ -1,39 +1,71 @@
-"""Executor-graph serving engine (paper §4.3, re-architected).
+"""Executor-graph serving engine (paper §4.3, re-architected; multi-model).
 
-The engine owns a registry of named :class:`~repro.serving.executors.Executor`
-objects and a router (anything with ``route(seeds) -> name``). Each closed
-batch becomes a *future* on the chosen executor's worker lanes; the paper's
+The engine serves a :class:`~repro.serving.registry.ModelRegistry` — one or
+more models, each with its own executor set and router, all sharing the
+graph, the feature stores, and one admission window. Each closed batch
+becomes a *future* on the chosen executor's worker lanes; the paper's
 design points survive as:
 
 (1) *Multiplexing pipelines in a processor* — every executor runs
     ``capacity`` concurrent lanes; XLA overlaps sampling, feature collection
     and model compute across lanes.
-(2) *Shared queue* — admission is a bounded window over all executors: a
-    straggler occupies one lane while small batches keep flowing.
+(2) *Shared queue* — admission is a bounded window over all executors of
+    all models: a straggler occupies one lane while small batches keep
+    flowing, and no model can starve the others beyond the shared bound.
 (3) *Shared graph* — topology and feature stores are read-only singletons
-    captured by the executors.
+    captured by the executors of every model.
 
 New over the seed implementation: N-way routing (not a hardcoded
-host/device pair), per-batch futures, and admission control — when
+host/device pair), per-batch futures, admission control — when
 ``max_inflight`` batches are outstanding the engine either blocks the
 producer (``admission="wait"``, backpressure) or drops the batch
-(``admission="shed"``, counted in ``ServeMetrics.shed``).
+(``admission="shed"``, counted in ``ServeMetrics.shed``) — and multi-model
+serving: requests carry a ``model`` tag, routing/metrics are per model
+(``ServingEngine(executors, router)`` remains the 1-entry-registry special
+case).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import inspect
 import threading
 import time
 from concurrent.futures import Future
-from typing import Iterable, Mapping, Optional, Sequence
+from typing import Any, Iterable, Mapping, Optional, Sequence
 
 import numpy as np
 
 from repro.serving.executors import Executor
+from repro.serving.registry import DEFAULT_MODEL, ModelEntry, ModelRegistry
 
 
 def _batch_seeds(batch: Sequence) -> np.ndarray:
     return np.concatenate([r.seeds for r in batch])
+
+
+def _batch_model(batch: Sequence) -> str:
+    """Model tag of a closed batch; every request must agree (micro-batches
+    and batches never mix models — mixing would make the per-model routing
+    decision meaningless)."""
+    model = getattr(batch[0], "model", DEFAULT_MODEL)
+    for r in batch[1:]:
+        other = getattr(r, "model", DEFAULT_MODEL)
+        if other != model:
+            raise ValueError(f"batch mixes models {model!r} and {other!r}; "
+                             f"batchers must never coalesce across models")
+    return model
+
+
+def _clone_stage(stage):
+    """Fresh same-config instance of a batching stage (``clone()``); multi-
+    model streams need one stage per model so batches never mix models."""
+    clone = getattr(stage, "clone", None)
+    if clone is None:
+        raise TypeError(
+            f"{type(stage).__name__} has no clone(); multi-model streams "
+            f"need one batching stage per model")
+    return clone()
 
 
 class MicroBatcher:
@@ -58,6 +90,13 @@ class MicroBatcher:
     reach the inter-arrival gap, not ``deadline_s``. Size ``deadline_s``
     against the expected arrival rate, or skip the stage for latency-
     critical sparse traffic.
+
+    Super-batches never mix models: ``serve_stream`` keeps one clone per
+    model, and ``add`` additionally emits the pending super-batch whenever
+    an incoming batch carries a different model tag (defense in depth for
+    callers driving one instance by hand). ``deadline_s``/``max_seeds`` may
+    be re-assigned live (single reference writes) — the adaptive
+    controller's micro-batch auto-tuning does exactly that.
     """
 
     def __init__(self, *, deadline_s: float = 0.004, max_seeds: int = 256,
@@ -76,25 +115,45 @@ class MicroBatcher:
         self.psgs_table = psgs_table
         self._pending: list = []
         self._opened: Optional[float] = None
+        self._model: Optional[str] = None
         self._sources = 0
         self._n_seeds = 0
         self._acc_psgs = 0.0
         self.emitted = 0      # super-batches emitted
         self.coalesced = 0    # emitted super-batches built from >1 batch
 
+    def clone(self) -> "MicroBatcher":
+        """Fresh empty stage with the same bounds — ``serve_stream`` clones
+        one per model so super-batches never coalesce across models.
+        Built via ``type(self)`` so subclasses stay subclasses (override
+        when a subclass adds constructor arguments)."""
+        return type(self)(deadline_s=self.deadline_s,
+                          max_seeds=self.max_seeds,
+                          psgs_budget=self.psgs_budget,
+                          psgs_table=self.psgs_table)
+
     def add(self, batch: list) -> Optional[list]:
         """Queue one closed batch; return a super-batch if a bound was hit.
 
         Args:
-            batch: a closed request batch (non-empty list of requests).
+            batch: a closed request batch (non-empty list of requests,
+                all carrying the same ``model`` tag).
 
         Returns:
             The coalesced super-batch when seed-count / PSGS / deadline
-            closed it, else ``None`` (the batch is held for coalescing).
+            closed it — or the *previous* pending super-batch when
+            ``batch`` carries a different model tag (the incoming batch is
+            then queued fresh; super-batches never mix models). ``None``
+            when the batch is held for coalescing.
         """
+        model = _batch_model(batch)
+        flushed = None
+        if self._pending and model != self._model:
+            flushed = self.flush()
         now = time.perf_counter()
         if self._opened is None:
             self._opened = now
+        self._model = model
         self._pending.extend(batch)
         self._sources += 1
         self._n_seeds += sum(int(r.seeds.size) for r in batch)
@@ -102,6 +161,11 @@ class MicroBatcher:
             for r in batch:
                 self._acc_psgs += float(
                     self.psgs_table[r.seeds[r.seeds >= 0]].sum())
+        if flushed is not None:
+            # the model boundary already emitted a super-batch this call;
+            # the fresh batch's own bounds are evaluated on the next add
+            # (or the stream-end flush)
+            return flushed
         full = self._n_seeds >= self.max_seeds
         over_budget = (self.psgs_budget is not None
                        and self._acc_psgs >= self.psgs_budget)
@@ -118,9 +182,43 @@ class MicroBatcher:
         self.emitted += 1
         if self._sources > 1:
             self.coalesced += 1
-        self._opened, self._sources = None, 0
+        self._opened, self._sources, self._model = None, 0, None
         self._n_seeds, self._acc_psgs = 0, 0.0
         return out
+
+
+@dataclasses.dataclass
+class ModelStats:
+    """Per-model slice of :class:`ServeMetrics`: requests, shed, latencies,
+    routing tallies, and per-executor service times (lane queueing +
+    processing, keyed by executor name)."""
+
+    requests: int = 0
+    shed: int = 0
+    latencies: list[float] = dataclasses.field(default_factory=list)
+    routed: dict[str, int] = dataclasses.field(default_factory=dict)
+    exec_latencies: dict[str, list[float]] = dataclasses.field(
+        default_factory=dict)
+
+    def percentile(self, q: float) -> float:
+        """Latency quantile over this model's completed requests (0.0 when
+        none completed)."""
+        if not self.latencies:
+            return 0.0
+        return float(np.quantile(np.asarray(self.latencies), q))
+
+    def summary(self) -> dict:
+        """Per-model report block (requests/shed, p50/p99, routing)."""
+        return {"requests": self.requests, "shed": self.shed,
+                "p50_ms": self.percentile(0.5) * 1e3,
+                "p99_ms": self.percentile(0.99) * 1e3,
+                "routed": dict(self.routed)}
+
+
+def _exec_key(model: str, name: str) -> str:
+    """Executor key in the flat per-executor breakdown: bare name for the
+    single-model default, ``model/name`` otherwise."""
+    return name if model == DEFAULT_MODEL else f"{model}/{name}"
 
 
 @dataclasses.dataclass
@@ -131,6 +229,16 @@ class ServeMetrics:
     requests: int = 0
     shed: int = 0
     routed: dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-model breakdowns (aggregate fields above are preserved: they sum
+    # over models, and executor names repeated across models merge in
+    # ``routed``); ``store_stats`` carries the shared stores' fused-gather
+    # dispatch counters snapshotted at the end of the run
+    models: dict[str, ModelStats] = dataclasses.field(default_factory=dict)
+    store_stats: dict[str, dict] = dataclasses.field(default_factory=dict)
+
+    def model(self, name: str) -> ModelStats:
+        """This model's stats slice (created on first touch)."""
+        return self.models.setdefault(name, ModelStats())
 
     # backwards-compatible views of the two-executor counters
     @property
@@ -153,6 +261,22 @@ class ServeMetrics:
             return 0.0
         return float(np.quantile(np.asarray(self.latencies), q))
 
+    def executor_percentiles(self) -> dict[str, dict]:
+        """Per-executor service-time percentiles (lane queueing +
+        processing, seconds → ms), keyed ``name`` for the default model and
+        ``model/name`` otherwise."""
+        out: dict[str, dict] = {}
+        for model, ms in self.models.items():
+            for name, lats in ms.exec_latencies.items():
+                if not lats:
+                    continue
+                arr = np.asarray(lats)
+                out[_exec_key(model, name)] = {
+                    "batches": int(arr.size),
+                    "p50_ms": float(np.quantile(arr, 0.5) * 1e3),
+                    "p99_ms": float(np.quantile(arr, 0.99) * 1e3)}
+        return out
+
     def summary(self) -> dict:
         # no completed requests (e.g. everything shed): report a zeroed
         # profile, NOT a perfect one — pct_in_400ms must not claim SLO wins
@@ -167,34 +291,58 @@ class ServeMetrics:
                 "shed": self.shed,
                 "routed": dict(self.routed),
                 "routed_host": self.routed_host,
-                "routed_device": self.routed_device}
+                "routed_device": self.routed_device,
+                "models": {m: s.summary() for m, s in self.models.items()},
+                "executors": self.executor_percentiles(),
+                "store": {k: dict(v) for k, v in self.store_stats.items()}}
 
 
 class ServingEngine:
-    """End-to-end GNN serving over a pluggable executor registry.
+    """End-to-end GNN serving over a registry of models sharing the stores.
 
-    ``executors`` is a mapping name → executor (or an iterable of executors,
-    keyed by their ``name``). ``router.route(seeds)`` must return one of the
-    registered names. Register additional executors with :meth:`register`.
+    Construction accepts either the single-model parts —
+    ``ServingEngine(executors, router)`` where ``executors`` maps name →
+    executor (or is an iterable of executors keyed by their ``name``) and
+    ``router.route(seeds)`` returns a registered name — or a
+    :class:`~repro.serving.registry.ModelRegistry`
+    (``ServingEngine(registry)``). The single-model form is exactly the
+    1-entry-registry special case: requests default to
+    ``model="default"``. Admission (``max_inflight``) is global across
+    models — one capacity bound over the shared hardware — while routing
+    and metrics are per model.
     """
 
-    def __init__(self, executors: Mapping[str, Executor] | Iterable[Executor],
-                 router, *, max_inflight: int = 64,
-                 admission: str = "wait", hooks: Sequence = ()):
-        if isinstance(executors, Mapping):
-            self.executors: dict[str, Executor] = dict(executors)
-        else:
-            self.executors = {e.name: e for e in executors}
-        if not self.executors:
-            raise ValueError("at least one executor is required")
+    def __init__(self,
+                 executors: (Mapping[str, Executor] | Iterable[Executor]
+                             | ModelRegistry | None) = None,
+                 router=None, *, registry: Optional[ModelRegistry] = None,
+                 max_inflight: int = 64, admission: str = "wait",
+                 hooks: Sequence = ()):
+        if isinstance(executors, ModelRegistry):
+            if router is not None or registry is not None:
+                raise ValueError("pass either a ModelRegistry or "
+                                 "(executors, router), not both")
+            registry = executors
+        elif registry is None:
+            if executors is None or router is None:
+                raise ValueError("ServingEngine needs (executors, router) "
+                                 "or a ModelRegistry")
+            registry = ModelRegistry.single(executors, router)
+        elif executors is not None or router is not None:
+            raise ValueError("pass either registry= or (executors, router), "
+                             "not both")
+        if not len(registry):
+            raise ValueError("at least one model is required")
         if admission not in ("wait", "shed"):
             raise ValueError(f"admission must be 'wait' or 'shed', "
                              f"got {admission!r}")
-        self.router = router
+        self.registry = registry
         self.admission = admission
         # telemetry hooks (e.g. serving.adaptive.AdaptiveController): called
         # with every admitted batch and every completion — the feed for
-        # online FAP re-placement and latency-curve refitting
+        # online FAP re-placement and latency-curve refitting. Hooks may
+        # accept (name, seeds[, model]) — the model tag is passed when the
+        # hook's signature takes it.
         self.hooks = list(hooks)
         self.max_inflight = int(max_inflight)
         self._window = threading.BoundedSemaphore(self.max_inflight)
@@ -208,17 +356,31 @@ class ServingEngine:
         self._metrics = ServeMetrics()
 
     # -- registry ------------------------------------------------------------
-    def register(self, executor: Executor) -> "ServingEngine":
-        """Add (or replace) an executor under its ``name``; returns the
-        engine for chaining. The router must know the name before a batch
-        can be routed there."""
-        self.executors[executor.name] = executor
+    @property
+    def executors(self) -> dict[str, Executor]:
+        """The default model's executor registry (single-model view). Multi-
+        model callers address executors through ``registry`` instead."""
+        return self.registry.get(DEFAULT_MODEL).executors
+
+    @property
+    def router(self):
+        """The default model's router (single-model view)."""
+        return self.registry.get(DEFAULT_MODEL).router
+
+    def register(self, executor: Executor,
+                 model: str = DEFAULT_MODEL) -> "ServingEngine":
+        """Add (or replace) an executor under its ``name`` in ``model``'s
+        entry; returns the engine for chaining. The model's router must know
+        the name before a batch can be routed there."""
+        self.registry.get(model).executors[executor.name] = executor
         return self
 
     def add_hook(self, hook) -> "ServingEngine":
         """Attach a telemetry hook. Optional methods, all best-effort:
-        ``on_admit(name, seeds)`` after a batch is admitted and routed,
-        ``on_batch_complete(name, seeds, latency_s)`` after it finishes."""
+        ``on_admit(name, seeds[, model])`` after a batch is admitted and
+        routed, ``on_batch_complete(name, seeds, latency_s[, model])``
+        after it finishes — the trailing model tag is passed only when the
+        hook's signature accepts it."""
         self.hooks.append(hook)
         return self
 
@@ -228,7 +390,7 @@ class ServingEngine:
             if fn is None:
                 continue
             try:
-                fn(*args)
+                _call_adaptive(fn, args)
             except BaseException as exc:  # surface hook bugs via drain()
                 with self._lock:
                     if self._error is None:
@@ -236,15 +398,25 @@ class ServingEngine:
 
     # -- per-batch futures ---------------------------------------------------
     def submit_batch(self, batch: list) -> Optional[Future]:
-        """Route one closed batch and submit it to its executor.
+        """Route one closed batch and submit it to its model's executor.
+
+        The batch's ``model`` tag (uniform across its requests — mixing
+        raises) selects the registry entry whose router and executors serve
+        it; requests without a tag take the default model.
 
         Returns the future of the model output, or ``None`` when the
         admission window is full and the policy is ``"shed"`` (the batch is
-        dropped and counted in ``ServeMetrics.shed``).
+        dropped and counted in ``ServeMetrics.shed``, aggregate and
+        per-model).
         """
+        if not batch:
+            raise ValueError("submit_batch needs a non-empty batch")
+        model = _batch_model(batch)
+        entry = self.registry.get(model)
         if not self._window.acquire(blocking=self.admission == "wait"):
             with self._lock:
                 self._metrics.shed += len(batch)
+                self._metrics.model(model).shed += len(batch)
             return None
         metrics = self._metrics  # bind this run: stragglers from a failed
         with self._acct:         # run must not pollute the next run's stats
@@ -254,27 +426,27 @@ class ServingEngine:
             # route only admitted batches, so router.routed matches executed
             # work and load-aware estimates see post-admission inflight
             seeds = _batch_seeds(batch)
-            name = self.router.route(seeds)
+            name = entry.router.route(seeds)
             submitted_at = time.perf_counter()
-            fut = self.executors[name].submit(seeds)
+            fut = entry.executors[name].submit(seeds)
         except BaseException:
             if name is not None:
                 # the router already counted this batch but the executor
                 # never accepted it — roll the count back so router.routed
                 # keeps matching work that actually executed
-                routed = getattr(self.router, "routed", None)
+                routed = getattr(entry.router, "routed", None)
                 if isinstance(routed, dict) and routed.get(name, 0) > 0:
                     routed[name] -= 1
             self._window.release()
             self._finish_one()
             raise
-        self._notify("on_admit", name, seeds)
+        self._notify("on_admit", name, seeds, model)
         fut.add_done_callback(
-            lambda f: self._complete(f, batch, name, metrics, seeds,
+            lambda f: self._complete(f, batch, name, model, metrics, seeds,
                                      submitted_at))
         return fut
 
-    def _complete(self, fut: Future, batch: list, name: str,
+    def _complete(self, fut: Future, batch: list, name: str, model: str,
                   metrics: ServeMetrics, seeds: np.ndarray,
                   submitted_at: float) -> None:
         self._window.release()
@@ -284,15 +456,22 @@ class ServingEngine:
                 if self._error is None:
                     self._error = fut.exception()
             else:
+                ms = metrics.model(model)
                 for r in batch:
                     r.done = now
                     metrics.latencies.append(r.latency)
+                    ms.latencies.append(r.latency)
                 metrics.requests += len(batch)
                 metrics.routed[name] = metrics.routed.get(name, 0) + 1
+                ms.requests += len(batch)
+                ms.routed[name] = ms.routed.get(name, 0) + 1
+                ms.exec_latencies.setdefault(name, []).append(
+                    now - submitted_at)
         if fut.exception() is None:
             # per-batch service time (lane queueing + processing): the live
             # counterpart of the offline calibration samples
-            self._notify("on_batch_complete", name, seeds, now - submitted_at)
+            self._notify("on_batch_complete", name, seeds,
+                         now - submitted_at, model)
         self._finish_one()
 
     def _finish_one(self) -> None:
@@ -317,6 +496,29 @@ class ServingEngine:
         self._metrics.started = time.perf_counter()
         return self._metrics
 
+    def _store_stats(self) -> dict[str, dict]:
+        """Snapshot of the shared stores' dispatch counters (deduplicated by
+        identity — every model's executors read the same stores). Keys are
+        ``<StoreClass>`` (``#i``-suffixed only if several distinct stores of
+        one class are in play)."""
+        out: dict[str, dict] = {}
+        seen: set[int] = set()
+        for _model, _name, ex in self.registry.all_executors():
+            get_stores = getattr(ex, "stores", None)
+            stores = (get_stores() if get_stores else
+                      [s for s in (getattr(ex, "store", None),
+                                   getattr(ex, "sstore", None)) if s])
+            for store in stores:
+                stats = getattr(store, "stats", None)
+                if stats is None or id(store) in seen:
+                    continue
+                seen.add(id(store))
+                key = type(store).__name__
+                if key in out:
+                    key = f"{key}#{sum(k.startswith(key) for k in out)}"
+                out[key] = dict(stats)
+        return out
+
     def serve_stream(self, requests: Sequence, batcher, *, gap_s: float = 0.0,
                      micro: Optional[MicroBatcher] = None) -> ServeMetrics:
         """Client-stream serving: requests arrive one by one (``gap_s``
@@ -324,11 +526,21 @@ class ServingEngine:
         max size, and closed batches are admitted to the executor graph
         (paper §4.2.2).
 
+        Batching state is per model: the passed ``batcher`` (and ``micro``)
+        serve the first model seen on the stream, and every further model
+        tag gets its own ``clone()`` — batches and super-batches never
+        coalesce across models, and the stream-end drain flushes *every*
+        model's batcher and micro-batcher (a tail batch below the PSGS
+        budget is never dropped).
+
         Args:
             requests: request stream (anything yielding ``Request``-like
-                objects with ``seeds``/``arrival``).
+                objects with ``seeds``/``arrival``; an optional ``model``
+                tag selects the registry entry, defaulting to the single
+                model).
             batcher: batch closer (``DynamicBatcher`` protocol:
-                ``add(request)`` / ``flush()``).
+                ``add(request)`` / ``flush()``; must also offer ``clone()``
+                when the stream carries several models).
             gap_s: inter-arrival gap, client emulation.
             micro: optional :class:`MicroBatcher` coalescing stage — closed
                 batches are held (deadline evaluated on the next arrival;
@@ -341,36 +553,59 @@ class ServingEngine:
             micro-batching wait, since arrival is stamped at ingest).
         """
         metrics = self._reset()
+        batchers: dict[str, Any] = {}
+        micros: dict[str, MicroBatcher] = {}
+
+        def stages(model: str):
+            if model not in batchers:
+                batchers[model] = (batcher if not batchers
+                                   else _clone_stage(batcher))
+                if micro is not None:
+                    micros[model] = (micro if not micros
+                                     else _clone_stage(micro))
+            return batchers[model], micros.get(model)
+
         try:
             for r in requests:
                 if gap_s:
                     time.sleep(gap_s)
                 r.arrival = time.perf_counter()
-                out = batcher.add(r)
-                if out and micro is not None:
-                    out = micro.add(out)
+                b, m = stages(getattr(r, "model", DEFAULT_MODEL))
+                out = b.add(r)
+                if out and m is not None:
+                    out = m.add(out)
                 if out:
                     self.submit_batch(out)
-            for closer in ((batcher, micro) if micro is not None
-                           else (batcher,)):
-                tail = closer.flush()
-                if tail and closer is batcher and micro is not None:
-                    tail = micro.add(tail)
+            # stream-end drain: flush per model — the batcher tail passes
+            # through that model's micro stage, then the micro stage itself
+            # is flushed, so no tail super-batch below the PSGS budget is
+            # ever dropped
+            for model, b in batchers.items():
+                m = micros.get(model)
+                tail = b.flush()
+                if tail and m is not None:
+                    tail = m.add(tail)
                 if tail:
                     self.submit_batch(tail)
+                if m is not None:
+                    tail = m.flush()
+                    if tail:
+                        self.submit_batch(tail)
             self.drain()
         finally:
             # stamp even when drain() re-raises an executor failure, so a
             # partially-failed run reports throughput over real wall time
             # instead of dividing by finished=0
             metrics.finished = time.perf_counter()
+            metrics.store_stats = self._store_stats()
         return metrics
 
     def run(self, batches: Sequence[list], *,
             pace_s: Optional[float] = None) -> ServeMetrics:
-        """Process pre-formed batches. ``pace_s`` spaces arrivals
-        (client-stream emulation) and re-stamps request arrival at submit
-        time so latency = queueing + processing."""
+        """Process pre-formed batches (each single-model; the ``model`` tag
+        of its requests selects the registry entry). ``pace_s`` spaces
+        arrivals (client-stream emulation) and re-stamps request arrival at
+        submit time so latency = queueing + processing."""
         metrics = self._reset()
         try:
             for b in batches:
@@ -383,20 +618,51 @@ class ServingEngine:
             self.drain()
         finally:
             metrics.finished = time.perf_counter()
+            metrics.store_stats = self._store_stats()
         return metrics
 
     def warmup(self, batch, *, rounds: int = 2) -> None:
-        """Compile/warm every registered executor outside the measured
-        window. Accepts a request batch or a raw seed array."""
+        """Compile/warm every registered executor of every model outside the
+        measured window. Accepts a request batch or a raw seed array."""
         seeds = (np.asarray(batch) if isinstance(batch, np.ndarray)
                  else _batch_seeds(batch))
-        for ex in self.executors.values():
+        for _model, _name, ex in self.registry.all_executors():
             for _ in range(rounds):
                 ex.run(seeds)
 
     def close(self) -> None:
-        """Shut down every executor's worker pool (blocking)."""
-        for ex in self.executors.values():
+        """Shut down every executor's worker pool across all models
+        (blocking; executors shared between entries close once)."""
+        seen: set[int] = set()
+        for _model, _name, ex in self.registry.all_executors():
+            if id(ex) in seen:
+                continue
+            seen.add(id(ex))
             close = getattr(ex, "close", None)
             if close:
                 close()
+
+
+@functools.lru_cache(maxsize=256)
+def _max_positional(fn) -> Optional[int]:
+    """Positional arity of a hook callable (``None`` = unbounded/unknown).
+    Cached — signature inspection is pure in the callable, and this runs on
+    the per-batch hot path (twice per batch per hook); bound methods of one
+    object hash/compare equal across ``getattr`` calls, so the cache hits."""
+    try:
+        params = inspect.signature(fn).parameters.values()
+    except (TypeError, ValueError):
+        return None
+    if any(p.kind is inspect.Parameter.VAR_POSITIONAL for p in params):
+        return None
+    return sum(p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                          inspect.Parameter.POSITIONAL_OR_KEYWORD)
+               for p in params)
+
+
+def _call_adaptive(fn, args: tuple):
+    """Call a hook with as many of ``args`` as its signature accepts —
+    pre-multi-model hooks keep their ``(name, seeds[, latency])`` arity,
+    model-aware hooks get the trailing model tag too."""
+    n = _max_positional(fn)
+    return fn(*(args if n is None else args[:n]))

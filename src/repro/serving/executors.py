@@ -179,6 +179,13 @@ class BaseExecutor:
         (e.g. the sharded executor cannot serve cold-tier seeds exactly)."""
         return True
 
+    def stores(self) -> list:
+        """The feature store(s) this executor reads (shared across the
+        models of a registry) — the engine snapshots their dispatch stats
+        into ``ServeMetrics.store_stats`` at the end of a run."""
+        return [s for s in (getattr(self, "store", None),
+                            getattr(self, "sstore", None)) if s is not None]
+
     def run(self, seeds: np.ndarray) -> jnp.ndarray:
         """Synchronous convenience path (calibration, warmup, debugging)."""
         out = self.process(np.asarray(seeds))

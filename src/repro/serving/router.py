@@ -344,6 +344,50 @@ class CostModelRouter:
             est *= 1.0 + ex.inflight / max(ex.capacity, 1)
         return est
 
+    def crossover(self, a: str, b: str, *, lo: Optional[float] = None,
+                  hi: Optional[float] = None, grid_points: int = 512
+                  ) -> float:
+        """PSGS cut-point between two registered executors under the current
+        policy: below it ``a``'s policy-selected estimate is cheaper, above
+        it ``b``'s is (the N-way analogue of the paper's binary threshold).
+        Per-model routers fit different curves, so this is where multi-model
+        routing divergence is visible as a number.
+
+        Args:
+            a: executor judged cheaper below the cut-point.
+            b: executor judged cheaper above it.
+            lo: grid lower bound (defaults to the curves' joint minimum).
+            hi: grid upper bound (defaults to the curves' joint maximum).
+            grid_points: resolution of the crossing search.
+
+        Returns:
+            The crossing PSGS, ``0.0`` when ``b`` is cheaper everywhere and
+            ``inf`` when ``a`` is (mirroring
+            ``CalibrationResult.threshold``). Load-aware scaling is ignored
+            — the cut-point describes the calibrated curves, not the
+            instantaneous queue state.
+
+        Raises:
+            KeyError: if either name was never registered.
+        """
+        ca, cb = self._curves[a], self._curves[b]
+        stat_a = _policy_stat(self.policy, self._kinds[a])
+        stat_b = _policy_stat(self.policy, self._kinds[b])
+        lo = float(min(ca.psgs.min(), cb.psgs.min()) if lo is None else lo)
+        hi = float(max(ca.psgs.max(), cb.psgs.max()) if hi is None else hi)
+        grid = np.linspace(lo, hi, int(grid_points))
+        diff = ca.eval(grid, stat_a) - cb.eval(grid, stat_b)
+        sign = np.signbit(diff)
+        flips = np.flatnonzero(sign[1:] != sign[:-1])
+        if flips.size == 0:
+            return float("inf") if diff[-1] < 0 else 0.0
+        i = flips[0]
+        x0, x1, d0, d1 = grid[i], grid[i + 1], diff[i], diff[i + 1]
+        denom = d1 - d0
+        if abs(denom) < 1e-15:
+            return float(x0)
+        return float(np.clip(x0 + (x1 - x0) * (0 - d0) / denom, lo, hi))
+
     def _eligible(self, seeds: np.ndarray) -> list[str]:
         names = [n for n in self._curves
                  if n not in self._executors

@@ -1,5 +1,6 @@
 """Extra pipeline behaviours: GAT serving (the paper's second model),
-shared-queue straggler absorption, and calibration-driven engine wiring."""
+shared-queue straggler absorption, calibration-driven engine wiring, and
+the deprecation contract of the repro.core.{pipeline,scheduler} shims."""
 import time
 
 import jax
@@ -12,6 +13,7 @@ from repro.core import (HybridScheduler, ServingEngine, StaticScheduler,
 from repro.core.serving import Request
 from repro.graph import power_law_graph
 from repro.models.gnn_basic import gat_init, sage_init, sage_layered
+from tests.conftest import run_subprocess
 
 
 def test_gat_full_graph_served_via_store():
@@ -80,3 +82,71 @@ def test_scheduler_threshold_infinity_routes_host():
     for _ in range(5):
         assert s.route(np.array([1, 2, 3])) == "host"
     assert s.routed["device"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims (satellite): import-time warning exactly once + re-exports
+# ---------------------------------------------------------------------------
+def test_shim_imports_warn_exactly_once_and_reexport():
+    """Importing repro.core.{pipeline,scheduler} must emit ONE
+    DeprecationWarning each (re-imports hit the sys.modules cache) while a
+    plain `import repro.core` stays silent; the shims re-export the
+    canonical serving-layer objects. Subprocess: import-time behavior needs
+    a fresh interpreter."""
+    code = """
+import warnings
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    import repro.core                      # package import: no warning
+    base = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert not base, [str(x.message) for x in base]
+    import repro.core.pipeline as p1
+    import repro.core.scheduler as s1
+    import repro.core.pipeline             # cached: must not warn again
+    import repro.core.scheduler
+dep = [str(x.message) for x in w
+       if issubclass(x.category, DeprecationWarning)]
+pipe = [m for m in dep if "repro.core.pipeline" in m]
+sched = [m for m in dep if "repro.core.scheduler" in m]
+assert len(pipe) == 1, pipe
+assert len(sched) == 1, sched
+
+import repro.serving as serving
+# shims re-export the canonical serving-layer objects (same identity)
+assert p1.ServeMetrics is serving.ServeMetrics
+assert issubclass(p1.ServingEngine, serving.ServingEngine)
+for name in ("LatencyCurve", "CalibrationResult", "CostModelRouter",
+             "HybridScheduler", "StaticScheduler", "calibrate",
+             "calibrate_executors"):
+    assert getattr(s1, name) is getattr(serving, name), name
+# the lazy repro.core.ServingEngine attribute resolves to the legacy shim
+assert repro.core.ServingEngine is p1.ServingEngine
+print("SHIM_OK")
+"""
+    r = run_subprocess(code, devices=1)
+    assert "SHIM_OK" in r.stdout, r.stderr[-3000:]
+
+
+def test_legacy_engine_construction_warns_with_specific_message():
+    """The legacy two-executor constructor keeps its own per-instantiation
+    warning on top of the import-time one."""
+    import warnings
+
+    g = power_law_graph(200, 4.0, seed=3)
+    feats = np.random.default_rng(3).normal(size=(200, 8)).astype(np.float32)
+    fap = compute_fap(g, (2,))
+    topo = TopologySpec(num_pods=1, devices_per_pod=1, rows_per_device=100,
+                        rows_host=100)
+    store = TieredFeatureStore.build(feats, quiver_placement(fap, topo))
+    params = sage_init(jax.random.key(0), [8, 8])
+
+    def infer_fn(hop_feats, hop_ids):
+        return sage_layered(params, hop_feats, (2,))
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ServingEngine(g, store, (2,), infer_fn, StaticScheduler("host"),
+                      num_workers=1)
+    msgs = [str(x.message) for x in w
+            if issubclass(x.category, DeprecationWarning)]
+    assert any("repro.core.pipeline.ServingEngine" in m for m in msgs), msgs

@@ -1,0 +1,471 @@
+"""Multi-model serving: ModelRegistry, per-model routing/metrics through one
+shared engine, model-pure batching (micro-batches never mix models), the
+per-model tail-flush regression, per-model adaptive refits, and micro-batch
+auto-tuning."""
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core import (DEFAULT_MODEL, DynamicBatcher, MicroBatcher, Request,
+                        WorkloadGenerator)
+from repro.serving import (AdaptiveConfig, AdaptiveController,
+                           CostModelRouter, LatencyCurve, ModelEntry,
+                           ModelRegistry, ServingEngine, StaticScheduler)
+
+
+# ---------------------------------------------------------------------------
+# Light fakes: registry/engine semantics don't need the real GNN stack
+# ---------------------------------------------------------------------------
+class FakeExecutor:
+    kind = "device"
+
+    def __init__(self, name, *, capacity=2, delay_s=0.0, d_out=4):
+        self.name = name
+        self.capacity = capacity
+        self.delay_s = delay_s
+        self.d_out = d_out
+        self.inflight = 0
+        self.batches: list[np.ndarray] = []
+        self._pool = ThreadPoolExecutor(max_workers=capacity)
+
+    def cost(self, seeds):
+        return float((np.asarray(seeds) >= 0).sum())
+
+    def _work(self, seeds):
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        return np.zeros((len(seeds), self.d_out), np.float32)
+
+    def submit(self, seeds):
+        self.batches.append(np.asarray(seeds).copy())
+        return self._pool.submit(self._work, seeds)
+
+    def run(self, seeds):
+        return self._work(seeds)
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+
+
+def _flat_curve(cost: float) -> LatencyCurve:
+    return LatencyCurve(psgs=np.array([0.0, 100.0]),
+                        avg=np.array([cost, cost]),
+                        mx=np.array([cost, cost]))
+
+
+def _router(table, prefer: str, other: str) -> CostModelRouter:
+    r = CostModelRouter(table, "latency_preferred")
+    r.register(prefer, _flat_curve(1e-4))
+    r.register(other, _flat_curve(1e-2))
+    return r
+
+
+def _req(i, seeds, model=DEFAULT_MODEL):
+    return Request(i, np.asarray(seeds, np.int64), time.perf_counter(),
+                   model=model)
+
+
+def _two_model_engine(table, **engine_kw):
+    """Model 'a' prefers 'host', model 'b' prefers 'device' — same seeds,
+    opposite decisions (the per-model divergence under test)."""
+    ex_a = {"host": FakeExecutor("host"), "device": FakeExecutor("device")}
+    ex_b = {"host": FakeExecutor("host"), "device": FakeExecutor("device")}
+    reg = ModelRegistry()
+    reg.register("a", ex_a, _router(table, "host", "device"))
+    reg.register("b", ex_b, _router(table, "device", "host"))
+    return ServingEngine(reg, **engine_kw), reg, ex_a, ex_b
+
+
+# ---------------------------------------------------------------------------
+# Registry basics + single-model special case
+# ---------------------------------------------------------------------------
+def test_registry_register_get_names():
+    reg = ModelRegistry()
+    ex = {"host": FakeExecutor("host")}
+    reg.register("m1", ex, StaticScheduler("host"))
+    reg.register("m2", [FakeExecutor("dev")], StaticScheduler("dev"))
+    assert reg.names == ["m1", "m2"] and len(reg) == 2
+    assert "m1" in reg and "nope" not in reg
+    assert reg.get("m1").executors is not reg.get("m2").executors
+    assert reg.get("m2").executors["dev"].name == "dev"
+    assert set(reg.routers()) == {"m1", "m2"}
+    assert {m for m, _n, _e in reg.all_executors()} == {"m1", "m2"}
+    with pytest.raises(KeyError, match="m1"):   # names listed in the error
+        reg.get("typo")
+    with pytest.raises(ValueError, match="at least one executor"):
+        reg.add(ModelEntry("empty", {}, StaticScheduler("host")))
+
+
+def test_single_model_engine_is_one_entry_registry():
+    ex = {"host": FakeExecutor("host")}
+    engine = ServingEngine(ex, StaticScheduler("host"))
+    assert engine.registry.names == [DEFAULT_MODEL]
+    assert engine.executors is engine.registry.get(DEFAULT_MODEL).executors
+    assert isinstance(engine.router, StaticScheduler)
+    m = engine.run([[_req(0, [1, 2])]])   # untagged request → default model
+    assert m.requests == 1
+    assert m.models[DEFAULT_MODEL].requests == 1
+    engine.close()
+
+
+def test_engine_constructor_validation():
+    ex = {"host": FakeExecutor("host")}
+    reg = ModelRegistry.single(ex, StaticScheduler("host"))
+    with pytest.raises(ValueError, match="not both"):
+        ServingEngine(reg, StaticScheduler("host"))
+    with pytest.raises(ValueError, match="not both"):
+        ServingEngine(ex, StaticScheduler("host"), registry=reg)
+    with pytest.raises(ValueError, match="needs"):
+        ServingEngine(ex)           # router missing
+    with pytest.raises(ValueError, match="at least one model"):
+        ServingEngine(ModelRegistry())
+
+
+def test_engine_register_adds_to_named_model():
+    engine, reg, *_ = _two_model_engine(np.full(8, 1.0))
+    late = FakeExecutor("late")
+    engine.register(late, model="b")
+    assert reg.get("b").executors["late"] is late
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
+# Per-model routing divergence through one engine
+# ---------------------------------------------------------------------------
+def test_interleaved_stream_routes_per_model():
+    table = np.full(16, 1.0)
+    engine, _reg, ex_a, ex_b = _two_model_engine(table)
+    batches = []
+    for i in range(12):
+        model = "a" if i % 2 == 0 else "b"
+        batches.append([_req(i, [i % 16, (i + 3) % 16], model)])
+    m = engine.run(batches)
+    assert m.requests == 12
+    # identical seeds, opposite routing — decided by the model tag alone
+    assert m.models["a"].routed == {"host": 6}
+    assert m.models["b"].routed == {"device": 6}
+    assert len(ex_a["host"].batches) == 6 and not ex_a["device"].batches
+    assert len(ex_b["device"].batches) == 6 and not ex_b["host"].batches
+    # aggregate view preserved: sums over models, merged executor names
+    assert m.routed == {"host": 6, "device": 6}
+    assert m.requests == sum(s.requests for s in m.models.values())
+    engine.close()
+
+
+def test_different_curves_give_different_cutpoints():
+    """Two models over the same PSGS table: a higher fixed device offset
+    pushes the host→device crossover right — per-model calibration yields
+    per-model PSGS cut-points."""
+    table = np.linspace(1, 100, 50)
+
+    def router_with_offset(offset):
+        r = CostModelRouter(table, "latency_preferred")
+        q = np.linspace(1.0, 100.0, 32)
+        r.register("host", LatencyCurve.fit(q, 1e-4 * q, bins=8),
+                   kind="host")
+        r.register("device", LatencyCurve.fit(q, offset + 1e-6 * q, bins=8))
+        return r
+
+    cut_small = router_with_offset(2e-3).crossover("host", "device")
+    cut_wide = router_with_offset(6e-3).crossover("host", "device")
+    assert cut_small < cut_wide
+    # the cut-point is where the decision actually flips
+    r = router_with_offset(2e-3)
+    below = np.flatnonzero(table < cut_small * 0.9)[:1]
+    above = np.flatnonzero(table > cut_small * 1.2)[:1]
+    assert r.route(below) == "host" and r.route(above) == "device"
+
+
+def test_shed_counted_per_model():
+    table = np.full(8, 1.0)
+    ex = {"host": FakeExecutor("host", capacity=1, delay_s=0.2)}
+    reg = ModelRegistry().register("only", ex, StaticScheduler("host"))
+    engine = ServingEngine(reg, max_inflight=1, admission="shed")
+    m = engine.run([[_req(i, [0], "only")] for i in range(5)])
+    assert m.shed >= 1
+    assert m.models["only"].shed == m.shed
+    assert m.models["only"].requests + m.models["only"].shed == 5
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
+# Batches and micro-batches never mix models
+# ---------------------------------------------------------------------------
+def test_submit_batch_rejects_mixed_models():
+    engine, *_ = _two_model_engine(np.full(8, 1.0))
+    with pytest.raises(ValueError, match="mixes models"):
+        engine.submit_batch([_req(0, [0], "a"), _req(1, [1], "b")])
+    engine.drain()
+    engine.close()
+
+
+def test_dynamic_batcher_closes_on_model_change():
+    b = DynamicBatcher(deadline_s=10.0, max_batch=100)
+    assert b.add(_req(0, [0], "a")) is None
+    out = b.add(_req(1, [1], "b"))      # model boundary closes a's batch
+    assert out is not None and [r.model for r in out] == ["a"]
+    tail = b.flush()
+    assert [r.model for r in tail] == ["b"]
+
+
+def test_micro_batcher_never_coalesces_across_models():
+    micro = MicroBatcher(deadline_s=10.0, max_seeds=10**6)
+    assert micro.add([_req(0, [0], "a")]) is None
+    assert micro.add([_req(1, [1], "a")]) is None   # same model: coalesces
+    out = micro.add([_req(2, [2], "b")])   # boundary emits a's super-batch
+    assert out is not None and {r.model for r in out} == {"a"}
+    assert len(out) == 2
+    tail = micro.flush()
+    assert {r.model for r in tail} == {"b"}
+    assert micro.emitted == 2 and micro.coalesced == 1
+
+
+def test_batcher_clones_are_fresh_and_configured():
+    table = np.full(4, 2.0)
+    b = DynamicBatcher(deadline_s=0.5, psgs_budget=9.0, max_batch=7,
+                       psgs_table=table)
+    b.add(_req(0, [0]))
+    c = b.clone()
+    assert (c.deadline_s, c.psgs_budget, c.max_batch) == (0.5, 9.0, 7)
+    assert c.flush() is None            # fresh: no pending leaked
+    m = MicroBatcher(deadline_s=0.3, max_seeds=11, psgs_budget=5.0,
+                     psgs_table=table)
+    m.add([_req(1, [1])])
+    m2 = m.clone()
+    assert (m2.deadline_s, m2.max_seeds, m2.psgs_budget) == (0.3, 11, 5.0)
+    assert m2.flush() is None
+
+
+def test_serve_stream_keeps_models_pure_under_micro():
+    """Interleaved 2-model stream through serve_stream with coalescing
+    bounds wide open: every executor-level batch must be model-pure (a
+    shared stage would have mixed them and raised in submit_batch)."""
+    table = np.full(32, 1.0)
+    engine, _reg, ex_a, ex_b = _two_model_engine(table)
+    reqs = [_req(i, [i % 32], "a" if i % 2 == 0 else "b")
+            for i in range(20)]
+    micro = MicroBatcher(deadline_s=10.0, max_seeds=6)
+    m = engine.serve_stream(reqs, DynamicBatcher(deadline_s=0.0,
+                                                 max_batch=1), micro=micro)
+    assert m.requests == 20
+    assert m.models["a"].requests == 10 and m.models["b"].requests == 10
+    for ex_set, n in ((ex_a, 10), (ex_b, 10)):
+        served = sum(len(b) for e in ex_set.values() for b in e.batches)
+        assert served == n
+    engine.close()
+
+
+def test_serve_stream_flushes_micro_tail_per_model():
+    """Regression (satellite): a tail super-batch below the PSGS budget —
+    for EVERY model on the stream — must be flushed on drain, not dropped."""
+    table = np.full(8, 1.0)
+    engine, *_ = _two_model_engine(table)
+    # bounds no batch can hit: everything becomes a held tail super-batch
+    micro = MicroBatcher(deadline_s=10**6, max_seeds=10**6,
+                         psgs_budget=10**9, psgs_table=table)
+    reqs = [_req(i, [i % 8], "a" if i < 3 else "b") for i in range(6)]
+    m = engine.serve_stream(reqs, DynamicBatcher(deadline_s=0.0,
+                                                 max_batch=1), micro=micro)
+    assert m.requests == 6                      # nothing dropped
+    assert m.models["a"].requests == 3 and m.models["b"].requests == 3
+    engine.close()
+
+
+def test_serve_stream_multi_model_needs_clonable_stage():
+    engine, *_ = _two_model_engine(np.full(8, 1.0))
+
+    class NoClone:
+        def add(self, req):
+            return [req]
+
+        def flush(self):
+            return None
+
+    reqs = [_req(0, [0], "a"), _req(1, [1], "b")]
+    with pytest.raises(TypeError, match="clone"):
+        engine.serve_stream(reqs, NoClone())
+    engine.drain()
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
+# Per-model metrics + executor percentiles in summary()
+# ---------------------------------------------------------------------------
+def test_summary_has_models_executors_and_store_sections():
+    table = np.full(8, 1.0)
+    engine, *_ = _two_model_engine(table)
+    m = engine.run([[_req(0, [0, 1], "a")], [_req(1, [2], "b")]])
+    s = m.summary()
+    assert s["models"]["a"]["requests"] == 1
+    assert s["models"]["b"]["routed"] == {"device": 1}
+    assert s["models"]["a"]["p99_ms"] >= s["models"]["a"]["p50_ms"] >= 0
+    ex = s["executors"]
+    assert set(ex) == {"a/host", "b/device"}   # model-qualified keys
+    for v in ex.values():
+        assert v["batches"] == 1 and v["p99_ms"] >= v["p50_ms"] > 0
+    assert s["store"] == {}      # fakes expose no store stats
+    engine.close()
+
+
+def test_summary_store_stats_from_real_store(tmp_path):
+    """Real stack: summary()['store'] carries the fused-gather dispatch
+    counters, and default-model executor keys stay unqualified."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (TieredFeatureStore, TopologySpec, compute_fap,
+                            compute_psgs, quiver_placement)
+    from repro.graph import power_law_graph
+    from repro.models.gnn_basic import sage_init, sage_layered
+    from repro.serving import HostExecutor
+
+    n, d, fan = 400, 8, (3, 2)
+    g = power_law_graph(n, 5.0, seed=0)
+    feats = np.random.default_rng(0).normal(size=(n, d)).astype(np.float32)
+    fap = compute_fap(g, fan)
+    topo = TopologySpec(num_pods=1, devices_per_pod=1, rows_per_device=128,
+                        rows_host=200, hot_replicate_fraction=0.3)
+    store = TieredFeatureStore.build(feats, quiver_placement(fap, topo))
+    params = sage_init(jax.random.key(0), [d, 16, 16])
+
+    @jax.jit
+    def infer_fn(hop_feats, hop_ids):
+        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
+        return sage_layered(params, hop_feats, fan, hop_masks=masks)
+
+    psgs = compute_psgs(g, fan)
+    ex = {"host": HostExecutor(g, store, fan, infer_fn, psgs_table=psgs)}
+    engine = ServingEngine(ex, StaticScheduler("host"))
+    store.reset_stats()
+    m = engine.run([[_req(0, [1, 2, 3])]])
+    s = m.summary()
+    assert s["store"]["TieredFeatureStore"]["fused_calls"] >= 1
+    assert set(s["executors"]) == {"host"}     # default model: bare names
+    assert m.models[DEFAULT_MODEL].exec_latencies["host"]
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
+# Adaptive controller: shared sketch, per-model refits, micro auto-tuning
+# ---------------------------------------------------------------------------
+class _G:
+    num_nodes = 8
+
+
+def _store_stub():
+    return type("S", (), {"plan": None})()
+
+
+def test_adaptive_refits_per_model_router():
+    """Two models sharing executor names: only the drifted model's router
+    swaps, keyed 'model/executor' in last_drift."""
+    table = np.full(8, 10.0, np.float32)
+    cheap, slow = _flat_curve(1e-3), _flat_curve(5e-3)
+
+    def make_router():
+        r = CostModelRouter(table, "latency_preferred")
+        r.register("host", cheap, kind="host")
+        r.register("device", slow, kind="device")
+        return r
+
+    routers = {"m1": make_router(), "m2": make_router()}
+    ctl = AdaptiveController(
+        _G(), (2,), _store_stub(), routers, psgs_table=table,
+        config=AdaptiveConfig(min_refit_samples=8, drift_threshold=0.25,
+                              curve_bins=4, interval_batches=10**9))
+    seeds = np.array([0, 1])
+    for i in range(16):
+        # m1's host drifted 10x; m2's telemetry matches its calibration
+        ctl.on_batch_complete("host", np.array([i % 8]), 1e-2 + i * 1e-5,
+                              "m1")
+        ctl.on_batch_complete("host", np.array([i % 8]), 1e-3, "m2")
+    swapped = ctl.refit_curves()
+    assert swapped == 1
+    assert ctl.stats["last_drift"]["m1/host"] > 0.25
+    assert ctl.stats["last_drift"]["m2/host"] < 0.25
+    assert routers["m1"].route(seeds) == "device"   # m1 flipped
+    assert routers["m2"].route(seeds) == "host"     # m2 untouched
+
+
+def test_adaptive_accepts_registry_and_keeps_default_router_view():
+    table = np.full(8, 1.0)
+    reg = ModelRegistry()
+    r1 = _router(table, "host", "device")
+    reg.register(DEFAULT_MODEL, {"host": FakeExecutor("host"),
+                                 "device": FakeExecutor("device")}, r1)
+    ctl = AdaptiveController(_G(), (2,), _store_stub(), reg,
+                             psgs_table=table)
+    assert ctl.routers == {DEFAULT_MODEL: r1}
+    assert ctl.router is r1                 # pre-multi-model view
+
+
+def test_legacy_hook_arity_still_supported():
+    """Hooks written before the model tag (2-/3-arg signatures) keep
+    working: the engine trims the trailing model argument."""
+    calls = {}
+
+    class OldHook:
+        def on_admit(self, name, seeds):
+            calls["admit"] = (name, len(seeds))
+
+        def on_batch_complete(self, name, seeds, latency_s):
+            calls["complete"] = name
+
+    class NewHook:
+        def on_admit(self, name, seeds, model):
+            calls["admit_model"] = model
+
+    engine, *_ = _two_model_engine(np.full(8, 1.0),
+                                   hooks=[OldHook(), NewHook()])
+    m = engine.run([[_req(0, [0, 1], "a")]])
+    assert m.requests == 1                  # no hook TypeError surfaced
+    assert calls["admit"] == ("host", 2)
+    assert calls["complete"] == "host"
+    assert calls["admit_model"] == "a"
+    engine.close()
+
+
+def test_micro_autotune_nudges_toward_knee_within_bounds():
+    """Samples with a fixed per-batch overhead: latency/psgs keeps falling
+    with batch size, so the knee sits at the top of the observed range and
+    the tuner must grow max_seeds toward it (never past the bounds)."""
+    table = np.full(64, 1.0, np.float32)
+    micro = MicroBatcher(deadline_s=0.05, max_seeds=16)
+    ctl = AdaptiveController(
+        _G(), (2,), _store_stub(), None, psgs_table=table, micro=micro,
+        config=AdaptiveConfig(min_refit_samples=8, curve_bins=6,
+                              interval_batches=10**9, micro_step=1.0,
+                              micro_seeds_bounds=(4, 48),
+                              micro_deadline_bounds=(1e-3, 2e-2)))
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        n = int(rng.integers(1, 60))
+        seeds = rng.integers(0, 64, size=n)
+        ctl.on_batch_complete("host", seeds, 5e-3 + 1e-5 * n)
+    targets = ctl.micro_targets()
+    assert targets is not None
+    out = ctl.tune_micro()
+    assert out is not None and ctl.stats["micro_tunings"] == 1
+    # knee is at the top of the range; step=1.0 jumps straight to the
+    # target, clamped into the configured bounds
+    assert micro.max_seeds > 16
+    assert 4 <= micro.max_seeds <= 48
+    assert 1e-3 <= micro.deadline_s <= 2e-2
+
+
+def test_micro_autotune_respects_sample_floor_and_detach():
+    ctl = AdaptiveController(_G(), (2,), _store_stub(), None,
+                             psgs_table=np.full(8, 1.0),
+                             config=AdaptiveConfig(min_refit_samples=8))
+    assert ctl.tune_micro() is None         # no micro attached
+    ctl.attach_micro(MicroBatcher())
+    assert ctl.tune_micro() is None         # not enough samples yet
+    assert ctl.stats["micro_tunings"] == 0
+
+
+def test_workload_generator_round_robin_models():
+    gen = WorkloadGenerator(16, np.ones(16), distribution="uniform", seed=0)
+    reqs = list(gen.stream(7, models=["x", "y", "z"]))
+    assert [r.model for r in reqs] == ["x", "y", "z", "x", "y", "z", "x"]
+    assert all(r.model == DEFAULT_MODEL for r in gen.stream(2))

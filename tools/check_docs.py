@@ -27,6 +27,7 @@ API = {
                                        "HostExecutor", "DeviceExecutor",
                                        "ShardedExecutor"],
     "src/repro/serving/router.py": ["CostModelRouter"],
+    "src/repro/serving/registry.py": ["ModelRegistry", "ModelEntry"],
     "src/repro/serving/adaptive.py": ["AdaptiveController",
                                       "FrequencySketch"],
     "src/repro/core/feature_store.py": [
