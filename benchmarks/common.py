@@ -37,8 +37,10 @@ def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
 def build_serving_stack(*, nodes: int = 6000, avg_degree: float = 10.0,
                         d_feat: int = 64, fanouts=(6, 4), seed: int = 0,
                         hot_frac: float = 0.25, rows_frac: float = 0.25,
-                        distribution: str = "degree"):
-    """Small but skewed end-to-end stack shared by the serving benchmarks."""
+                        distribution: str = "degree",
+                        spill_path: str | None = None):
+    """Small but skewed end-to-end stack shared by the serving benchmarks.
+    ``spill_path`` backs the DISK tier with a real mmap spill file."""
     graph = power_law_graph(nodes, avg_degree, seed=seed)
     rng = np.random.default_rng(seed + 1)
     feats = rng.normal(size=(nodes, d_feat)).astype(np.float32)
@@ -50,7 +52,8 @@ def build_serving_stack(*, nodes: int = 6000, avg_degree: float = 10.0,
                         rows_per_device=max(int(nodes * rows_frac), 64),
                         rows_host=max(int(nodes * 0.4), 64),
                         hot_replicate_fraction=hot_frac)
-    store = TieredFeatureStore.build(feats, quiver_placement(fap, topo))
+    store = TieredFeatureStore.build(feats, quiver_placement(fap, topo),
+                                     spill_path=spill_path)
     params = sage_init(jax.random.key(seed), [d_feat, 64, 64])
 
     @jax.jit
@@ -74,9 +77,16 @@ def make_model_infer_fn(stack, hidden: tuple[int, ...] = (64, 64), *,
 
 def store_bytes(store) -> int:
     """Resident bytes of a tiered store's feature arrays (all tiers) —
-    the shared-store-vs-isolated-engines memory comparison signal."""
-    return sum(int(np.asarray(a).nbytes)
-               for a in (store.hot, store.warm, store.host, store.disk))
+    the shared-store-vs-isolated-engines memory comparison signal. A
+    spill-backed DISK tier reports only its RAM overlay
+    (``resident_nbytes``): the memmap pages live on disk and materializing
+    them here would both misreport and read the whole file."""
+    total = 0
+    for a in (store.hot, store.warm, store.host, store.disk):
+        resident = getattr(a, "resident_nbytes", None)
+        total += int(resident if resident is not None
+                     else np.asarray(a).nbytes)
+    return total
 
 
 def make_executors(stack, *, num_workers: int = 2, max_batch: int = 128,

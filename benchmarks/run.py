@@ -20,6 +20,7 @@ MODULES = [
     "feature_collection",  # Fig. 16
     "serve_throughput",    # Fig. 9
     "fused_gather",        # fused feature-collection hot path
+    "prefetch",            # cold-tier staging vs critical-path callbacks
     "multi_model",         # shared-store registry vs isolated engines
     "policy_cdf",          # Fig. 10
     "workload_drift",      # online adaptation vs frozen placement

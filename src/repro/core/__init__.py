@@ -11,7 +11,9 @@ touching the shims themselves (including the legacy ``ServingEngine``
 construction signature, resolved lazily below) emits the
 ``DeprecationWarning``."""
 from repro.core.fap import compute_fap, monte_carlo_fap
-from repro.core.feature_store import ShardedFeatureStore, TieredFeatureStore
+from repro.core.feature_store import (DiskSpillTier, ShardedFeatureStore,
+                                      TieredFeatureStore)
+from repro.core.prefetch import Prefetcher
 from repro.core.placement import (PlacementPlan, TopologySpec,
                                   degree_placement, expert_placement,
                                   freq_placement, hash_placement,
@@ -32,7 +34,7 @@ __all__ = [
     "monte_carlo_fap", "TopologySpec", "PlacementPlan", "quiver_placement",
     "hash_placement", "degree_placement", "freq_placement", "p3_placement",
     "expert_placement", "migration_pairs", "TieredFeatureStore",
-    "ShardedFeatureStore",
+    "ShardedFeatureStore", "DiskSpillTier", "Prefetcher",
     "LatencyCurve", "CalibrationResult", "calibrate", "calibrate_executors",
     "CostModelRouter", "HybridScheduler",
     "StaticScheduler", "Request", "WorkloadGenerator", "DynamicBatcher",

@@ -13,7 +13,20 @@ XLA program so no host mediation happens at all:
             requested rows — the RDMA-read analogue; skew overflow spills to
             the host path, like a cache miss).
   HOST  rows are fetched with ``jax.experimental.io_callback`` (PCIe analogue).
-  DISK  rows return zeros + a miss flag (callers prefetch asynchronously).
+  DISK  rows live in an mmap-backed spill tier (:class:`DiskSpillTier` — an
+        ``np.memmap`` file written once at :meth:`TieredFeatureStore.build`
+        plus a copy-on-write overlay for migrated rows) and resolve to the
+        real feature rows through the same host callback; spill reads and
+        critical-path misses are tracked per row, and hot DISK rows can be
+        promoted up via :meth:`TieredFeatureStore.promote_misses` (swap-based,
+        the existing migration machinery).
+
+Cold-tier accesses can additionally be taken off the critical path entirely
+by a :class:`~repro.core.prefetch.Prefetcher`: it stages predicted HOST/DISK
+rows into a device-side staging buffer published through
+:meth:`TieredFeatureStore.publish_stage`; ``lookup``/``lookup_hops`` resolve
+staged ids from device memory and fall back to the synchronous host callback
+only on a prefetch miss (hits and misses are counted in the dispatch stats).
 
 The paper's address-sort/TLB optimization survives as: ids are deduplicated
 (``fixed_size_unique``) and sorted before every gather/exchange, which both
@@ -32,6 +45,7 @@ row count (hop frontiers overlap heavily on skewed graphs).
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from functools import partial
 from typing import Optional
@@ -51,10 +65,161 @@ from repro.kernels.tiered_gather.ops import tiered_gather
 
 
 def _new_stats() -> dict[str, int]:
-    """Dispatch accounting shared by both lookup paths (benchmark signal:
-    ``benchmarks/fused_gather.py`` reports the per-request reduction)."""
+    """Dispatch accounting shared by both lookup paths (benchmark signals:
+    ``benchmarks/fused_gather.py`` reports the per-request dispatch
+    reduction, ``benchmarks/prefetch.py`` the critical-path host-callback
+    reduction). The schema is pinned by ``tests/test_prefetch.py`` — new
+    counters must be added there too:
+
+      lookup_calls / fused_calls   per-hop vs fused lookup entries
+      device_gathers               tiered_gather dispatches (HOT/WARM)
+      host_fetches                 synchronous ``io_callback`` round-trips
+                                   actually issued (a lookup whose cold rows
+                                   are all staged — or that has none —
+                                   issues zero)
+      disk_misses                  DISK-tier rows resolved synchronously on
+                                   the lookup critical path
+      spill_reads                  rows read from the DISK spill tier by any
+                                   path (critical-path misses + prefetch)
+      prefetch_hits                cold rows resolved from the device-side
+                                   staging buffer (no host round-trip)
+      prefetch_misses              cold rows that fell back to the host
+                                   callback while a stage was published
+    """
     return {"lookup_calls": 0, "fused_calls": 0,
-            "device_gathers": 0, "host_fetches": 0}
+            "device_gathers": 0, "host_fetches": 0,
+            "disk_misses": 0, "spill_reads": 0,
+            "prefetch_hits": 0, "prefetch_misses": 0}
+
+
+class DiskSpillTier:
+    """mmap-backed DISK tier: one spill file + a copy-on-write overlay.
+
+    The backing array is written ONCE (at :meth:`TieredFeatureStore.build`)
+    and then only ever read: when ``path`` is given it is an ``np.memmap``
+    reopened read-only, so cold rows genuinely live on disk, not in RAM.
+    Rows that migrate INTO the disk tier afterwards (demotions from
+    :meth:`TieredFeatureStore.swap_assignments`) land in a small dict
+    overlay instead of mutating the file — ``copy()`` duplicates only the
+    overlay and shares the memmap, which keeps the store's copy-on-write
+    snapshot publication cheap and torn-read-free (in-flight lookups hold
+    the previous ``DiskSpillTier`` object; the file underneath never
+    changes). Indexing (``tier[rows]``) reads the backing store and applies
+    the overlay, so callers see one coherent array.
+    """
+
+    def __init__(self, base: np.ndarray,
+                 overlay: Optional[dict[int, np.ndarray]] = None,
+                 path: Optional[str] = None):
+        self._base = base
+        self._overlay: dict[int, np.ndarray] = dict(overlay or {})
+        self.path = path
+        self._root = path       # first-generation file; .gN names derive
+        self._generation = 0    # from it across compactions
+
+    @staticmethod
+    def build(rows: np.ndarray, path: Optional[str] = None) -> "DiskSpillTier":
+        """Write the DISK-tier rows. With ``path`` the rows go to an
+        ``np.memmap`` spill file (flushed, then reopened read-only); without
+        it the backing store is plain host memory (tests / tiny stores)."""
+        if path is None:
+            return DiskSpillTier(rows)
+        mm = np.memmap(path, dtype=rows.dtype, mode="w+", shape=rows.shape)
+        mm[:] = rows
+        mm.flush()
+        del mm  # close the writable map before reopening read-only
+        base = np.memmap(path, dtype=rows.dtype, mode="r", shape=rows.shape)
+        return DiskSpillTier(base, path=path)
+
+    @property
+    def shape(self) -> tuple:
+        """Backing-store shape ``(rows, d)`` (overlay rows shadow, never
+        extend)."""
+        return self._base.shape
+
+    @property
+    def dtype(self) -> np.dtype:
+        """Row dtype of the backing store."""
+        return self._base.dtype
+
+    @property
+    def overlay_rows(self) -> int:
+        """Rows currently shadowed by post-build migrations."""
+        return len(self._overlay)
+
+    def __len__(self) -> int:
+        return self._base.shape[0]
+
+    def __getitem__(self, idx):
+        if isinstance(idx, (int, np.integer)):
+            hit = self._overlay.get(int(idx))
+            return hit if hit is not None else np.asarray(self._base[idx])
+        idx = np.asarray(idx)
+        rows = np.asarray(self._base[idx])  # fancy indexing always copies
+        if self._overlay:
+            # vectorized membership test: the common case (no overlay hit
+            # among the requested slots) costs one np.isin, not a Python
+            # loop over every requested row
+            keys = np.fromiter(self._overlay, dtype=np.int64,
+                               count=len(self._overlay))
+            flat = idx.ravel()
+            for i in np.flatnonzero(np.isin(flat, keys)):
+                rows[i] = self._overlay[int(flat[i])]
+        return rows
+
+    def __setitem__(self, idx, vals) -> None:
+        """Writes go to the overlay, never to the spill file."""
+        idx = np.atleast_1d(np.asarray(idx))
+        vals = np.atleast_2d(np.asarray(vals))
+        for slot, row in zip(idx.ravel(), vals):
+            self._overlay[int(slot)] = np.array(row)
+
+    def copy(self) -> "DiskSpillTier":
+        """Copy-on-write duplicate: shares the backing store, copies only
+        the overlay (the migration publish path calls this)."""
+        dup = DiskSpillTier(self._base, self._overlay, self.path)
+        dup._root, dup._generation = self._root, self._generation
+        return dup
+
+    @property
+    def resident_nbytes(self) -> int:
+        """Host-RAM bytes actually held by this tier: the overlay plus —
+        only when there is no spill file — the backing array itself (the
+        memmap pages live on disk and must not count as resident)."""
+        row = int(self._base.itemsize * np.prod(self._base.shape[1:]))
+        base = 0 if self.path is not None else int(self._base.nbytes)
+        return base + row * len(self._overlay)
+
+    def compact(self) -> "DiskSpillTier":
+        """Fold the overlay into a fresh backing store and return it as a
+        new tier object (the caller publishes it copy-on-write; in-flight
+        snapshots keep reading the old base + overlay).
+
+        With a spill file, the merged rows are written to a new generation
+        file ``<path>.gN`` and the previous file is unlinked best-effort
+        (POSIX keeps it alive for snapshots still mapping it). This bounds
+        the RAM the overlay can accumulate under long-running adaptive
+        demotion churn — the store auto-compacts on the migration publish
+        path once the overlay outgrows ``len(self) // 8``.
+        """
+        merged = np.asarray(self)
+        if self.path is None:
+            return DiskSpillTier(merged)
+        new_path = f"{self._root}.g{self._generation + 1}"
+        fresh = DiskSpillTier.build(merged, new_path)
+        fresh._root = self._root
+        fresh._generation = self._generation + 1
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+        return fresh
+
+    def __array__(self, dtype=None, copy=None) -> np.ndarray:
+        out = np.array(self._base)
+        for slot, row in self._overlay.items():
+            out[slot] = row
+        return out.astype(dtype) if dtype is not None else out
 
 
 @dataclasses.dataclass
@@ -71,7 +236,7 @@ class TieredFeatureStore:
     hot: jnp.ndarray          # (n_hot, d) — "device HBM, replicated"
     warm: jnp.ndarray         # (warm_total, d) — "device HBM, partitioned"
     host: np.ndarray          # (host_total, d) — host RAM (numpy, off device)
-    disk: np.ndarray          # (rest, d) — cold store
+    disk: "DiskSpillTier"     # (rest, d) — mmap-backed spill tier
     tier_t: jnp.ndarray       # (N,) int32 lookup tables (device-resident;
     slot_t: jnp.ndarray       # paper: "feature lookup table" via UVA)
     owner_t: jnp.ndarray      # (N,) global warm owner (pod*G + dev), -1 else
@@ -91,9 +256,29 @@ class TieredFeatureStore:
                                     compare=False)
     _stats_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
+    # Prefetch staging state, published atomically like migrations:
+    # (stage_slot, stage_rows) where stage_slot is a host-side (N,) int32
+    # table (-1 = unstaged) and stage_rows a device-side (budget, d) buffer.
+    _stage: Optional[tuple] = dataclasses.field(default=None, repr=False,
+                                                compare=False)
+    # Per-node DISK critical-path miss counts (guarded by _stats_lock) —
+    # the signal for miss-driven promotion.
+    _disk_miss_counts: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    promoted_rows: int = 0    # lifetime count of miss-driven DISK promotions
 
     @staticmethod
-    def build(features: np.ndarray, plan: PlacementPlan) -> "TieredFeatureStore":
+    def build(features: np.ndarray, plan: PlacementPlan, *,
+              spill_path: Optional[str] = None) -> "TieredFeatureStore":
+        """Lay the feature matrix out across the four tiers of ``plan``.
+
+        Args:
+            features: ``(N, d)`` full feature matrix.
+            plan: placement decision (tier/owner/slot per node).
+            spill_path: when given, the DISK-tier rows are written to an
+                ``np.memmap`` spill file at this path (the real cold store);
+                ``None`` keeps them in host memory (small stores / tests).
+        """
         n, d = features.shape
         topo = plan.topology
         world = topo.num_pods * topo.devices_per_pod
@@ -128,8 +313,9 @@ class TieredFeatureStore:
         host[hbase[hpod] + plan.slot[host_ids]] = features[host_ids]
 
         disk_ids = np.flatnonzero(plan.tier == TIER_DISK)
-        disk = np.zeros((max(disk_ids.shape[0], 1), d), features.dtype)
-        disk[plan.slot[disk_ids]] = features[disk_ids]
+        disk_rows = np.zeros((max(disk_ids.shape[0], 1), d), features.dtype)
+        disk_rows[plan.slot[disk_ids]] = features[disk_ids]
+        disk = DiskSpillTier.build(disk_rows, spill_path)
 
         # Unified slot table pointing into each tier's flat store.
         slot_flat = plan.slot.copy()
@@ -142,16 +328,18 @@ class TieredFeatureStore:
             tier_t=jnp.asarray(plan.tier, jnp.int32),
             slot_t=jnp.asarray(slot_flat, jnp.int32),
             owner_t=jnp.asarray(owner_global, jnp.int32),
-            warm_base=jnp.asarray(base, jnp.int32))
+            warm_base=jnp.asarray(base, jnp.int32),
+            _disk_miss_counts=np.zeros(n, dtype=np.int64))
 
     # -- lookup -------------------------------------------------------------
     def _snapshot(self) -> tuple:
-        """Consistent view (hot, warm, host, disk, tier_t, slot_t). Arrays
-        are replaced — never mutated — by migration, so holding the
-        references is enough to keep serving from one coherent placement."""
+        """Consistent view (hot, warm, host, disk, tier_t, slot_t, stage).
+        Arrays are replaced — never mutated — by migration and by stage
+        publication, so holding the references is enough to keep serving
+        from one coherent placement + staging state."""
         with self._mig_lock:
             return (self.hot, self.warm, self.host, self.disk,
-                    self.tier_t, self.slot_t)
+                    self.tier_t, self.slot_t, self._stage)
 
     def _count(self, **deltas: int) -> None:
         with self._stats_lock:
@@ -183,8 +371,7 @@ class TieredFeatureStore:
             :meth:`swap_assignments`).
         """
         snap = self._snapshot()
-        self._count(lookup_calls=1, device_gathers=2,
-                    host_fetches=1 if include_host else 0)
+        self._count(lookup_calls=1, device_gathers=2)
         if dedup:
             uniq, inv = fixed_size_unique(jnp.asarray(ids, jnp.int32),
                                           int(ids.shape[0]))
@@ -232,8 +419,7 @@ class TieredFeatureStore:
         if total == 0:
             raise ValueError("lookup_hops needs at least one non-empty hop")
         snap = self._snapshot()
-        self._count(fused_calls=1, device_gathers=1,
-                    host_fetches=1 if include_host else 0)
+        self._count(fused_calls=1, device_gathers=1)
         ids = hops_j[0] if len(hops_j) == 1 else jnp.concatenate(hops_j)
         uniq, inv = fixed_size_unique(ids, total)
         rows = self._fused_unique(uniq, include_host, snap, use_pallas)
@@ -247,8 +433,9 @@ class TieredFeatureStore:
         """One gather per tier class for a deduplicated id vector: the
         HOT/WARM rows stream through ``tiered_gather`` in ascending
         (tier, slot) order — near-sequential DMAs, the paper's TLB
-        optimization — and HOST/DISK rows come from one ``_host_fetch``."""
-        hot, warm, host, disk, tier_t, slot_t = snap
+        optimization — and HOST/DISK rows come from the staging buffer
+        (prefetch hit) or one ``_host_fetch`` (miss fallback)."""
+        hot, warm, host, disk, tier_t, slot_t, stage = snap
         safe = jnp.maximum(uniq, 0)
         tier = tier_t[safe]
         slot = slot_t[safe]
@@ -263,14 +450,14 @@ class TieredFeatureStore:
                                    use_pallas=use_pallas)
         out = jnp.zeros_like(dev_sorted).at[order].set(dev_sorted)
         if include_host:
-            host_rows = self._host_fetch(uniq, tier, slot, host, disk)
-            out = jnp.where((tier >= TIER_HOST)[:, None], host_rows, out)
+            out = self._resolve_cold(uniq, tier, slot, out, host, disk,
+                                     stage)
         return jnp.where((uniq >= 0)[:, None], out, 0.0)
 
     def _lookup_unique(self, ids: jnp.ndarray, include_host: bool,
                        snap: Optional[tuple] = None) -> jnp.ndarray:
-        hot, warm, host, disk, tier_t, slot_t = (snap if snap is not None
-                                                 else self._snapshot())
+        hot, warm, host, disk, tier_t, slot_t, stage = (
+            snap if snap is not None else self._snapshot())
         safe = jnp.maximum(ids, 0)
         tier = tier_t[safe]
         slot = slot_t[safe]
@@ -281,9 +468,60 @@ class TieredFeatureStore:
                         warm[jnp.minimum(slot, warm.shape[0] - 1)],
                         out)
         if include_host:
-            host_rows = self._host_fetch(ids, tier, slot, host, disk)
-            out = jnp.where((tier >= TIER_HOST)[:, None], host_rows, out)
+            out = self._resolve_cold(ids, tier, slot, out, host, disk,
+                                     stage)
         return jnp.where((ids >= 0)[:, None], out, 0.0)
+
+    def _resolve_cold(self, ids: jnp.ndarray, tier: jnp.ndarray,
+                      slot: jnp.ndarray, out: jnp.ndarray, host, disk,
+                      stage: Optional[tuple]) -> jnp.ndarray:
+        """Resolve HOST/DISK-tier rows of one id vector.
+
+        Staged ids (prefetched into the device-side buffer) are gathered
+        from device memory — no host round-trip; the rest fall back to the
+        synchronous ``_host_fetch`` callback. When every cold id is staged
+        (or there are none) the callback is skipped entirely, which is the
+        whole point of the prefetcher: zero critical-path host callbacks.
+        Hit/miss/disk counters land in the dispatch stats; staged rows are
+        bit-identical to the host/disk rows (they are copies of the same
+        float values), so this path never changes lookup results.
+        """
+        ids_np = np.asarray(ids)
+        tier_np = np.asarray(tier)
+        cold = (tier_np >= TIER_HOST) & (ids_np >= 0)
+        if not cold.any():
+            return out
+        miss = cold
+        if stage is not None:
+            stage_slot, stage_rows = stage
+            sslot = stage_slot[np.maximum(ids_np, 0)]
+            hit = cold & (sslot >= 0)
+            miss = cold & ~hit
+            self._count(prefetch_hits=int(hit.sum()),
+                        prefetch_misses=int(miss.sum()))
+            if hit.any():
+                # full-width gather + where keeps the shapes static (one
+                # compile per id-bucket, like the host path) — a dynamic
+                # hit-index scatter would recompile on every hit count
+                gathered = stage_rows[jnp.asarray(np.maximum(sslot, 0))]
+                out = jnp.where(jnp.asarray(hit)[:, None], gathered, out)
+        if miss.any():
+            disk_miss = miss & (tier_np == TIER_DISK)
+            n_disk = int(disk_miss.sum())
+            self._count(host_fetches=1, disk_misses=n_disk,
+                        spill_reads=n_disk)
+            if n_disk:
+                with self._stats_lock:
+                    if self._disk_miss_counts is not None:
+                        np.add.at(self._disk_miss_counts, ids_np[disk_miss],
+                                  1)
+            # mask the staged positions out of the callback's tier vector so
+            # it only gathers the rows that actually missed
+            tier_eff = jnp.asarray(np.where(miss, tier_np, -1)
+                                   .astype(np.int32))
+            rows = self._host_fetch(ids, tier_eff, slot, host, disk)
+            out = jnp.where(jnp.asarray(miss)[:, None], rows, out)
+        return out
 
     def _host_fetch(self, ids, tier, slot, host=None, disk=None):
         """PCIe-analogue slow path: host callback, ids sorted by address
@@ -310,6 +548,108 @@ class TieredFeatureStore:
             cb, jax.ShapeDtypeStruct((ids.shape[0], self.feat_dim),
                                      self.hot.dtype), tier, slot,
             ordered=False)
+
+    # -- prefetch staging ----------------------------------------------------
+    def publish_stage(self, stage_slot: Optional[np.ndarray],
+                      stage_rows) -> None:
+        """Atomically publish (or clear) the prefetch staging state.
+
+        Args:
+            stage_slot: ``(N,)`` int32 host-side table mapping node id →
+                row in ``stage_rows`` (``-1`` = unstaged), or ``None`` to
+                clear the stage.
+            stage_rows: ``(budget, d)`` device-side staging buffer holding
+                the prefetched cold rows (ignored when ``stage_slot`` is
+                ``None``).
+
+        Published under the migration lock like a placement snapshot:
+        in-flight lookups keep resolving against the previous stage, new
+        lookups see the new one — never a torn mix.
+        """
+        stage = None if stage_slot is None else (stage_slot, stage_rows)
+        with self._mig_lock:
+            self._stage = stage
+
+    def staged_rows(self) -> int:
+        """Number of cold rows currently staged on device (0 = no stage)."""
+        with self._mig_lock:
+            stage = self._stage
+        return 0 if stage is None else int((stage[0] >= 0).sum())
+
+    def read_cold_rows(self, ids: np.ndarray) -> np.ndarray:
+        """Read the feature rows of ``ids`` for staging, OFF the critical
+        path (plain host-side reads, no device round-trip for cold tiers).
+
+        Each row is read from whichever tier currently holds it under one
+        consistent snapshot, so a migration racing the prefetcher still
+        yields exact values (rows travel with nodes; values never change).
+        DISK reads are counted as ``spill_reads``.
+
+        Args:
+            ids: ``(K,)`` valid node ids (no ``-1`` padding).
+
+        Returns:
+            ``(K, d)`` feature rows in ``ids`` order.
+        """
+        hot, warm, host, disk, tier_t, slot_t, _ = self._snapshot()
+        ids = np.asarray(ids)
+        tier = np.asarray(tier_t)[ids]
+        slot = np.asarray(slot_t)[ids]
+        out = np.zeros((ids.shape[0], self.feat_dim),
+                       np.asarray(host).dtype)
+        m_host, m_disk = tier == TIER_HOST, tier == TIER_DISK
+        if m_host.any():
+            out[m_host] = host[slot[m_host]]
+        if m_disk.any():
+            out[m_disk] = disk[slot[m_disk]]
+            self._count(spill_reads=int(m_disk.sum()))
+        m_dev = ~(m_host | m_disk)  # raced a promotion: read device tiers
+        if m_dev.any():
+            hot_np, warm_np = np.asarray(hot), np.asarray(warm)
+            for i in np.flatnonzero(m_dev):
+                src = hot_np if tier[i] == TIER_HOT else warm_np
+                out[i] = src[min(int(slot[i]), src.shape[0] - 1)]
+        return out
+
+    # -- miss-driven promotion -----------------------------------------------
+    def promote_misses(self, *, budget: int = 32, min_misses: int = 1) -> int:
+        """Swap the most-missed DISK rows up into the HOST tier.
+
+        Candidates are DISK-tier nodes with at least ``min_misses``
+        critical-path misses since the last promotion, hottest first;
+        victims are HOST-tier rows with the fewest recorded misses, coldest
+        build rank (highest slot) first. Swaps ride the existing
+        :meth:`swap_assignments` machinery, so tier counts, capacity and
+        the lookup-equivalence invariant are all preserved and concurrent
+        lookups keep serving from the previous snapshot.
+
+        Args:
+            budget: max node pairs to exchange this call.
+            min_misses: miss-count threshold for promotion.
+
+        Returns:
+            Number of feature rows moved (``2 *`` pairs swapped), also
+            accumulated into :attr:`promoted_rows` / :attr:`migrated_rows`.
+        """
+        if self._disk_miss_counts is None:
+            return 0
+        with self._stats_lock:
+            counts = self._disk_miss_counts.copy()
+        tier = np.asarray(self.tier_t)
+        cand = np.flatnonzero((tier == TIER_DISK) & (counts >= min_misses))
+        hosts = np.flatnonzero(tier == TIER_HOST)
+        if not cand.size or not hosts.size:
+            return 0
+        cand = cand[np.argsort(-counts[cand], kind="stable")][:budget]
+        slot = np.asarray(self.slot_t)
+        victims = hosts[np.lexsort((-slot[hosts], counts[hosts]))]
+        k = min(cand.size, victims.size)
+        pairs = list(zip(cand[:k].tolist(), victims[:k].tolist()))
+        moved = self.swap_assignments(pairs)
+        with self._stats_lock:
+            self._disk_miss_counts[cand[:k]] = 0
+            self.promoted_rows += moved
+        return moved
 
     def tier_histogram(self, ids: np.ndarray) -> dict[str, int]:
         ids = np.asarray(ids)
@@ -387,6 +727,12 @@ class TieredFeatureStore:
             else:
                 arr = arr.copy()
                 arr[np.asarray(rows)] = vals_np
+                # bound the spill tier's RAM overlay under demotion churn:
+                # fold it back into a fresh spill-file generation once it
+                # outgrows an eighth of the tier
+                if (isinstance(arr, DiskSpillTier)
+                        and arr.overlay_rows > max(64, len(arr) // 8)):
+                    arr = arr.compact()
                 new_stores[t] = arr
 
         # 4) publish the new snapshot (tier tables + plan) atomically

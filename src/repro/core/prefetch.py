@@ -1,0 +1,200 @@
+"""Sketch-driven async prefetcher for the cold feature tiers.
+
+The paper's feature-aggregation argument (§ feature aggregation) is that
+CPU–GPU data movement must stay off the request critical path; OMEGA
+(PAPERS.md) shows cold-feature fetch latency dominating large-graph GNN
+serving tails. The tiered store's HOST/DISK rows used to cost one
+synchronous ``io_callback`` per sample regardless of how predictable the
+workload was. This module closes that gap:
+
+  Prefetcher    predicts the next window's cold-tier hits from a decayed
+                seed-frequency sketch (or any caller-supplied score vector,
+                e.g. the AdaptiveController's freshly recomputed FAP),
+                reads those rows on a background thread (host RAM + the
+                mmap spill file — never the request path), and publishes
+                them to the store's device-side staging buffer.
+
+Double buffering: the previously published stage keeps serving lookups
+while the next one is built; :meth:`TieredFeatureStore.publish_stage` swaps
+the new buffer in atomically, so readers always see one coherent
+(placement, stage) snapshot. Staged rows are *copies* of the same feature
+values, so prefetching can never change a lookup result — only remove the
+host round-trip (hits and fallback misses are counted in the store's
+dispatch stats).
+
+Wire-up, standalone (the prefetcher feeds its own sketch via engine hooks
+and refreshes every ``refresh_every`` completed batches)::
+
+    pf = Prefetcher(store, sketch, budget=1024, refresh_every=32)
+    engine = ServingEngine(executors, router, hooks=[pf])
+
+or driven by the adaptive control loop (shared sketch, refresh + miss-driven
+DISK promotion every control step)::
+
+    controller = AdaptiveController(..., prefetcher=pf)
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import TIER_HOST
+
+
+class Prefetcher:
+    """Double-buffered cold-row prefetcher over a :class:`TieredFeatureStore`.
+
+    Attributes:
+        store: the tiered store whose stage this prefetcher owns.
+        sketch: optional seed-frequency sketch (duck-typed: ``observe`` +
+            ``counts``) used for prediction when no score vector is given;
+            fed by :meth:`on_admit` when the prefetcher is an engine hook.
+        budget: max rows staged per refresh (device staging-buffer size).
+        refresh_every: when set, :meth:`on_batch_complete` triggers an async
+            refresh every that many completed batches (standalone mode —
+            the AdaptiveController path refreshes per control step instead).
+    """
+
+    def __init__(self, store, sketch=None, *, budget: int = 1024,
+                 refresh_every: Optional[int] = None):
+        if budget <= 0:
+            raise ValueError(f"budget must be positive, got {budget}")
+        self.store = store
+        self.sketch = sketch
+        self.budget = int(budget)
+        self.refresh_every = refresh_every
+        self.stats = {"refreshes": 0, "staged_rows": 0, "skipped": 0,
+                      "batches_seen": 0}
+        self._lock = threading.Lock()
+        self._refresh_lock = threading.Lock()
+        self._inflight: Optional[Future] = None
+        self._error: Optional[BaseException] = None
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="prefetch")
+
+    # -- engine hook protocol ------------------------------------------------
+    def on_admit(self, name: str, seeds: np.ndarray, model: str = "") -> None:
+        """Engine hook: feed the admitted batch's seeds into the sketch
+        (no-op without one — e.g. when sharing the controller's sketch,
+        which the controller's own ``on_admit`` already feeds)."""
+        if self.sketch is not None:
+            self.sketch.observe(seeds)
+
+    def on_batch_complete(self, name: str, seeds: np.ndarray,
+                          latency_s: float, model: str = "") -> None:
+        """Engine hook: count completions and, in standalone mode
+        (``refresh_every``), kick an async refresh at each period — then
+        decay the (owned) sketch so predictions track the *recent* mix
+        rather than freezing on the all-time hot set. (Controller-driven
+        prefetchers share the controller's sketch, which decays per control
+        step instead; they leave ``refresh_every`` unset.)"""
+        with self._lock:
+            self.stats["batches_seen"] += 1
+            due = (self.refresh_every is not None
+                   and self.stats["batches_seen"] % self.refresh_every == 0)
+        if due:
+            self.refresh_async()
+            decay = getattr(self.sketch, "decay_step", None)
+            if decay is not None:
+                decay()
+
+    # -- prediction + staging ------------------------------------------------
+    def predict(self, scores: Optional[np.ndarray] = None) -> np.ndarray:
+        """Node ids to stage: the top-``budget`` cold-tier (HOST/DISK) nodes
+        by score. ``scores`` defaults to the sketch's decayed seed counts;
+        the adaptive loop passes its freshly recomputed FAP instead, which
+        also predicts multi-hop frontier accesses. Zero-score nodes are
+        never staged (cold start stages nothing).
+
+        Raises:
+            ValueError: with neither ``scores`` nor a sketch.
+        """
+        if scores is None:
+            if self.sketch is None:
+                raise ValueError("predict() needs scores or a sketch")
+            scores = self.sketch.counts
+        scores = np.asarray(scores, dtype=np.float64)
+        tier = np.asarray(self.store.tier_t)
+        cold = np.flatnonzero((tier >= TIER_HOST) & (scores > 0.0))
+        if not cold.size:
+            return cold
+        order = np.argsort(-scores[cold], kind="stable")
+        return cold[order[:self.budget]]
+
+    def refresh(self, scores: Optional[np.ndarray] = None) -> int:
+        """Synchronously rebuild and publish the staging buffer.
+
+        Predicts the stage set, reads the rows host-side (RAM + spill file
+        — never the request path), uploads them to device, and atomically
+        publishes the new stage; the previous stage keeps serving until the
+        swap (double buffering). With nothing to stage the stage is
+        cleared.
+
+        Args:
+            scores: optional per-node hotness (defaults to sketch counts).
+
+        Returns:
+            Number of rows staged.
+        """
+        with self._refresh_lock:
+            ids = self.predict(scores)
+            if ids.size == 0:
+                self.store.publish_stage(None, None)
+                staged = 0
+            else:
+                rows = self.store.read_cold_rows(ids)
+                n = int(np.asarray(self.store.tier_t).shape[0])
+                stage_slot = np.full(n, -1, np.int32)
+                stage_slot[ids] = np.arange(ids.size, dtype=np.int32)
+                self.store.publish_stage(stage_slot, jnp.asarray(rows))
+                staged = int(ids.size)
+            with self._lock:
+                self.stats["refreshes"] += 1
+                self.stats["staged_rows"] = staged
+            return staged
+
+    def refresh_async(self, scores: Optional[np.ndarray] = None
+                      ) -> Optional[Future]:
+        """Submit a refresh to the background worker; returns its future,
+        or ``None`` when one is already in flight (the new request is
+        dropped, not queued — the next period retries with fresher
+        scores). Worker errors are kept and re-raised by the next
+        :meth:`refresh_async` / :meth:`close` call."""
+        with self._lock:
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+            if self._inflight is not None and not self._inflight.done():
+                self.stats["skipped"] += 1
+                return None
+            fut = self._pool.submit(self.refresh, scores)
+            self._inflight = fut
+        fut.add_done_callback(self._done)
+        return fut
+
+    def _done(self, fut: Future) -> None:
+        exc = fut.exception()
+        if exc is not None:
+            with self._lock:
+                if self._error is None:
+                    self._error = exc
+
+    def report(self) -> dict:
+        """Prefetch counters for logging (refreshes, rows staged by the
+        last refresh, skipped overlapping refreshes, batches seen)."""
+        with self._lock:
+            return dict(self.stats)
+
+    def close(self) -> None:
+        """Drain the background worker and clear the published stage;
+        re-raises the last background refresh failure, if any."""
+        self._pool.shutdown(wait=True)
+        self.store.publish_stage(None, None)
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise err

@@ -13,7 +13,10 @@ distributed executor joins the registry: mesh-local sampling + one-sided
 sharded feature reads. With repeatable ``--models name=preset`` flags the
 engine co-serves several GNNs over the ONE shared store — each model gets
 its own calibration and router (per-model PSGS cut-points), requests are
-tagged round-robin, and the report breaks down per model.
+tagged round-robin, and the report breaks down per model. ``--spill-path``
+backs the DISK tier with a real ``np.memmap`` spill file and ``--prefetch``
+stages predicted cold rows into a device-side buffer so HOST/DISK reads
+leave the request critical path (see ``benchmarks/prefetch.py``).
 """
 from __future__ import annotations
 
@@ -25,15 +28,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import make_mesh
-from repro.core import (ShardedFeatureStore, TieredFeatureStore,
+from repro.core import (Prefetcher, ShardedFeatureStore, TieredFeatureStore,
                         TopologySpec, WorkloadGenerator, compute_fap,
                         compute_psgs, quiver_placement)
 from repro.graph import power_law_graph
 from repro.models.gnn_basic import sage_init, sage_layered
 from repro.serving import (AdaptiveConfig, AdaptiveController,
-                           CostModelRouter, DeviceExecutor, HostExecutor,
-                           MicroBatcher, ModelRegistry, ServingEngine,
-                           ShardedExecutor, StaticScheduler,
+                           CostModelRouter, DeviceExecutor, FrequencySketch,
+                           HostExecutor, MicroBatcher, ModelRegistry,
+                           ServingEngine, ShardedExecutor, StaticScheduler,
                            build_model_entry, calibrate_executors)
 
 # --models presets: hidden layer widths of the GraphSAGE variant each model
@@ -63,7 +66,8 @@ def make_infer_fn(d_feat: int, hidden: tuple[int, ...],
 
 def build_stack(*, nodes: int, avg_degree: float, d_feat: int,
                 fanouts: tuple[int, ...], hot_frac: float, seed: int = 0,
-                distribution: str = "degree"):
+                distribution: str = "degree",
+                spill_path: str | None = None):
     graph = power_law_graph(nodes, avg_degree, seed=seed)
     rng = np.random.default_rng(seed + 1)
     feats = rng.normal(size=(nodes, d_feat)).astype(np.float32)
@@ -77,7 +81,7 @@ def build_stack(*, nodes: int, avg_degree: float, d_feat: int,
                         rows_host=max(nodes // 2, 64),
                         hot_replicate_fraction=hot_frac)
     plan = quiver_placement(fap, topo)
-    store = TieredFeatureStore.build(feats, plan)
+    store = TieredFeatureStore.build(feats, plan, spill_path=spill_path)
 
     infer_fn = make_infer_fn(d_feat, (128, 128), fanouts, seed)
 
@@ -152,7 +156,30 @@ def build_executors(graph, store, fanouts, infer_fn, psgs, *,
     return executors
 
 
-def _serve_and_report(args, engine, psgs, reqs, controller) -> None:
+def make_prefetcher(args, store, fap, controller, hooks):
+    """``--prefetch`` wiring shared by the single- and multi-model paths:
+    build the cold-tier prefetcher, hand it to the adaptive controller
+    (refresh per control step, shared sketch) or — without ``--adaptive`` —
+    register it as an engine hook with its own sketch and refresh cadence,
+    then stage the offline-FAP prediction before serving starts."""
+    if not args.prefetch:
+        return None
+    pf = Prefetcher(store, budget=args.prefetch_budget,
+                    refresh_every=(None if controller is not None
+                                   else args.adapt_interval))
+    if controller is not None:
+        controller.attach_prefetcher(pf)
+    else:
+        pf.sketch = FrequencySketch(store.plan.tier.shape[0])
+        hooks.append(pf)
+    staged = pf.refresh(scores=fap)
+    print(f"[serve] prefetch: staged {staged} cold rows "
+          f"(budget {args.prefetch_budget})")
+    return pf
+
+
+def _serve_and_report(args, engine, psgs, reqs, controller,
+                      prefetcher=None) -> None:
     """Shared tail of the single- and multi-model launcher paths: warmup,
     the optional micro-batched stream (with ``--adapt-micro`` attachment)
     or pre-formed batches, then the JSON report."""
@@ -178,9 +205,11 @@ def _serve_and_report(args, engine, psgs, reqs, controller) -> None:
     print(json.dumps(metrics.summary(), indent=2))
     if controller is not None:
         print("[serve] adaptation:", json.dumps(controller.report()))
+    if prefetcher is not None:
+        print("[serve] prefetch:", json.dumps(prefetcher.report()))
 
 
-def serve_multi_model(args, fanouts, graph, psgs, store, gen) -> None:
+def serve_multi_model(args, fanouts, graph, psgs, fap, store, gen) -> None:
     """The ``--models`` path: one engine, one shared store, N models.
 
     Per model: its own ``infer_fn`` (preset hidden widths), executor set
@@ -214,11 +243,12 @@ def serve_multi_model(args, fanouts, graph, psgs, store, gen) -> None:
                                   rows_per_step=args.adapt_rows,
                                   drift_threshold=args.drift_threshold))
         hooks.append(controller)
+    prefetcher = make_prefetcher(args, store, fap, controller, hooks)
     engine = ServingEngine(registry, max_inflight=args.max_inflight,
                            admission=args.admission, hooks=hooks)
     reqs = list(gen.stream(args.requests, seeds_per_request=args.batch,
                            models=list(specs)))
-    _serve_and_report(args, engine, psgs, reqs, controller)
+    _serve_and_report(args, engine, psgs, reqs, controller, prefetcher)
 
 
 def main() -> None:
@@ -275,6 +305,20 @@ def main() -> None:
     p.add_argument("--micro-deadline-ms", type=float, default=4.0,
                    help="max milliseconds a request may wait in the "
                         "micro-batching stage")
+    p.add_argument("--prefetch", action="store_true",
+                   help="stage predicted cold-tier (HOST/DISK) rows into a "
+                        "device-side buffer off the critical path; lookups "
+                        "resolve staged ids from device memory and only "
+                        "fall back to the synchronous host callback on a "
+                        "prefetch miss. Refreshed per control step with "
+                        "--adaptive, else every --adapt-interval batches.")
+    p.add_argument("--prefetch-budget", type=int, default=1024,
+                   help="max cold rows staged per prefetch refresh "
+                        "(device staging-buffer size)")
+    p.add_argument("--spill-path", default=None,
+                   help="write DISK-tier rows to an np.memmap spill file at "
+                        "this path (the real cold store); omit to keep them "
+                        "in host memory")
     args = p.parse_args()
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     if args.adapt_micro and not (args.adaptive and args.micro_batch > 0):
@@ -283,16 +327,17 @@ def main() -> None:
 
     graph, feats, psgs, fap, store, gen, infer_fn = build_stack(
         nodes=args.nodes, avg_degree=args.avg_degree, d_feat=args.d_feat,
-        fanouts=fanouts, hot_frac=args.hot_frac)
+        fanouts=fanouts, hot_frac=args.hot_frac, spill_path=args.spill_path)
     print(f"[serve] graph: {graph.num_nodes} nodes / {graph.num_edges} edges;"
-          f" tiers: {store.plan.tier_counts()}")
+          f" tiers: {store.plan.tier_counts()}"
+          + (f"; spill: {args.spill_path}" if args.spill_path else ""))
 
     static_policy = args.policy in ("host_only", "device_only")
     if args.models:
         if static_policy:
             raise SystemExit("--models needs a cost-model policy "
                              "(per-model routing is the point)")
-        serve_multi_model(args, fanouts, graph, psgs, store, gen)
+        serve_multi_model(args, fanouts, graph, psgs, fap, store, gen)
         return
     if args.sharded and static_policy:
         print("[serve] note: static policy can never route to the sharded "
@@ -334,11 +379,12 @@ def main() -> None:
                                   rows_per_step=args.adapt_rows,
                                   drift_threshold=args.drift_threshold))
         hooks.append(controller)
+    prefetcher = make_prefetcher(args, store, fap, controller, hooks)
     engine = ServingEngine(executors, router,
                            max_inflight=args.max_inflight,
                            admission=args.admission, hooks=hooks)
     reqs = list(gen.stream(args.requests, seeds_per_request=args.batch))
-    _serve_and_report(args, engine, psgs, reqs, controller)
+    _serve_and_report(args, engine, psgs, reqs, controller, prefetcher)
 
 
 if __name__ == "__main__":

@@ -18,11 +18,15 @@ the loop, in the spirit of OMEGA's serve-time recomputation
                         bit-identical), (d) refits LatencyCurves from live
                         ``(psgs, latency)`` samples — *per model*, swapping
                         them into that model's CostModelRouter when the
-                        measured drift exceeds a threshold — and (e)
+                        measured drift exceeds a threshold — (e)
                         optionally nudges an attached MicroBatcher's
                         ``deadline_s``/``max_seeds`` toward the measured
                         knee of the live latency curve (micro-batch
-                        auto-tuning, clamped to configured bounds).
+                        auto-tuning, clamped to configured bounds), and (f)
+                        promotes miss-hammered DISK rows and re-stages an
+                        attached Prefetcher's device-side buffer with the
+                        fresh FAP as the prediction score (cold-tier reads
+                        leave the request critical path).
 
 Multi-model serving shares ONE sketch (FAP placement is store-wide — every
 model reads the same feature rows) but keeps latency samples and curve
@@ -121,6 +125,7 @@ class AdaptiveConfig:
     drift_threshold: float = 0.25  # mean relative avg-curve error to swap
     sample_window: int = 512       # live (psgs, latency) samples kept/executor
     fap_truncated: bool = False    # forwarded to compute_fap
+    promote_budget: int = 16       # miss-driven DISK promotions per step
     # micro-batch auto-tuning (active only when a MicroBatcher is attached):
     # per control step, nudge deadline_s/max_seeds a `micro_step` fraction of
     # the way toward the knee of the live latency curve, clamped to bounds
@@ -167,7 +172,8 @@ class AdaptiveController:
 
     def __init__(self, graph, fanouts: Sequence[int], store,
                  router=None, *, psgs_table: Optional[np.ndarray] = None,
-                 config: Optional[AdaptiveConfig] = None, micro=None):
+                 config: Optional[AdaptiveConfig] = None, micro=None,
+                 prefetcher=None):
         self.graph = graph
         self.fanouts = tuple(int(f) for f in fanouts)
         self.store = store
@@ -185,7 +191,11 @@ class AdaptiveController:
         self.samples: dict[tuple[str, str], collections.deque] = {}
         self.stats = {"steps": 0, "migrated_rows": 0, "refits": 0,
                       "batches_seen": 0, "micro_tunings": 0,
+                      "promoted_rows": 0, "prefetch_refreshes": 0,
                       "last_drift": {}}
+        self.prefetcher = None
+        if prefetcher is not None:
+            self.attach_prefetcher(prefetcher)
         self._since_step = 0
         self._psgs_seen = 0.0   # running Σ accumulated PSGS of sampled batches
         self._seeds_seen = 0    # running seed count — per-seed PSGS estimate
@@ -202,6 +212,17 @@ class AdaptiveController:
         ``max_seeds`` the control step may nudge; returns the controller
         for chaining."""
         self.micro = micro
+        return self
+
+    def attach_prefetcher(self, prefetcher) -> "AdaptiveController":
+        """Attach a :class:`~repro.core.prefetch.Prefetcher` the control
+        step re-stages each period (with the freshly recomputed FAP as the
+        prediction score — it covers multi-hop frontier accesses, which the
+        seed sketch alone cannot). The prefetcher is pointed at the
+        controller's shared sketch; returns the controller for chaining."""
+        self.prefetcher = prefetcher
+        if prefetcher is not None:
+            prefetcher.sketch = self.sketch
         return self
 
     # -- engine hook protocol ------------------------------------------------
@@ -273,11 +294,13 @@ class AdaptiveController:
         the recompute.
 
         Returns:
-            ``{"migrated_rows", "refits", "pending", "micro"}`` — rows
-            moved this step, curves swapped, nodes still off their target
-            tier (0 means the placement has converged for this workload),
-            and the micro-batcher bounds after tuning (``None`` when no
-            micro-batcher is attached).
+            ``{"migrated_rows", "refits", "pending", "micro",
+            "promoted_rows", "prefetched"}`` — rows moved this step, curves
+            swapped, nodes still off their target tier (0 means the
+            placement has converged for this workload), the micro-batcher
+            bounds after tuning (``None`` when no micro-batcher is
+            attached), miss-driven DISK rows promoted, and whether a
+            prefetch refresh was kicked off.
         """
         with self._step_lock:
             target, fap = self.target_plan()
@@ -285,14 +308,29 @@ class AdaptiveController:
                                     budget=max(self.config.rows_per_step // 2,
                                                1))
             moved = self.store.swap_assignments(pairs)
+            # miss-driven DISK promotion: rows the workload actually missed
+            # jump the FAP queue (bounded, swap-based — serving never sees
+            # a torn row)
+            promote = getattr(self.store, "promote_misses", None)
+            promoted = (promote(budget=self.config.promote_budget)
+                        if promote is not None else 0)
             refits = self.refit_curves()
             micro = self.tune_micro()
+            prefetched = False
+            if self.prefetcher is not None:
+                # re-stage the cold tiers off the critical path, scored by
+                # the fresh FAP (covers multi-hop frontiers, not just seeds)
+                self.prefetcher.refresh_async(scores=fap)
+                prefetched = True
             self.sketch.decay_step()
             with self._lock:
                 self.stats["steps"] += 1
-                self.stats["migrated_rows"] += moved
+                self.stats["migrated_rows"] += moved + promoted
+                self.stats["promoted_rows"] += promoted
+                self.stats["prefetch_refreshes"] += int(prefetched)
             return {"migrated_rows": moved, "refits": refits,
-                    "micro": micro,
+                    "micro": micro, "promoted_rows": promoted,
+                    "prefetched": prefetched,
                     "pending": int((target.tier != self.store.plan.tier)
                                    .sum())}
 

@@ -9,6 +9,14 @@ import numpy as np
 import pytest
 
 
+def pytest_collection_modifyitems(items):
+    """Subprocess tests pay a fresh interpreter + jax init each — they are
+    the slow tail of the suite, so they ride in the CI `slow` job too."""
+    for item in items:
+        if "subprocess" in item.keywords:
+            item.add_marker(pytest.mark.slow)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

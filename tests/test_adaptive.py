@@ -133,6 +133,7 @@ def test_lookup_equivalence_under_concurrent_migration(migr_stack):
                                rtol=1e-6)
 
 
+@pytest.mark.hypothesis
 def test_migration_property_hypothesis(migr_stack):
     hypothesis = pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st

@@ -339,6 +339,7 @@ def test_metrics_clean_after_failed_run(stack):
 # ---------------------------------------------------------------------------
 # 3-executor integration: host + device + sharded over a CPU mesh
 # ---------------------------------------------------------------------------
+@pytest.mark.subprocess
 def test_three_executor_engine_with_sharded_mesh():
     code = """
 import time

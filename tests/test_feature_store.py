@@ -58,6 +58,7 @@ def test_tier_histogram(store_and_feats):
     assert sum(hist.values()) == 200
 
 
+@pytest.mark.subprocess
 def test_sharded_store_one_sided_reads():
     code = """
 import numpy as np, jax, jax.numpy as jnp

@@ -248,6 +248,7 @@ def test_micro_batcher_single_batch_not_counted_coalesced():
     assert mb.emitted == 1 and mb.coalesced == 0
 
 
+@pytest.mark.subprocess
 def test_sharded_lookup_hops_matches_per_hop():
     """ShardedFeatureStore.lookup_hops (one shard_map exchange for the whole
     sample) must return the same rows as per-hop lookups, regardless of how

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")
+pytestmark = pytest.mark.hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.graph import (CSRGraph, fixed_size_unique, grid_mesh_graph,

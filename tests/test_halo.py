@@ -26,6 +26,7 @@ def test_partition_edges_by_dst_alignment():
     assert 0.0 <= remote_fraction(src, dst, n, shards) <= 1.0
 
 
+@pytest.mark.subprocess
 def test_halo_gather_exact_8_shards():
     code = """
 import numpy as np, jax, jax.numpy as jnp
@@ -52,6 +53,7 @@ print("HALO_OK")
     assert "HALO_OK" in r.stdout, r.stderr[-2000:]
 
 
+@pytest.mark.subprocess
 def test_gin_halo_loss_matches_global():
     """The shard_map GIN loss (dst-aligned edges + halo gathers) equals the
     single-device global loss bit-for-bit-ish."""
@@ -94,6 +96,7 @@ print("GIN_HALO_OK", out, ref)
     assert "GIN_HALO_OK" in r.stdout, r.stderr[-2500:]
 
 
+@pytest.mark.subprocess
 def test_equiformer_halo_loss_matches_global():
     code = """
 import numpy as np, jax, jax.numpy as jnp

@@ -3,6 +3,7 @@ hypothesis invariants."""
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")
+pytestmark = pytest.mark.hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (batch_psgs, compute_fap, compute_psgs,

@@ -6,6 +6,7 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import (HybridScheduler, ServingEngine, StaticScheduler,
                         TieredFeatureStore, TopologySpec, compute_fap,
@@ -87,6 +88,7 @@ def test_scheduler_threshold_infinity_routes_host():
 # ---------------------------------------------------------------------------
 # Deprecation shims (satellite): import-time warning exactly once + re-exports
 # ---------------------------------------------------------------------------
+@pytest.mark.subprocess
 def test_shim_imports_warn_exactly_once_and_reexport():
     """Importing repro.core.{pipeline,scheduler} must emit ONE
     DeprecationWarning each (re-imports hit the sys.modules cache) while a

@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")
+pytestmark = pytest.mark.hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (TopologySpec, degree_placement, expert_placement,

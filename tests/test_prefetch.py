@@ -1,0 +1,482 @@
+"""Real memory hierarchy (PR 5): the mmap-backed DISK spill tier and the
+sketch-driven prefetcher, proven correct by tier equivalence — staged
+lookups bit-identical to unstaged ones (and to the raw features), hit/miss
+accounting, miss-driven promotion, the pinned dispatch-counter schema, and
+snapshot consistency under prefetch refresh racing live migration."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DiskSpillTier, Prefetcher, Request,
+                        TieredFeatureStore, TopologySpec, compute_fap,
+                        compute_psgs, migration_pairs, quiver_placement)
+from repro.core.placement import TIER_DISK, TIER_HOST, TIER_HOT, TIER_WARM
+from repro.graph import power_law_graph
+from repro.models.gnn_basic import sage_init, sage_layered
+from repro.serving import (AdaptiveConfig, AdaptiveController, HostExecutor,
+                           ServingEngine, StaticScheduler)
+
+# The pinned dispatch-stats schema: ServeMetrics.summary()["store"] relies
+# on these exact counters (benchmarks/prefetch.py + fused_gather.py read
+# them) — extending the schema must update this set AND _new_stats().
+STATS_SCHEMA = {"lookup_calls", "fused_calls", "device_gathers",
+                "host_fetches", "disk_misses", "spill_reads",
+                "prefetch_hits", "prefetch_misses"}
+
+
+# ---------------------------------------------------------------------------
+# Fixtures (the test_fused_gather sweep harness, spill-backed)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stack():
+    n, d, fan = 900, 12, (4, 3)
+    g = power_law_graph(n, 6.0, seed=0)
+    feats = np.random.default_rng(1).normal(size=(n, d)).astype(np.float32)
+    fap = compute_fap(g, fan)
+    topo = TopologySpec(num_pods=1, devices_per_pod=1, rows_per_device=220,
+                        rows_host=330, hot_replicate_fraction=0.3)
+    return g, fan, feats, fap, topo
+
+
+def _fresh_store(stack, spill_path=None):
+    g, fan, feats, fap, topo = stack
+    return TieredFeatureStore.build(feats, quiver_placement(fap, topo),
+                                    spill_path=spill_path)
+
+
+def _rand_hops(n, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(-1, n, size=s).astype(np.int32) for s in sizes]
+
+
+def _stage_all_cold(store, n, budget=None):
+    """Stage every cold-tier row (uniform scores) and return the prefetcher."""
+    pf = Prefetcher(store, budget=budget or n)
+    pf.refresh(scores=np.ones(n))
+    return pf
+
+
+# ---------------------------------------------------------------------------
+# DISK spill tier: the mmap file is real and bit-identical
+# ---------------------------------------------------------------------------
+def test_spill_file_written_and_rows_bit_identical(stack, tmp_path):
+    g, fan, feats, fap, topo = stack
+    path = str(tmp_path / "feat.spill")
+    store = _fresh_store(stack, spill_path=path)
+    plan = store.plan
+    disk_ids = np.flatnonzero(plan.tier == TIER_DISK)
+    assert disk_ids.size > 0
+    # the spill file itself holds the real rows (not zeros)
+    mm = np.memmap(path, dtype=feats.dtype, mode="r",
+                   shape=(disk_ids.size, feats.shape[1]))
+    assert np.array_equal(np.asarray(mm)[plan.slot[disk_ids]],
+                          feats[disk_ids])
+    # and lookups through the store return them bit for bit
+    out = np.asarray(store.lookup(jnp.asarray(disk_ids, jnp.int32)))
+    assert np.array_equal(out, feats[disk_ids])
+    assert store.disk.path == path
+
+
+def test_disk_spill_tier_copy_on_write_overlay(tmp_path):
+    rows = np.arange(12, dtype=np.float32).reshape(4, 3)
+    tier = DiskSpillTier.build(rows, str(tmp_path / "t.spill"))
+    assert np.array_equal(tier[np.array([2, 0])], rows[[2, 0]])
+    clone = tier.copy()
+    clone[np.array([1])] = np.full((1, 3), 9.0, np.float32)
+    # the original (an in-flight snapshot) is untouched; the file too
+    assert np.array_equal(tier[1], rows[1])
+    assert np.array_equal(clone[1], np.full(3, 9.0))
+    assert clone.overlay_rows == 1 and tier.overlay_rows == 0
+    assert np.array_equal(np.asarray(tier), rows)
+    got = np.asarray(clone)
+    assert np.array_equal(got[1], np.full(3, 9.0))
+    assert np.array_equal(got[[0, 2, 3]], rows[[0, 2, 3]])
+
+
+def test_disk_spill_tier_compaction_bounds_overlay(tmp_path):
+    rows = np.arange(40, dtype=np.float32).reshape(10, 4)
+    tier = DiskSpillTier.build(rows, str(tmp_path / "c.spill"))
+    snap = tier.copy()                       # an in-flight snapshot
+    tier[np.array([1, 3])] = np.stack([np.full(4, 7.0), np.full(4, 8.0)])
+    compacted = tier.compact()
+    # merged rows live in a fresh generation file; overlay is gone
+    assert compacted.overlay_rows == 0
+    assert compacted.path.endswith(".g1") and compacted.path != tier.path
+    want = rows.copy()
+    want[1], want[3] = 7.0, 8.0
+    assert np.array_equal(np.asarray(compacted), want)
+    # the old snapshot still reads the ORIGINAL rows (file unlinked but
+    # kept alive by its mapping — POSIX semantics)
+    assert np.array_equal(np.asarray(snap), rows)
+    # resident accounting: spill-backed tiers count only the overlay
+    assert compacted.resident_nbytes == 0
+    assert tier.resident_nbytes == 2 * 4 * 4
+    assert DiskSpillTier.build(rows, None).resident_nbytes == rows.nbytes
+
+
+def test_swap_assignments_auto_compacts_spill_overlay(stack, tmp_path):
+    """Demotion churn must not grow the spill overlay without bound: once
+    it exceeds len//8 the migration publish path folds it into a fresh
+    spill-file generation (lookups stay exact throughout)."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack, spill_path=str(tmp_path / "churn.spill"))
+    tier = np.asarray(store.tier_t)
+    disk_ids = np.flatnonzero(tier == TIER_DISK)
+    host_ids = np.flatnonzero(tier == TIER_HOST)
+    limit = max(64, len(store.disk) // 8)
+    swaps = min(limit + 8, disk_ids.size, host_ids.size)
+    for lo in range(0, swaps, 16):   # bounded steps, like the controller
+        pairs = list(zip(host_ids[lo:lo + 16].tolist(),
+                         disk_ids[lo:lo + 16].tolist()))
+        store.swap_assignments(pairs)
+    assert store.disk.overlay_rows <= limit   # compaction kicked in
+    assert store.disk.path.endswith(".g1")
+    ids = jnp.asarray(np.arange(g.num_nodes), jnp.int32)
+    assert np.array_equal(np.asarray(store.lookup(ids)), feats)
+
+
+def test_standalone_prefetcher_decays_owned_sketch(stack):
+    """Regression: without decay the standalone sketch freezes on the
+    all-time hot set and periodic refreshes re-stage stale predictions."""
+    from repro.serving import FrequencySketch
+
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    pf = Prefetcher(store, FrequencySketch(g.num_nodes, decay=0.5),
+                    budget=4, refresh_every=2)
+    pf.sketch.observe(np.array([3, 3]))
+    for _ in range(2):
+        pf.on_batch_complete("host", np.array([0]), 1e-3)
+    assert pf.sketch.counts[3] == pytest.approx(1.0)  # decayed once
+    pf.close()
+
+
+# ---------------------------------------------------------------------------
+# Tier equivalence: prefetch on vs off, per-hop and fused
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sizes", [(16,), (16, 64), (16, 64, 192), (1, 1)])
+def test_lookup_bit_identical_prefetch_on_vs_off(stack, tmp_path, sizes):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack, spill_path=str(tmp_path / "s.spill"))
+    hops = _rand_hops(g.num_nodes, sizes, seed=sum(sizes))
+    plain = [np.asarray(store.lookup(jnp.asarray(h))) for h in hops]
+    plain_fused = [np.asarray(o) for o in store.lookup_hops(hops)]
+    _stage_all_cold(store, g.num_nodes)
+    staged = [np.asarray(store.lookup(jnp.asarray(h))) for h in hops]
+    staged_fused = [np.asarray(o) for o in store.lookup_hops(hops)]
+    for a, b, c, d_ in zip(plain, staged, plain_fused, staged_fused):
+        assert np.array_equal(a, b)   # bit-identical, not close
+        assert np.array_equal(c, d_)
+        assert np.array_equal(a, c)
+
+
+def test_partial_stage_falls_back_bit_identical(stack, tmp_path):
+    """A stage covering only SOME cold rows must mix device-staged rows and
+    host-callback rows without changing a single bit."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack, spill_path=str(tmp_path / "p.spill"))
+    cold = np.flatnonzero(plan_tier := np.asarray(store.tier_t) >= TIER_HOST)
+    scores = np.zeros(g.num_nodes)
+    scores[cold[::2]] = 1.0   # stage every other cold node
+    Prefetcher(store, budget=g.num_nodes).refresh(scores=scores)
+    ids = _rand_hops(g.num_nodes, (256,), seed=5)[0]
+    out = np.asarray(store.lookup(jnp.asarray(ids)))
+    exp = np.where((ids >= 0)[:, None], feats[np.maximum(ids, 0)], 0.0)
+    assert np.array_equal(out, exp)
+    stats = store.reset_stats()
+    assert stats["prefetch_hits"] > 0 and stats["prefetch_misses"] > 0
+    assert stats["host_fetches"] > 0   # the fallback really was exercised
+
+
+def test_include_host_false_ignores_stage(stack):
+    """Device-only probes must stay zeros for cold tiers even when staged —
+    otherwise the two paths diverge."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    ids = _rand_hops(g.num_nodes, (128,), seed=3)[0]
+    want = np.asarray(store.lookup(jnp.asarray(ids), include_host=False))
+    _stage_all_cold(store, g.num_nodes)
+    got = np.asarray(store.lookup(jnp.asarray(ids), include_host=False))
+    assert np.array_equal(want, got)
+
+
+# ---------------------------------------------------------------------------
+# Accounting: staged hits, fallback misses, disk misses, spill reads
+# ---------------------------------------------------------------------------
+def test_stage_hit_miss_accounting_exact(stack):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    tier = np.asarray(store.tier_t)
+    hot_id = int(np.flatnonzero(tier == TIER_HOT)[0])
+    host_ids = np.flatnonzero(tier == TIER_HOST)[:4]
+    disk_ids = np.flatnonzero(tier == TIER_DISK)[:4]
+    # stage exactly two host rows and one disk row
+    scores = np.zeros(g.num_nodes)
+    scores[host_ids[:2]] = 1.0
+    scores[disk_ids[:1]] = 1.0
+    Prefetcher(store, budget=8).refresh(scores=scores)
+    store.reset_stats()
+    ids = np.concatenate([[hot_id], host_ids, disk_ids, [-1]])
+    out = np.asarray(store.lookup(jnp.asarray(ids, jnp.int32)))
+    exp = np.where((ids >= 0)[:, None], feats[np.maximum(ids, 0)], 0.0)
+    assert np.array_equal(out, exp)
+    stats = store.reset_stats()
+    assert stats["prefetch_hits"] == 3        # 2 host + 1 disk staged
+    assert stats["prefetch_misses"] == 5      # 2 host + 3 disk fell back
+    assert stats["disk_misses"] == 3          # the unstaged disk rows
+    assert stats["spill_reads"] == 3          # critical-path spill reads
+    assert stats["host_fetches"] == 1         # one fallback callback
+
+
+def test_full_stage_skips_host_callback(stack):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    _stage_all_cold(store, g.num_nodes)
+    store.reset_stats()
+    hops = _rand_hops(g.num_nodes, (64, 128), seed=9)
+    store.lookup_hops(hops)
+    stats = store.reset_stats()
+    assert stats["host_fetches"] == 0         # zero critical-path callbacks
+    assert stats["prefetch_misses"] == 0
+    assert stats["prefetch_hits"] > 0
+    assert stats["disk_misses"] == 0
+
+
+def test_counter_schema_pinned(stack):
+    store = _fresh_store(stack)
+    assert set(store.reset_stats()) == STATS_SCHEMA
+
+
+def test_serve_metrics_summary_reports_counters(stack):
+    """Regression (satellite): the engine's summary must expose the DISK
+    and prefetch counters as distinct fields under the store snapshot."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    psgs = compute_psgs(g, fan)
+    params = sage_init(jax.random.key(0), [feats.shape[1], 16, 16])
+
+    @jax.jit
+    def infer_fn(hop_feats, hop_ids):
+        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
+        return sage_layered(params, hop_feats, fan, hop_masks=masks)
+
+    host = HostExecutor(g, store, fan, infer_fn, psgs_table=psgs)
+    engine = ServingEngine({"host": host}, StaticScheduler("host"))
+    store.reset_stats()
+    cold = np.argsort(fap)[:8]
+    m = engine.run([[Request(0, cold.copy(), time.perf_counter())]])
+    got = m.summary()["store"]["TieredFeatureStore"]
+    assert set(got) == STATS_SCHEMA
+    assert got["fused_calls"] >= 1
+    engine.close()
+
+
+# ---------------------------------------------------------------------------
+# Miss-driven promotion
+# ---------------------------------------------------------------------------
+def test_promote_misses_moves_hammered_disk_rows(stack, tmp_path):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack, spill_path=str(tmp_path / "m.spill"))
+    tier = np.asarray(store.tier_t)
+    hammered = np.flatnonzero(tier == TIER_DISK)[:6]
+    counts_before = store.plan.tier_counts()
+    for _ in range(3):
+        store.lookup(jnp.asarray(hammered, jnp.int32))
+    moved = store.promote_misses(budget=6)
+    assert moved == 12 and store.promoted_rows == 12
+    assert (np.asarray(store.tier_t)[hammered] == TIER_HOST).all()
+    assert store.plan.tier_counts() == counts_before  # swap preserves counts
+    store.plan.validate()
+    # counts were consumed: a second promote with no new misses is a no-op
+    assert store.promote_misses(budget=6) == 0
+    # lookup equivalence: every row still resolves to its exact features
+    ids = jnp.asarray(np.arange(g.num_nodes), jnp.int32)
+    assert np.array_equal(np.asarray(store.lookup(ids)), feats)
+
+
+def test_promote_misses_without_traffic_is_noop(stack):
+    store = _fresh_store(stack)
+    assert store.promote_misses(budget=8) == 0
+
+
+def test_controller_step_promotes_and_refreshes(stack):
+    """AdaptiveController integration: each control step promotes missed
+    DISK rows and re-stages the prefetcher with the fresh FAP."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    pf = Prefetcher(store, budget=g.num_nodes)
+    ctl = AdaptiveController(
+        g, fan, store, prefetcher=pf,
+        config=AdaptiveConfig(rows_per_step=2, promote_budget=8))
+    assert pf.sketch is ctl.sketch           # shared sketch
+    disk_ids = np.flatnonzero(np.asarray(store.tier_t) == TIER_DISK)[:4]
+    for _ in range(2):
+        store.lookup(jnp.asarray(disk_ids, jnp.int32))
+    ctl.on_admit("host", disk_ids)
+    r = ctl.step()
+    # the FAP migration step (budget 1 pair) may grab one hammered node
+    # first; the remaining ≥3 are promoted by the miss-driven pass
+    assert r["promoted_rows"] >= 6 and r["prefetched"]
+    assert ctl.stats["promoted_rows"] == r["promoted_rows"]
+    assert ctl.stats["prefetch_refreshes"] == 1
+    # the async refresh eventually publishes a stage
+    deadline = time.time() + 30
+    while store.staged_rows() == 0 and time.time() < deadline:
+        time.sleep(0.01)
+    assert store.staged_rows() > 0
+    pf.close()
+    assert store.staged_rows() == 0          # close clears the stage
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher unit behavior
+# ---------------------------------------------------------------------------
+def test_predict_cold_only_budget_and_zero_scores(stack):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    tier = np.asarray(store.tier_t)
+    pf = Prefetcher(store, budget=5)
+    ids = pf.predict(scores=np.ones(g.num_nodes))
+    assert ids.size == 5 and (tier[ids] >= TIER_HOST).all()
+    assert pf.predict(scores=np.zeros(g.num_nodes)).size == 0  # cold start
+    with pytest.raises(ValueError, match="scores or a sketch"):
+        pf.predict()
+    with pytest.raises(ValueError, match="budget"):
+        Prefetcher(store, budget=0)
+
+
+def test_prefetcher_standalone_engine_hook(stack):
+    """Standalone mode: as an engine hook the prefetcher feeds its own
+    sketch and refreshes every ``refresh_every`` completed batches."""
+    from repro.serving import FrequencySketch
+
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    psgs = compute_psgs(g, fan)
+    params = sage_init(jax.random.key(0), [feats.shape[1], 16, 16])
+
+    @jax.jit
+    def infer_fn(hop_feats, hop_ids):
+        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
+        return sage_layered(params, hop_feats, fan, hop_masks=masks)
+
+    host = HostExecutor(g, store, fan, infer_fn, psgs_table=psgs)
+    pf = Prefetcher(store, FrequencySketch(g.num_nodes), budget=64,
+                    refresh_every=3)
+    engine = ServingEngine({"host": host}, StaticScheduler("host"),
+                           hooks=[pf])
+    cold = np.argsort(fap)[:8]
+    m = engine.run([[Request(i, cold.copy(), time.perf_counter())]
+                    for i in range(9)])
+    assert m.requests == 9
+    deadline = time.time() + 30
+    while pf.report()["refreshes"] == 0 and time.time() < deadline:
+        time.sleep(0.01)
+    rep = pf.report()
+    assert rep["batches_seen"] == 9 and rep["refreshes"] >= 1
+    assert pf.sketch.total_observed == 9 * 8
+    engine.close()
+    pf.close()
+
+
+# ---------------------------------------------------------------------------
+# Property: promotion + prefetch never change lookup results (hypothesis)
+# ---------------------------------------------------------------------------
+@pytest.mark.hypothesis
+def test_promotion_prefetch_lookup_invariance_property(stack):
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    g, fan, feats, fap, topo = stack
+    n = g.num_nodes
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.lists(st.integers(-1, n - 1), min_size=1, max_size=60),
+           st.lists(st.integers(0, n - 1), min_size=0, max_size=30,
+                    unique=True),
+           st.integers(0, 12))
+    def prop(id_mix, staged_ids, promote_budget):
+        store = _fresh_store(stack)
+        # arbitrary staged subset (cold-filtered by predict), arbitrary
+        # miss traffic, arbitrary promotion budget — results never change
+        scores = np.zeros(n)
+        scores[np.asarray(staged_ids, dtype=np.int64)] = 1.0
+        Prefetcher(store, budget=n).refresh(scores=scores)
+        ids = np.asarray(id_mix, dtype=np.int32)
+        exp = np.where((ids >= 0)[:, None], feats[np.maximum(ids, 0)], 0.0)
+        assert np.array_equal(np.asarray(store.lookup(jnp.asarray(ids))),
+                              exp)
+        store.promote_misses(budget=promote_budget)
+        assert np.array_equal(np.asarray(store.lookup(jnp.asarray(ids))),
+                              exp)
+        hops = [ids, np.asarray(staged_ids or [-1], np.int32)]
+        got = store.lookup_hops(hops)
+        assert np.array_equal(np.asarray(got[0]), exp)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Concurrency stress: refresh × migration × fused lookups (satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_prefetch_refresh_racing_migration_and_lookups(stack, tmp_path):
+    """Extension of the tests/test_adaptive.py concurrent-migration harness:
+    one thread runs fused lookups, one re-publishes the staging buffer with
+    random score vectors, while the main thread migrates rows AND promotes
+    misses on the same store — every observed row must stay exact."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack, spill_path=str(tmp_path / "race.spill"))
+    rng = np.random.default_rng(7)
+    hops = [rng.integers(0, g.num_nodes, 16).astype(np.int32),
+            rng.integers(0, g.num_nodes, 48).astype(np.int32)]
+    expected = [feats[h] for h in hops]
+    stop = threading.Event()
+    errors: list[str] = []
+    pf = Prefetcher(store, budget=g.num_nodes)
+
+    def reader():
+        while not stop.is_set():
+            got = store.lookup_hops(hops)
+            for e, o in zip(expected, got):
+                if not np.array_equal(np.asarray(o), e):
+                    errors.append("torn staged lookup during migration")
+                    return
+
+    def refresher():
+        rrng = np.random.default_rng(13)
+        while not stop.is_set():
+            scores = rrng.random(g.num_nodes)
+            scores[scores < 0.5] = 0.0   # vary the staged subset
+            try:
+                pf.refresh(scores=scores)
+            except BaseException as exc:  # surface, don't hang the test
+                errors.append(f"refresh raised: {exc!r}")
+                return
+
+    threads = [threading.Thread(target=reader),
+               threading.Thread(target=refresher)]
+    for t in threads:
+        t.start()
+    try:
+        drifted = fap.copy()
+        drifted[np.argsort(fap)[:80]] += fap.max() * 3
+        tgt = quiver_placement(drifted, topo)
+        for _ in range(10):
+            pairs = migration_pairs(store.plan.tier, tgt.tier, drifted,
+                                    budget=20)
+            if pairs:
+                store.swap_assignments(pairs)
+            store.promote_misses(budget=4)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+    assert not errors, errors
+    for e, o in zip(expected, store.lookup_hops(hops)):
+        assert np.array_equal(np.asarray(o), e)
+    pf.close()

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")
+pytestmark = pytest.mark.hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.training import (AdamW, CheckpointManager, compress_int8,
@@ -112,6 +113,7 @@ def test_resume_mid_run(tmp_path):
                                np.asarray(ref.params["w"]), rtol=1e-5)
 
 
+@pytest.mark.subprocess
 def test_elastic_restore_resharding():
     """Checkpoint written single-device restores onto an 8-device mesh."""
     code = """
@@ -158,6 +160,7 @@ def test_int8_error_feedback_unbiased_over_time():
     assert rel < 1e-3
 
 
+@pytest.mark.subprocess
 def test_data_parallel_train_step_multidevice():
     """pjit train step on an 8-device mesh: loss matches single-device."""
     code = """

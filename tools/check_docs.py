@@ -32,7 +32,10 @@ API = {
                                       "FrequencySketch"],
     "src/repro/core/feature_store.py": [
         "TieredFeatureStore.lookup", "TieredFeatureStore.lookup_hops",
-        "TieredFeatureStore.swap_assignments"],
+        "TieredFeatureStore.swap_assignments",
+        "TieredFeatureStore.publish_stage",
+        "TieredFeatureStore.promote_misses", "DiskSpillTier"],
+    "src/repro/core/prefetch.py": ["Prefetcher"],
 }
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
