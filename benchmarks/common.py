@@ -1,6 +1,8 @@
 """Shared benchmark harness utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -20,6 +22,28 @@ ROWS: list[tuple] = []
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def write_bench_json(name: str, payload: dict, out_dir: str | None = None
+                     ) -> str:
+    """Write a machine-readable benchmark result to ``BENCH_<name>.json``
+    (throughput, latency percentiles, host callbacks per request, ...) so
+    the perf trajectory is trackable across PRs. ``out_dir`` defaults to
+    ``$BENCH_JSON_DIR`` or the current directory; returns the path."""
+    out_dir = out_dir or os.environ.get("BENCH_JSON_DIR", ".")
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def latency_percentiles(metrics) -> dict:
+    """p50/p95/p99 (ms) from a ServeMetrics' raw latency samples — the
+    summary() block reports p50/p99 only, benchmarks also track p95."""
+    lat = np.asarray(metrics.latencies if metrics.latencies else [0.0])
+    return {f"p{int(q * 100)}_ms": float(np.quantile(lat, q) * 1e3)
+            for q in (0.5, 0.95, 0.99)}
 
 
 def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:

@@ -37,7 +37,9 @@ if __package__ in (None, ""):  # direct `python benchmarks/prefetch.py`
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import build_serving_stack, emit, make_engine
+from benchmarks.common import (build_serving_stack, emit,
+                               latency_percentiles, make_engine,
+                               write_bench_json)
 from repro.core import (Prefetcher, TieredFeatureStore, TopologySpec,
                         quiver_placement)
 from repro.core.placement import TIER_HOST
@@ -116,6 +118,7 @@ def run(dry_run: bool = False) -> dict:
                 "disk_miss_per_req": stats["disk_misses"] / n_req,
                 "prefetch_hits": stats["prefetch_hits"],
                 "prefetch_misses": stats["prefetch_misses"],
+                **latency_percentiles(m),
             }
             emit(f"prefetch/{mode}_host_cb_per_req",
                  results[mode]["host_cb_per_req"],
@@ -131,6 +134,7 @@ def run(dry_run: bool = False) -> dict:
         # the acceptance signal: staging strictly removes critical-path
         # host callbacks on the skewed workload
         assert on["host_cb_per_req"] < off["host_cb_per_req"], results
+        write_bench_json("prefetch", {"dry_run": dry_run, "modes": results})
         return results
     finally:
         os.unlink(spill.name)

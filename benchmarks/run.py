@@ -1,12 +1,15 @@
 """Benchmark runner — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json-out PATH]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json-out`` additionally
+writes every emitted row (plus pass/fail per module) as JSON so the perf
+trajectory is machine-trackable across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -21,6 +24,7 @@ MODULES = [
     "serve_throughput",    # Fig. 9
     "fused_gather",        # fused feature-collection hot path
     "prefetch",            # cold-tier staging vs critical-path callbacks
+    "flash_crowd",         # device cache vs adaptive-only under drift
     "multi_model",         # shared-store registry vs isolated engines
     "policy_cdf",          # Fig. 10
     "workload_drift",      # online adaptation vs frozen placement
@@ -32,20 +36,34 @@ MODULES = [
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None)
+    p.add_argument("--json-out", default=None, metavar="PATH",
+                   help="also write every emitted row + per-module status "
+                        "as JSON to PATH")
     args = p.parse_args()
     mods = [args.only] if args.only else MODULES
     print("name,us_per_call,derived")
     failures = 0
+    status: dict[str, str] = {}
     for name in mods:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             mod.run()
+            status[name] = "ok"
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:
             failures += 1
+            status[name] = "failed"
             print(f"# {name} FAILED:\n{traceback.format_exc()}",
                   file=sys.stderr)
+    if args.json_out:
+        from benchmarks.common import ROWS
+        with open(args.json_out, "w") as f:
+            json.dump({"modules": status,
+                       "rows": [{"name": n, "value": v, "derived": d}
+                                for n, v, d in ROWS]}, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json_out} ({len(ROWS)} rows)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -13,6 +13,7 @@ construction signature, resolved lazily below) emits the
 from repro.core.fap import compute_fap, monte_carlo_fap
 from repro.core.feature_store import (DiskSpillTier, ShardedFeatureStore,
                                       TieredFeatureStore)
+from repro.core.gpu_cache import GPUFeatureCache
 from repro.core.prefetch import Prefetcher
 from repro.core.placement import (PlacementPlan, TopologySpec,
                                   degree_placement, expert_placement,
@@ -34,7 +35,7 @@ __all__ = [
     "monte_carlo_fap", "TopologySpec", "PlacementPlan", "quiver_placement",
     "hash_placement", "degree_placement", "freq_placement", "p3_placement",
     "expert_placement", "migration_pairs", "TieredFeatureStore",
-    "ShardedFeatureStore", "DiskSpillTier", "Prefetcher",
+    "ShardedFeatureStore", "DiskSpillTier", "GPUFeatureCache", "Prefetcher",
     "LatencyCurve", "CalibrationResult", "calibrate", "calibrate_executors",
     "CostModelRouter", "HybridScheduler",
     "StaticScheduler", "Request", "WorkloadGenerator", "DynamicBatcher",

@@ -85,11 +85,20 @@ def _new_stats() -> dict[str, int]:
                                    staging buffer (no host round-trip)
       prefetch_misses              cold rows that fell back to the host
                                    callback while a stage was published
+      cache_hits                   cold rows served straight from the
+                                   attached device cache (tier dispatch
+                                   skipped entirely)
+      cache_misses                 cold rows that missed the device cache
+                                   and flowed through the tier path (then
+                                   admitted on return)
+      cache_evictions              resident cache rows displaced by those
+                                   admissions
     """
     return {"lookup_calls": 0, "fused_calls": 0,
             "device_gathers": 0, "host_fetches": 0,
             "disk_misses": 0, "spill_reads": 0,
-            "prefetch_hits": 0, "prefetch_misses": 0}
+            "prefetch_hits": 0, "prefetch_misses": 0,
+            "cache_hits": 0, "cache_misses": 0, "cache_evictions": 0}
 
 
 class DiskSpillTier:
@@ -266,6 +275,10 @@ class TieredFeatureStore:
     _disk_miss_counts: Optional[np.ndarray] = dataclasses.field(
         default=None, repr=False, compare=False)
     promoted_rows: int = 0    # lifetime count of miss-driven DISK promotions
+    # Optional request-granularity device cache in front of the cold tiers
+    # (GPUFeatureCache): queried before tier dispatch, admitted on return.
+    cache: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                compare=False)
 
     @staticmethod
     def build(features: np.ndarray, plan: PlacementPlan, *,
@@ -352,6 +365,25 @@ class TieredFeatureStore:
             prev, self.stats = self.stats, _new_stats()
         return prev
 
+    def snapshot_stats(self) -> dict[str, int]:
+        """Copy of the dispatch counters WITHOUT resetting them (the
+        adaptive controller reads per-interval deltas from this, so it
+        must not race benchmark-owned :meth:`reset_stats` windows)."""
+        with self._stats_lock:
+            return dict(self.stats)
+
+    def attach_cache(self, cache) -> "TieredFeatureStore":
+        """Attach (``None`` detaches) a request-granularity device cache
+        (:class:`~repro.core.gpu_cache.GPUFeatureCache`) in front of the
+        cold tiers: lookups probe it for HOST/DISK ids before tier
+        dispatch, serve hits from device memory, and admit misses on
+        return. Detaching never changes lookup results — cached rows are
+        copies of the exact feature values. Returns the store for
+        chaining."""
+        with self._mig_lock:
+            self.cache = cache
+        return self
+
     def lookup(self, ids: jnp.ndarray, *, include_host: bool = True,
                dedup: bool = True) -> jnp.ndarray:
         """Gather feature rows for one id vector.
@@ -371,15 +403,16 @@ class TieredFeatureStore:
             :meth:`swap_assignments`).
         """
         snap = self._snapshot()
-        self._count(lookup_calls=1, device_gathers=2)
+        self._count(lookup_calls=1)
         if dedup:
             uniq, inv = fixed_size_unique(jnp.asarray(ids, jnp.int32),
                                           int(ids.shape[0]))
-            rows = self._lookup_unique(uniq, include_host, snap)
+            rows = self._cached_unique(uniq, include_host, snap, None,
+                                       fused=False)
             out = rows[inv]
             return jnp.where((jnp.asarray(ids) >= 0)[:, None], out, 0.0)
-        rows = self._lookup_unique(jnp.asarray(ids, jnp.int32), include_host,
-                                   snap)
+        rows = self._cached_unique(jnp.asarray(ids, jnp.int32), include_host,
+                                   snap, None, fused=False)
         return jnp.where((jnp.asarray(ids) >= 0)[:, None], rows, 0.0)
 
     def lookup_hops(self, hops, *, include_host: bool = True,
@@ -419,14 +452,67 @@ class TieredFeatureStore:
         if total == 0:
             raise ValueError("lookup_hops needs at least one non-empty hop")
         snap = self._snapshot()
-        self._count(fused_calls=1, device_gathers=1)
+        self._count(fused_calls=1)
         ids = hops_j[0] if len(hops_j) == 1 else jnp.concatenate(hops_j)
         uniq, inv = fixed_size_unique(ids, total)
-        rows = self._fused_unique(uniq, include_host, snap, use_pallas)
+        rows = self._cached_unique(uniq, include_host, snap, use_pallas,
+                                   fused=True)
         out = jnp.where((ids >= 0)[:, None], rows[inv], 0.0)
         offs = np.concatenate([[0], np.cumsum(sizes)])
         return [out[int(offs[k]):int(offs[k + 1])]
                 for k in range(len(sizes))]
+
+    def _cached_unique(self, uniq: jnp.ndarray, include_host: bool,
+                       snap: tuple, use_pallas: Optional[bool], *,
+                       fused: bool) -> jnp.ndarray:
+        """Route one (deduplicated) id vector through the optional device
+        cache, then the tier dispatch for whatever remains.
+
+        Cold-tier (HOST/DISK) ids probe the cache first; hits are blanked
+        to ``-1`` in the tier path's id vector, so they never touch the
+        tier gather or the host callback. Missed rows flow through the
+        normal fused/per-hop pipeline and are admitted into the cache on
+        return. When EVERY valid id is a cold cache hit the tier gather is
+        skipped entirely — ``device_gathers`` is counted here, at the
+        dispatch site, so that fast path is visible in the stats (the
+        uncached counts are unchanged: 1 per fused call, 2 per plain
+        lookup). ``include_host=False`` bypasses the cache: device-only
+        probes must keep returning zeros for cold tiers.
+
+        Bit-identity: cached rows are copies of the same feature values
+        and migration moves rows with their nodes, so mixing cache hits
+        with tier-path rows can never change a lookup result.
+        """
+        gathers = 1 if fused else 2
+        tier_path = (partial(self._fused_unique, use_pallas=use_pallas)
+                     if fused else self._lookup_unique)
+        cache = self.cache
+        if cache is None or not include_host:
+            self._count(device_gathers=gathers)
+            return tier_path(uniq, include_host, snap)
+        uniq_np = np.asarray(uniq)
+        tier_np = np.asarray(snap[4][jnp.maximum(jnp.asarray(uniq), 0)])
+        cold = (uniq_np >= 0) & (tier_np >= TIER_HOST)
+        if not cold.any():
+            self._count(device_gathers=gathers)
+            return tier_path(uniq, include_host, snap)
+        values, miss_index, miss_ids = cache.query(
+            np.where(cold, uniq_np, -1))
+        hit = cold.copy()
+        hit[miss_index] = False
+        self._count(cache_hits=int(hit.sum()),
+                    cache_misses=int(miss_index.size))
+        if not ((uniq_np >= 0) & ~hit).any():
+            return values        # every valid id was a cold cache hit
+        uniq_eff = jnp.where(jnp.asarray(hit), jnp.int32(-1),
+                             jnp.asarray(uniq, jnp.int32))
+        self._count(device_gathers=gathers)
+        rows = tier_path(uniq_eff, include_host, snap)
+        out = jnp.where(jnp.asarray(hit)[:, None], values, rows)
+        if miss_index.size:
+            evicted = cache.replace(miss_ids, out[jnp.asarray(miss_index)])
+            self._count(cache_evictions=int(evicted))
+        return out
 
     def _fused_unique(self, uniq: jnp.ndarray, include_host: bool,
                       snap: tuple, use_pallas: Optional[bool]) -> jnp.ndarray:
@@ -747,6 +833,13 @@ class TieredFeatureStore:
             plan.tier, plan.slot = p_tier, p_slot
             plan.pod_owner, plan.device_owner = p_pod, p_dev
             self.migrated_rows += 2 * len(pairs)
+            cache = self.cache
+        # invalidate ONLY the migrated rows from the device cache: a node
+        # promoted into HBM must stop holding cache capacity. Correctness
+        # never depends on this — rows travel with their nodes, so even a
+        # lookup racing between publish and invalidate reads exact values.
+        if cache is not None:
+            cache.invalidate(flat)
         return 2 * len(pairs)
 
 
@@ -761,6 +854,18 @@ class ShardedFeatureStore:
     Lookup runs under ``shard_map``; each device resolves its own request
     vector; warm misses are exchanged with allgather+reduce_scatter (default)
     or capacity-bounded all_to_all.
+
+    HOST/DISK-tier ids used to silently resolve to ZEROS here (the sharded
+    store serves only the HBM tiers). Built via :meth:`from_tiered` it now
+    keeps a reference to the source :class:`TieredFeatureStore` and
+    resolves cold ids through a correct — slow — host fetch after the mesh
+    exchange (:meth:`TieredFeatureStore.read_cold_rows`, one consistent
+    snapshot, so values stay exact even against racing promotion on the
+    source store). The fallback is counted in :attr:`stats`
+    (``host_fetches`` callbacks / ``cold_rows`` resolved), which the
+    serving engine snapshots into ``ServeMetrics.summary()["store"]``.
+    Directly-constructed stores (no tiered source) keep the zeros
+    behavior.
     """
 
     def __init__(self, mesh: Mesh, axis_name: str, hot: jnp.ndarray,
@@ -780,6 +885,12 @@ class ShardedFeatureStore:
         self.slot_t = jax.device_put(slot_t, rep)
         self.owner_t = jax.device_put(owner_t, rep)
         self.feat_dim = hot.shape[1]
+        # host-side tier mirror (static — the sharded store never migrates)
+        # so the cold-fallback mask costs no device round-trip per lookup
+        self._tier_np = np.asarray(tier_t)
+        self._tiered: Optional[TieredFeatureStore] = None
+        self.stats = {"host_fetches": 0, "cold_rows": 0}
+        self._stats_lock = threading.Lock()
 
     @staticmethod
     def from_tiered(store: TieredFeatureStore, mesh: Mesh, axis_name: str,
@@ -811,14 +922,21 @@ class ShardedFeatureStore:
             warm_np[w * per: w * per + c] = src[base[w]: base[w] + c]
             m = (tier == TIER_WARM) & (owner == w)
             new_slot[m] = slot[m] - base[w] + w * per
-        return ShardedFeatureStore(
+        ss = ShardedFeatureStore(
             mesh, axis_name, store.hot, jnp.asarray(warm_np),
             store.tier_t, jnp.asarray(new_slot, dtype=jnp.int32),
             store.owner_t, strategy)
+        ss._tiered = store    # cold-tier (HOST/DISK) host-fetch fallback
+        return ss
 
     def lookup(self, ids: jnp.ndarray) -> jnp.ndarray:
         """ids: (world * m,) global ids sharded over the axis (each device
-        resolves m requests). Returns (world * m, d) with the same sharding."""
+        resolves m requests). Returns (world * m, d) with the same sharding.
+
+        HOT/WARM rows resolve inside one ``shard_map`` exchange; HOST/DISK
+        ids are then resolved through the source tiered store's host fetch
+        (when built via :meth:`from_tiered`) — slow but exact, counted in
+        :attr:`stats`. Without a tiered source, cold ids return zeros."""
         axis = self.axis
         per = self.rows_per_dev
 
@@ -852,8 +970,29 @@ class ShardedFeatureStore:
             body, mesh=self.mesh,
             in_specs=(P(), P(axis), P(), P(), P(), P(axis)),
             out_specs=P(axis))
-        return fn(self.hot, self.warm, self.tier_t, self.slot_t, self.owner_t,
-                  ids)
+        out = fn(self.hot, self.warm, self.tier_t, self.slot_t, self.owner_t,
+                 ids)
+        if self._tiered is None:
+            return out
+        # correct (slow) fallback for the cold tiers the exchange cannot
+        # serve: fetch HOST/DISK rows host-side from the source store and
+        # merge them in (sharded like the exchange output, so downstream
+        # consumers see the same layout)
+        ids_np = np.asarray(ids).reshape(-1)
+        cold = (ids_np >= 0) & (self._tier_np[np.maximum(ids_np, 0)]
+                                >= TIER_HOST)
+        if not cold.any():
+            return out
+        rows = np.zeros((ids_np.shape[0], self.feat_dim),
+                        dtype=np.dtype(out.dtype))
+        rows[cold] = self._tiered.read_cold_rows(ids_np[cold])
+        with self._stats_lock:
+            self.stats["host_fetches"] += 1
+            self.stats["cold_rows"] += int(cold.sum())
+        shard0 = NamedSharding(self.mesh, P(self.axis))
+        rows_j = jax.device_put(jnp.asarray(rows, out.dtype), shard0)
+        mask = jax.device_put(jnp.asarray(cold), shard0)
+        return jnp.where(mask[:, None], rows_j, out)
 
     def lookup_hops(self, hops) -> list[jnp.ndarray]:
         """Fused multi-hop variant of :meth:`lookup`: concatenate the hop id

@@ -1,0 +1,293 @@
+"""Request-granularity device cache in front of the tiered store's cold path.
+
+Quiver's feature-access-probability placement adapts only at control-step
+granularity: a flash-crowd node stays in a cold tier — paying a host
+callback per access — for an entire adaptive interval. This module closes
+that timescale gap with the ``GPUCachedFeature`` pattern (DGL GraphBolt,
+see SNIPPETS.md): a fixed-capacity device-side row cache queried *before*
+the tier dispatch, so a cold row is fetched from host/disk at most once
+per residency and every repeat access is a plain HBM gather.
+
+  query(ids)    -> (values, miss_index, miss_ids): static-shape gather of
+                the cached rows (full-width gather + ``jnp.where`` mask —
+                no per-hit-count recompilation), plus the positions and
+                ids that must flow through the normal tier path.
+  replace(ids, rows)  admit the missed rows on return from the tier path;
+                eviction is CLOCK (second-chance) weighted by the shared
+                :class:`~repro.serving.adaptive.FrequencySketch`: a
+                resident whose decayed access count exceeds the
+                candidate's is never evicted for it, and when *every*
+                resident is hotter the admission is rejected outright
+                (scan resistance — one cold sweep cannot flush the crowd).
+
+Consistency: cached rows are copies of the exact feature values, and
+:meth:`TieredFeatureStore.swap_assignments` preserves lookup equivalence
+(rows travel with their nodes), so a stale cache entry can never change a
+lookup result. The store still calls :meth:`GPUFeatureCache.invalidate`
+for migrated ids on every publication — hygiene, so a row promoted into
+HBM stops occupying cache capacity.
+
+The row buffer is a ``jnp`` array replaced copy-on-write (``.at[].set``):
+an in-flight :meth:`query` that captured the previous buffer keeps reading
+a coherent (slot-table, rows) pair; all host-side tables mutate under one
+lock.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _new_cache_stats() -> dict[str, int]:
+    return {"hits": 0, "misses": 0, "evictions": 0, "admitted": 0,
+            "rejected": 0, "invalidated": 0, "resizes": 0}
+
+
+class GPUFeatureCache:
+    """Fixed-capacity device-side feature-row cache with sketch-weighted
+    CLOCK eviction.
+
+    Sits in front of :meth:`TieredFeatureStore.lookup` /
+    :meth:`~TieredFeatureStore.lookup_hops` (attach with
+    :meth:`TieredFeatureStore.attach_cache`): the store queries it for
+    cold-tier (HOST/DISK) ids only, serves hits from the device buffer
+    without touching the tier dispatch path, and admits the missed rows on
+    return from the fused gather. Thread-safe; the
+    :class:`~repro.serving.adaptive.AdaptiveController` may
+    :meth:`resize` it live from the measured cold working set.
+
+    Attributes:
+        capacity: current row capacity (mutated only by :meth:`resize`).
+        sketch: optional shared frequency sketch (duck-typed: ``counts``)
+            that weights eviction and resize retention.
+        stats: internal counters (hits/misses/evictions/admitted/rejected/
+            invalidated/resizes); the store mirrors the first three into
+            its dispatch-stats schema.
+    """
+
+    def __init__(self, num_nodes: int, capacity: int, feat_dim: int, *,
+                 dtype=jnp.float32, sketch=None):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.num_nodes = int(num_nodes)
+        self.capacity = int(capacity)
+        self.feat_dim = int(feat_dim)
+        self.sketch = sketch
+        self.stats = _new_cache_stats()
+        self._lock = threading.Lock()
+        self._rows = jnp.zeros((self.capacity, self.feat_dim), dtype)
+        self._slot_of = np.full(self.num_nodes, -1, np.int32)
+        self._node_of = np.full(self.capacity, -1, np.int64)
+        self._ref = np.zeros(self.capacity, bool)   # second-chance bits
+        self._hand = 0
+        self._free = list(range(self.capacity - 1, -1, -1))
+
+    @staticmethod
+    def for_store(store, capacity: int, *, sketch=None) -> "GPUFeatureCache":
+        """Build a cache shaped for ``store`` (node count / feature width /
+        dtype read off the store) — the launcher's one-liner."""
+        return GPUFeatureCache(int(store.plan.tier.shape[0]), capacity,
+                               store.feat_dim, dtype=store.hot.dtype,
+                               sketch=sketch)
+
+    # -- read path -----------------------------------------------------------
+    def query(self, ids) -> tuple[jnp.ndarray, np.ndarray, np.ndarray]:
+        """Probe the cache for one id vector (static-shape gather).
+
+        Args:
+            ids: ``(M,)`` int node ids; ``-1`` entries are "not asked"
+                (padding, or ids the caller resolved elsewhere) and are
+                neither hits nor misses.
+
+        Returns:
+            ``(values, miss_index, miss_ids)`` — ``values`` is ``(M, d)``
+            with hit rows filled and every other row zero (full-width
+            gather + mask, so the shape never depends on the hit count);
+            ``miss_index`` the positions into ``ids`` that were asked but
+            not resident; ``miss_ids`` is ``ids[miss_index]``. Hit slots
+            get their second-chance bit set.
+        """
+        ids_np = np.asarray(ids).reshape(-1)
+        safe = np.maximum(ids_np, 0)
+        with self._lock:
+            slots = self._slot_of[safe].copy()
+            rows = self._rows          # coherent with slots: replaced, never
+            hit = (ids_np >= 0) & (slots >= 0)   # mutated, under this lock
+            if hit.any():
+                self._ref[slots[hit]] = True
+            self.stats["hits"] += int(hit.sum())
+            self.stats["misses"] += int(((ids_np >= 0) & ~hit).sum())
+        gathered = rows[jnp.asarray(np.maximum(slots, 0))]
+        values = jnp.where(jnp.asarray(hit)[:, None], gathered, 0.0)
+        miss_index = np.flatnonzero((ids_np >= 0) & ~hit)
+        return values, miss_index, ids_np[miss_index]
+
+    # -- admission / eviction ------------------------------------------------
+    def _evict_slot(self, cand: int, counts) -> tuple[int, int]:
+        """CLOCK scan for a slot to hand to ``cand``. Pass 1 honors
+        second-chance bits and frequency protection; pass 2 drops the
+        second chances but keeps protection. Returns ``(slot, evicted)``
+        with ``slot == -1`` when every resident is hotter than the
+        candidate (admission rejected)."""
+        cand_w = np.inf if counts is None else float(counts[cand])
+        for honor_ref in (True, False):
+            for _ in range(self.capacity):
+                s = self._hand
+                self._hand = (self._hand + 1) % self.capacity
+                if honor_ref and self._ref[s]:
+                    self._ref[s] = False
+                    continue
+                resident = int(self._node_of[s])
+                if (counts is not None and resident >= 0
+                        and float(counts[resident]) > cand_w):
+                    continue
+                if resident >= 0:
+                    self._slot_of[resident] = -1
+                    self._node_of[s] = -1
+                    self._ref[s] = False
+                    return s, 1
+                return s, 0
+        return -1, 0
+
+    def replace(self, ids, rows) -> int:
+        """Admit missed rows (the ``cache.replace(miss_ids, miss_values)``
+        half of the query-and-replace pattern).
+
+        Args:
+            ids: ``(K,)`` node ids to admit (duplicates collapsed, ``-1``
+                and already-resident ids skipped — a racing lane may have
+                admitted first).
+            rows: ``(K, d)`` feature rows aligned with ``ids`` (device or
+                host array; copied into the cache buffer).
+
+        Returns:
+            Number of resident rows evicted to make room (admissions into
+            free slots and rejected admissions evict nothing).
+        """
+        ids_np = np.asarray(ids).reshape(-1)
+        if ids_np.size == 0:
+            return 0
+        uniq, first = np.unique(ids_np, return_index=True)
+        valid = uniq >= 0
+        evicted = 0
+        slots_out: list[int] = []
+        take_idx: list[int] = []
+        with self._lock:
+            counts = None if self.sketch is None else self.sketch.counts
+            for u, src in zip(uniq[valid], first[valid]):
+                u = int(u)
+                if self._slot_of[u] >= 0:
+                    continue
+                if self._free:
+                    s = self._free.pop()
+                else:
+                    s, ev = self._evict_slot(u, counts)
+                    if s < 0:
+                        self.stats["rejected"] += 1
+                        continue
+                    evicted += ev
+                self._slot_of[u] = s
+                self._node_of[s] = u
+                self._ref[s] = False
+                slots_out.append(s)
+                take_idx.append(int(src))
+            self.stats["evictions"] += evicted
+            self.stats["admitted"] += len(slots_out)
+            if slots_out:
+                vals = jnp.asarray(rows)[np.asarray(take_idx)]
+                self._rows = self._rows.at[np.asarray(slots_out)].set(
+                    vals.astype(self._rows.dtype))
+        return evicted
+
+    # -- maintenance ---------------------------------------------------------
+    def invalidate(self, ids) -> int:
+        """Drop the given ids from the cache (no-op for non-resident ids).
+
+        Called by :meth:`TieredFeatureStore.swap_assignments` for exactly
+        the migrated nodes — values never change on migration, so this is
+        capacity hygiene, not a correctness requirement.
+
+        Returns:
+            Number of rows dropped.
+        """
+        ids_np = np.unique(np.asarray(ids).reshape(-1))
+        n = 0
+        with self._lock:
+            for u in ids_np:
+                u = int(u)
+                if u < 0 or self._slot_of[u] < 0:
+                    continue
+                s = int(self._slot_of[u])
+                self._slot_of[u] = -1
+                self._node_of[s] = -1
+                self._ref[s] = False
+                self._free.append(s)
+                n += 1
+            self.stats["invalidated"] += n
+        return n
+
+    def resize(self, capacity: int) -> int:
+        """Rebuild the cache at a new capacity, keeping the hottest
+        residents (by sketch weight; insertion order without a sketch).
+
+        The controller calls this each control step with a target sized
+        from the measured cold working set, clamped to its configured
+        bounds — capacity therefore never grows without bound.
+
+        Returns:
+            Number of resident rows dropped by a shrink (counted as
+            evictions).
+        """
+        capacity = max(1, int(capacity))
+        with self._lock:
+            if capacity == self.capacity:
+                return 0
+            resident = np.flatnonzero(self._node_of >= 0)
+            nodes = self._node_of[resident]
+            if nodes.size > capacity:
+                if self.sketch is not None:
+                    order = np.argsort(-np.asarray(self.sketch.counts)[nodes],
+                                       kind="stable")
+                else:
+                    order = np.arange(nodes.size)
+                keep = np.sort(order[:capacity])
+            else:
+                keep = np.arange(nodes.size)
+            dropped = int(nodes.size - keep.size)
+            kept_slots = resident[keep]
+            kept_nodes = nodes[keep]
+            new_rows = jnp.zeros((capacity, self.feat_dim), self._rows.dtype)
+            if keep.size:
+                new_rows = new_rows.at[:keep.size].set(self._rows[kept_slots])
+            self._slot_of[nodes] = -1
+            self._slot_of[kept_nodes] = np.arange(keep.size, dtype=np.int32)
+            node_of = np.full(capacity, -1, np.int64)
+            node_of[:keep.size] = kept_nodes
+            ref = np.zeros(capacity, bool)
+            ref[:keep.size] = self._ref[kept_slots]
+            self._rows, self._node_of, self._ref = new_rows, node_of, ref
+            self._free = list(range(capacity - 1, keep.size - 1, -1))
+            self._hand = 0
+            self.capacity = capacity
+            self.stats["evictions"] += dropped
+            self.stats["resizes"] += 1
+        return dropped
+
+    # -- introspection -------------------------------------------------------
+    def resident_rows(self) -> int:
+        """Rows currently cached."""
+        with self._lock:
+            return int((self._node_of >= 0).sum())
+
+    def report(self) -> dict:
+        """Counters + sizing for logs: stats, capacity, resident rows,
+        and the hit rate over the cache's lifetime."""
+        with self._lock:
+            stats = dict(self.stats)
+            resident = int((self._node_of >= 0).sum())
+        asked = stats["hits"] + stats["misses"]
+        return {**stats, "capacity": self.capacity, "resident": resident,
+                "hit_rate": stats["hits"] / asked if asked else 0.0}

@@ -54,9 +54,14 @@ class Prefetcher:
             ``counts``) used for prediction when no score vector is given;
             fed by :meth:`on_admit` when the prefetcher is an engine hook.
         budget: max rows staged per refresh (device staging-buffer size).
+            A plain attribute read at :meth:`predict` time, so the
+            AdaptiveController may re-assign it live each control step
+            (sized from the measured cold working set, clamped to its
+            configured bounds) — the next refresh picks it up.
         refresh_every: when set, :meth:`on_batch_complete` triggers an async
             refresh every that many completed batches (standalone mode —
-            the AdaptiveController path refreshes per control step instead).
+            the AdaptiveController path refreshes per control step instead,
+            at a cadence tuned from the prefetch miss ratio).
     """
 
     def __init__(self, store, sketch=None, *, budget: int = 1024,

@@ -17,6 +17,9 @@ tagged round-robin, and the report breaks down per model. ``--spill-path``
 backs the DISK tier with a real ``np.memmap`` spill file and ``--prefetch``
 stages predicted cold rows into a device-side buffer so HOST/DISK reads
 leave the request critical path (see ``benchmarks/prefetch.py``).
+``--gpu-cache`` adds the request-granularity device cache in front of the
+cold tiers (``--gpu-cache-rows`` capacity; controller-sized under
+``--adaptive`` — see ``benchmarks/flash_crowd.py``).
 """
 from __future__ import annotations
 
@@ -178,8 +181,28 @@ def make_prefetcher(args, store, fap, controller, hooks):
     return pf
 
 
+def make_gpu_cache(args, store, controller):
+    """``--gpu-cache`` wiring shared by the single- and multi-model paths:
+    put a request-granularity device cache in front of the store's cold
+    tiers (``--gpu-cache-rows`` capacity). With ``--adaptive`` it shares
+    the controller's frequency sketch — eviction is frequency-weighted and
+    the control step resizes the capacity from the measured cold working
+    set; without it the capacity stays fixed and eviction is plain CLOCK."""
+    if not args.gpu_cache:
+        return None
+    from repro.core import GPUFeatureCache
+    cache = GPUFeatureCache.for_store(
+        store, args.gpu_cache_rows,
+        sketch=controller.sketch if controller is not None else None)
+    store.attach_cache(cache)
+    print(f"[serve] gpu-cache: {args.gpu_cache_rows} rows in front of the "
+          f"cold tiers"
+          + (" (controller-sized)" if controller is not None else ""))
+    return cache
+
+
 def _serve_and_report(args, engine, psgs, reqs, controller,
-                      prefetcher=None) -> None:
+                      prefetcher=None, cache=None) -> None:
     """Shared tail of the single- and multi-model launcher paths: warmup,
     the optional micro-batched stream (with ``--adapt-micro`` attachment)
     or pre-formed batches, then the JSON report."""
@@ -207,6 +230,8 @@ def _serve_and_report(args, engine, psgs, reqs, controller,
         print("[serve] adaptation:", json.dumps(controller.report()))
     if prefetcher is not None:
         print("[serve] prefetch:", json.dumps(prefetcher.report()))
+    if cache is not None:
+        print("[serve] gpu-cache:", json.dumps(cache.report()))
 
 
 def serve_multi_model(args, fanouts, graph, psgs, fap, store, gen) -> None:
@@ -244,11 +269,13 @@ def serve_multi_model(args, fanouts, graph, psgs, fap, store, gen) -> None:
                                   drift_threshold=args.drift_threshold))
         hooks.append(controller)
     prefetcher = make_prefetcher(args, store, fap, controller, hooks)
+    cache = make_gpu_cache(args, store, controller)
     engine = ServingEngine(registry, max_inflight=args.max_inflight,
                            admission=args.admission, hooks=hooks)
     reqs = list(gen.stream(args.requests, seeds_per_request=args.batch,
                            models=list(specs)))
-    _serve_and_report(args, engine, psgs, reqs, controller, prefetcher)
+    _serve_and_report(args, engine, psgs, reqs, controller, prefetcher,
+                      cache)
 
 
 def main() -> None:
@@ -315,6 +342,15 @@ def main() -> None:
     p.add_argument("--prefetch-budget", type=int, default=1024,
                    help="max cold rows staged per prefetch refresh "
                         "(device staging-buffer size)")
+    p.add_argument("--gpu-cache", action="store_true",
+                   help="request-granularity device cache in front of the "
+                        "cold tiers: cold rows are fetched from host/disk "
+                        "at most once per residency, repeats are HBM "
+                        "gathers. With --adaptive the controller sizes the "
+                        "capacity from the measured cold working set.")
+    p.add_argument("--gpu-cache-rows", type=int, default=2048,
+                   help="device-cache row capacity (initial capacity under "
+                        "--adaptive)")
     p.add_argument("--spill-path", default=None,
                    help="write DISK-tier rows to an np.memmap spill file at "
                         "this path (the real cold store); omit to keep them "
@@ -380,11 +416,13 @@ def main() -> None:
                                   drift_threshold=args.drift_threshold))
         hooks.append(controller)
     prefetcher = make_prefetcher(args, store, fap, controller, hooks)
+    cache = make_gpu_cache(args, store, controller)
     engine = ServingEngine(executors, router,
                            max_inflight=args.max_inflight,
                            admission=args.admission, hooks=hooks)
     reqs = list(gen.stream(args.requests, seeds_per_request=args.batch))
-    _serve_and_report(args, engine, psgs, reqs, controller, prefetcher)
+    _serve_and_report(args, engine, psgs, reqs, controller, prefetcher,
+                      cache)
 
 
 if __name__ == "__main__":

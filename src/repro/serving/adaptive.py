@@ -26,7 +26,11 @@ the loop, in the spirit of OMEGA's serve-time recomputation
                         promotes miss-hammered DISK rows and re-stages an
                         attached Prefetcher's device-side buffer with the
                         fresh FAP as the prediction score (cold-tier reads
-                        leave the request critical path).
+                        leave the request critical path), and (g) sizes the
+                        store's device cache capacity, the prefetch staging
+                        budget and the refresh cadence from the measured
+                        cold working set (``tune_cold_path`` — clamped to
+                        bounds, so sizing stays bounded under any sketch).
 
 Multi-model serving shares ONE sketch (FAP placement is store-wide — every
 model reads the same feature rows) but keeps latency samples and curve
@@ -62,7 +66,8 @@ from typing import Mapping, Optional, Sequence
 import numpy as np
 
 from repro.core.fap import compute_fap
-from repro.core.placement import migration_pairs, quiver_placement
+from repro.core.placement import (TIER_HOST, migration_pairs,
+                                  quiver_placement)
 from repro.serving.registry import DEFAULT_MODEL, ModelRegistry
 from repro.serving.router import CostModelRouter, LatencyCurve
 
@@ -133,6 +138,20 @@ class AdaptiveConfig:
     micro_seeds_bounds: tuple[int, int] = (16, 4096)
     micro_deadline_bounds: tuple[float, float] = (5e-4, 5e-2)
     micro_deadline_frac: float = 0.5   # deadline target: frac of knee latency
+    # cold-path auto-sizing (active when a GPUFeatureCache is attached to
+    # the store and/or a Prefetcher to the controller): per control step,
+    # nudge the cache capacity / staging budget a `cold_step` fraction
+    # toward targets sized from the measured cold working set, and the
+    # prefetch refresh cadence from the interval's prefetch miss ratio —
+    # every target is clamped to its bounds, so a pathological sketch
+    # (every node scoring hot) can never grow the sizes without bound
+    cold_step: float = 0.5
+    cache_rows_bounds: tuple[int, int] = (64, 8192)
+    stage_budget_bounds: tuple[int, int] = (64, 8192)
+    prefetch_cadence_bounds: tuple[int, int] = (1, 8)
+    cache_headroom: float = 1.25   # cache target: headroom × cold working set
+    cadence_miss_ratio: float = 0.25  # miss ratio above which cadence snaps
+    #                                   back to refreshing every step
 
 
 def curve_drift(old: LatencyCurve, new: LatencyCurve) -> float:
@@ -192,11 +211,17 @@ class AdaptiveController:
         self.stats = {"steps": 0, "migrated_rows": 0, "refits": 0,
                       "batches_seen": 0, "micro_tunings": 0,
                       "promoted_rows": 0, "prefetch_refreshes": 0,
-                      "last_drift": {}}
+                      "cold_tunings": 0, "last_drift": {}}
         self.prefetcher = None
         if prefetcher is not None:
             self.attach_prefetcher(prefetcher)
         self._since_step = 0
+        # cold-path feedback state: last store-stats snapshot (interval
+        # deltas), current prefetch refresh cadence (in control steps) and
+        # steps elapsed since the last refresh
+        self._last_store_stats: dict[str, int] = {}
+        self._cadence = max(1, int(self.config.prefetch_cadence_bounds[0]))
+        self._steps_since_refresh = 0
         self._psgs_seen = 0.0   # running Σ accumulated PSGS of sampled batches
         self._seeds_seen = 0    # running seed count — per-seed PSGS estimate
         # _lock guards telemetry (samples/stats/counters) and is only ever
@@ -295,12 +320,13 @@ class AdaptiveController:
 
         Returns:
             ``{"migrated_rows", "refits", "pending", "micro",
-            "promoted_rows", "prefetched"}`` — rows moved this step, curves
-            swapped, nodes still off their target tier (0 means the
-            placement has converged for this workload), the micro-batcher
-            bounds after tuning (``None`` when no micro-batcher is
-            attached), miss-driven DISK rows promoted, and whether a
-            prefetch refresh was kicked off.
+            "promoted_rows", "prefetched", "cold"}`` — rows moved this
+            step, curves swapped, nodes still off their target tier (0
+            means the placement has converged for this workload), the
+            micro-batcher bounds after tuning (``None`` when no
+            micro-batcher is attached), miss-driven DISK rows promoted,
+            whether a prefetch refresh was kicked off (subject to the
+            tuned cadence), and the :meth:`tune_cold_path` sizing result.
         """
         with self._step_lock:
             target, fap = self.target_plan()
@@ -316,12 +342,19 @@ class AdaptiveController:
                         if promote is not None else 0)
             refits = self.refit_curves()
             micro = self.tune_micro()
+            # close the prefetch feedback loop BEFORE the refresh so the
+            # freshly sized staging budget shapes this step's stage
+            cold = self.tune_cold_path()
             prefetched = False
             if self.prefetcher is not None:
-                # re-stage the cold tiers off the critical path, scored by
-                # the fresh FAP (covers multi-hop frontiers, not just seeds)
-                self.prefetcher.refresh_async(scores=fap)
-                prefetched = True
+                self._steps_since_refresh += 1
+                if self._steps_since_refresh >= self._cadence:
+                    self._steps_since_refresh = 0
+                    # re-stage the cold tiers off the critical path, scored
+                    # by the fresh FAP (covers multi-hop frontiers, not
+                    # just seeds)
+                    self.prefetcher.refresh_async(scores=fap)
+                    prefetched = True
             self.sketch.decay_step()
             with self._lock:
                 self.stats["steps"] += 1
@@ -330,9 +363,79 @@ class AdaptiveController:
                 self.stats["prefetch_refreshes"] += int(prefetched)
             return {"migrated_rows": moved, "refits": refits,
                     "micro": micro, "promoted_rows": promoted,
-                    "prefetched": prefetched,
+                    "prefetched": prefetched, "cold": cold,
                     "pending": int((target.tier != self.store.plan.tier)
                                    .sum())}
+
+    # -- cold-path feedback loop ---------------------------------------------
+    def tune_cold_path(self) -> Optional[dict]:
+        """Size the device cache, the prefetch staging budget and the
+        refresh cadence from the measured cold working set.
+
+        Per control step: the cold working set is the number of cold-tier
+        (HOST/DISK) nodes with non-zero decayed sketch weight — the nodes
+        the *recent* request mix actually touched below HBM. The attached
+        :class:`~repro.core.gpu_cache.GPUFeatureCache` is resized a
+        ``cold_step`` fraction toward ``cache_headroom ×`` that set
+        (clamped to ``cache_rows_bounds``); the prefetcher's staging
+        budget toward the set itself (``stage_budget_bounds``); and the
+        refresh cadence from the interval's prefetch miss ratio
+        (``prefetch_hits/misses`` deltas of the store's dispatch stats):
+        misses above ``cadence_miss_ratio`` snap the cadence back to
+        refreshing every step, a clean interval stretches it toward the
+        upper bound. Every target is clamped, so sizes stay bounded under
+        any sketch (see ``tests/test_gpu_cache.py``).
+
+        Returns:
+            ``{"cold_ws", "cache_rows"?, "stage_budget"?,
+            "refresh_cadence"?}`` — or ``None`` when there is neither a
+            cache nor a prefetcher to tune.
+        """
+        cache = getattr(self.store, "cache", None)
+        pf = self.prefetcher
+        if cache is None and pf is None:
+            return None
+        cfg = self.config
+        step = float(np.clip(cfg.cold_step, 0.0, 1.0))
+        tier = np.asarray(self.store.tier_t)
+        cold_ws = int(((tier >= TIER_HOST)
+                       & (self.sketch.counts > 0.0)).sum())
+        snapshot = getattr(self.store, "snapshot_stats", None)
+        snap = snapshot() if snapshot is not None else {}
+        delta = {k: max(0, int(v) - self._last_store_stats.get(k, 0))
+                 for k, v in snap.items()}
+        self._last_store_stats = {k: int(v) for k, v in snap.items()}
+        out: dict = {"cold_ws": cold_ws}
+        if cache is not None:
+            lo, hi = cfg.cache_rows_bounds
+            target = int(np.clip(round(cfg.cache_headroom * cold_ws),
+                                 lo, hi))
+            cur = int(cache.capacity)
+            new = int(np.clip(round(cur + step * (target - cur)), lo, hi))
+            if new != cur:
+                cache.resize(new)
+            out["cache_rows"] = new
+        if pf is not None:
+            lo, hi = cfg.stage_budget_bounds
+            target = int(np.clip(cold_ws, lo, hi))
+            cur = int(pf.budget)
+            new = int(np.clip(round(cur + step * (target - cur)), lo, hi))
+            pf.budget = new
+            out["stage_budget"] = new
+            c_lo, c_hi = cfg.prefetch_cadence_bounds
+            hits = delta.get("prefetch_hits", 0)
+            misses = delta.get("prefetch_misses", 0)
+            if hits + misses > 0:
+                ratio = misses / (hits + misses)
+                target_c = (c_lo if ratio > cfg.cadence_miss_ratio
+                            else min(c_hi, self._cadence + 1))
+                self._cadence = int(np.clip(
+                    round(self._cadence + step * (target_c - self._cadence)),
+                    c_lo, c_hi))
+            out["refresh_cadence"] = self._cadence
+        with self._lock:
+            self.stats["cold_tunings"] += 1
+        return out
 
     def refit_curves(self) -> int:
         """Refit curves from live samples, per ``(model, executor)``; swap

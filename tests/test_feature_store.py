@@ -87,3 +87,41 @@ print("SHARDED_OK")
 """
     r = run_subprocess(code, devices=8)
     assert "SHARDED_OK" in r.stdout, r.stderr[-2000:]
+
+
+@pytest.mark.subprocess
+def test_sharded_store_cold_rows_exact_not_zeros():
+    """Regression: HOST/DISK ids through the sharded store used to resolve
+    silently to zeros. The cold fallback must return the exact feature rows
+    (bit-identical to the single-host tiered store), count its host fetches,
+    and leave -1 padding and HBM-tier rows untouched."""
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.graph import power_law_graph
+from repro.core.fap import compute_fap
+from repro.core.placement import TopologySpec, quiver_placement
+from repro.core.feature_store import TieredFeatureStore, ShardedFeatureStore
+n, d = 2000, 16
+g = power_law_graph(n, 8.0, seed=0)
+fap = compute_fap(g, (4, 3))
+feats = np.random.default_rng(0).normal(size=(n, d)).astype(np.float32)
+topo = TopologySpec(num_pods=2, devices_per_pod=4, rows_per_device=128,
+                    rows_host=256, hot_replicate_fraction=0.25)
+plan = quiver_placement(fap, topo)
+store = TieredFeatureStore.build(feats, plan)
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("x",))
+ss = ShardedFeatureStore.from_tiered(store, mesh, "x")
+ids = np.random.default_rng(2).integers(0, n, size=8 * 32).astype(np.int32)
+ids[5] = -1                                  # padding stays zero
+assert (plan.tier[np.maximum(ids, 0)] >= 2).any()   # cold really sampled
+out = np.asarray(ss.lookup(jnp.asarray(ids)))
+want = np.asarray(store.lookup(jnp.asarray(ids)))   # single-host reference
+assert np.array_equal(out, want), np.abs(out - want).max()
+expect = np.where((ids >= 0)[:, None], feats[np.maximum(ids, 0)], 0.0)
+assert np.allclose(out, expect, atol=1e-5)
+assert ss.stats["host_fetches"] > 0 and ss.stats["cold_rows"] > 0
+print("SHARDED_COLD_OK")
+"""
+    r = run_subprocess(code, devices=8)
+    assert "SHARDED_COLD_OK" in r.stdout, r.stderr[-2000:]

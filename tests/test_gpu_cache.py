@@ -1,0 +1,311 @@
+"""Request-granularity device cache (PR 6): query/replace semantics,
+sketch-weighted CLOCK eviction, capacity bounds, store integration (cold
+cache hits bypass the tier dispatch, results stay bit-identical to the
+uncached path), invalidation on migration, cache correctness under
+migration/prefetch churn, and the controller's bounded cold-path sizing."""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GPUFeatureCache, Prefetcher, TieredFeatureStore,
+                        TopologySpec, compute_fap, migration_pairs,
+                        quiver_placement)
+from repro.core.placement import TIER_HOST
+from repro.graph import power_law_graph
+from repro.serving import AdaptiveConfig, AdaptiveController, FrequencySketch
+
+
+# ---------------------------------------------------------------------------
+# Fixtures (the test_prefetch harness sizes)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stack():
+    n, d, fan = 900, 12, (4, 3)
+    g = power_law_graph(n, 6.0, seed=0)
+    feats = np.random.default_rng(1).normal(size=(n, d)).astype(np.float32)
+    fap = compute_fap(g, fan)
+    topo = TopologySpec(num_pods=1, devices_per_pod=1, rows_per_device=220,
+                        rows_host=330, hot_replicate_fraction=0.3)
+    return g, fan, feats, fap, topo
+
+
+def _fresh_store(stack, spill_path=None):
+    g, fan, feats, fap, topo = stack
+    return TieredFeatureStore.build(feats, quiver_placement(fap, topo),
+                                    spill_path=spill_path)
+
+
+def _rows(ids, d=4):
+    """Deterministic distinct rows for unit tests: row i == float(i)."""
+    ids = np.asarray(ids, np.int64)
+    return np.broadcast_to(ids[:, None], (ids.size, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Unit: query/replace semantics
+# ---------------------------------------------------------------------------
+def test_query_empty_cache_all_miss_and_padding_ignored():
+    c = GPUFeatureCache(num_nodes=32, capacity=4, feat_dim=4)
+    ids = np.array([5, -1, 7, -1], np.int64)
+    values, miss_index, miss_ids = c.query(ids)
+    assert values.shape == (4, 4) and not np.asarray(values).any()
+    assert miss_index.tolist() == [0, 2] and miss_ids.tolist() == [5, 7]
+    assert c.stats["hits"] == 0 and c.stats["misses"] == 2  # -1s not counted
+
+
+def test_replace_then_query_hits_exact_rows():
+    c = GPUFeatureCache(num_nodes=32, capacity=4, feat_dim=4)
+    c.replace(np.array([5, 7]), _rows([5, 7]))
+    ids = np.array([7, -1, 5, 9], np.int64)
+    values, miss_index, miss_ids = c.query(ids)
+    assert miss_ids.tolist() == [9]
+    got = np.asarray(values)
+    assert np.array_equal(got[0], _rows([7])[0])
+    assert np.array_equal(got[2], _rows([5])[0])
+    assert not got[1].any() and not got[3].any()  # pad + miss rows zero
+    assert c.stats["hits"] == 2 and c.report()["hit_rate"] > 0
+
+
+def test_replace_skips_duplicates_residents_and_padding():
+    c = GPUFeatureCache(num_nodes=32, capacity=8, feat_dim=4)
+    c.replace(np.array([3, 3, -1, 4]), _rows([3, 3, 0, 4]))
+    assert c.resident_rows() == 2 and c.stats["admitted"] == 2
+    # re-admitting a resident is a no-op (a racing lane admitted first)
+    c.replace(np.array([3]), _rows([99]))
+    got, _, _ = c.query(np.array([3]))
+    assert np.array_equal(np.asarray(got)[0], _rows([3])[0])
+
+
+def test_capacity_bound_holds_under_overflow_admissions():
+    c = GPUFeatureCache(num_nodes=256, capacity=8, feat_dim=4)
+    for lo in range(0, 64, 16):
+        ids = np.arange(lo, lo + 16)
+        c.replace(ids, _rows(ids))
+    assert c.resident_rows() <= 8
+    assert c.stats["evictions"] == c.stats["admitted"] - 8
+
+
+def test_clock_second_chance_protects_recently_hit_rows():
+    c = GPUFeatureCache(num_nodes=32, capacity=2, feat_dim=4)
+    c.replace(np.array([1, 2]), _rows([1, 2]))
+    c.query(np.array([1]))              # sets node 1's second-chance bit
+    c.replace(np.array([3]), _rows([3]))
+    _, miss_index, _ = c.query(np.array([1, 2, 3]))
+    assert miss_index.tolist() == [1]   # 2 evicted; 1 survived its ref bit
+
+
+def test_sketch_protection_rejects_colder_candidates():
+    sketch = FrequencySketch(32)
+    c = GPUFeatureCache(num_nodes=32, capacity=2, feat_dim=4, sketch=sketch)
+    sketch.counts[[1, 2]] = 10.0        # residents are hot
+    c.replace(np.array([1, 2]), _rows([1, 2]))
+    c.replace(np.array([3]), _rows([3]))   # cold scan: everyone is hotter
+    assert c.stats["rejected"] == 1 and c.stats["evictions"] == 0
+    _, miss_index, _ = c.query(np.array([1, 2, 3]))
+    assert miss_index.tolist() == [2]   # residents intact, 3 not admitted
+    sketch.counts[3] = 99.0             # now the candidate outranks one
+    c.replace(np.array([3]), _rows([3]))
+    _, miss_index, _ = c.query(np.array([3]))
+    assert miss_index.size == 0 and c.stats["evictions"] == 1
+
+
+def test_invalidate_frees_slots_for_readmission():
+    c = GPUFeatureCache(num_nodes=32, capacity=2, feat_dim=4)
+    c.replace(np.array([1, 2]), _rows([1, 2]))
+    assert c.invalidate(np.array([2, 30, -1])) == 1   # non-resident ignored
+    assert c.stats["invalidated"] == 1 and c.resident_rows() == 1
+    c.replace(np.array([5]), _rows([5]))              # freed slot reused
+    assert c.resident_rows() == 2 and c.stats["evictions"] == 0
+    _, miss_index, _ = c.query(np.array([1, 5]))
+    assert miss_index.size == 0
+
+
+def test_resize_shrink_keeps_hottest_grow_keeps_all():
+    sketch = FrequencySketch(32)
+    c = GPUFeatureCache(num_nodes=32, capacity=4, feat_dim=4, sketch=sketch)
+    ids = np.array([1, 2, 3, 4])
+    sketch.counts[ids] = [5.0, 1.0, 9.0, 2.0]
+    c.replace(ids, _rows(ids))
+    assert c.resize(2) == 2             # dropped the two coldest
+    got, miss_index, _ = c.query(ids)
+    assert miss_index.tolist() == [1, 3]             # 2 and 4 dropped
+    assert np.array_equal(np.asarray(got)[[0, 2]], _rows([1, 3]))
+    assert c.resize(8) == 0 and c.capacity == 8      # grow keeps residents
+    _, miss_index, _ = c.query(np.array([1, 3]))
+    assert miss_index.size == 0
+    assert c.stats["resizes"] == 2 and c.stats["evictions"] == 2
+    with pytest.raises(ValueError):
+        GPUFeatureCache(num_nodes=8, capacity=0, feat_dim=4)
+
+
+# ---------------------------------------------------------------------------
+# Store integration: hits bypass tier dispatch, results bit-identical
+# ---------------------------------------------------------------------------
+def test_cached_lookups_bit_identical_and_bypass_dispatch(stack, tmp_path):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack, spill_path=str(tmp_path / "c.spill"))
+    rng = np.random.default_rng(3)
+    hops = [rng.integers(-1, g.num_nodes, s).astype(np.int32)
+            for s in (32, 96)]
+    plain = [np.asarray(o) for o in store.lookup_hops(hops)]
+    plain_flat = np.asarray(store.lookup(jnp.asarray(hops[1])))
+    cache = GPUFeatureCache.for_store(store, 512)
+    store.attach_cache(cache)
+    for _ in range(2):                   # cold pass (misses), warm pass (hits)
+        cached = [np.asarray(o) for o in store.lookup_hops(hops)]
+        for a, b in zip(plain, cached):
+            assert np.array_equal(a, b)
+    assert np.array_equal(plain_flat,
+                          np.asarray(store.lookup(jnp.asarray(hops[1]))))
+    assert cache.stats["hits"] > 0 and cache.stats["misses"] > 0
+    # the structural win: a lookup whose cold ids ALL hit the cache skips
+    # the tier gather entirely (no device_gathers, no host callback)
+    cold = np.flatnonzero(np.asarray(store.tier_t) >= TIER_HOST)[:16]
+    store.lookup(jnp.asarray(cold, jnp.int32))       # admit
+    store.reset_stats()
+    out = np.asarray(store.lookup(jnp.asarray(cold, jnp.int32)))
+    assert np.array_equal(out, feats[cold])
+    stats = store.reset_stats()
+    assert stats["cache_hits"] == cold.size and stats["cache_misses"] == 0
+    assert stats["device_gathers"] == 0 and stats["host_fetches"] == 0
+
+
+def test_include_host_false_ignores_cache(stack):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    store.attach_cache(GPUFeatureCache.for_store(store, 256))
+    ids = np.flatnonzero(np.asarray(store.tier_t) >= TIER_HOST)[:32]
+    store.lookup(jnp.asarray(ids, jnp.int32))        # admit the cold rows
+    got = np.asarray(store.lookup(jnp.asarray(ids, jnp.int32),
+                                  include_host=False))
+    assert not got.any()                 # device-only probes stay zeros
+
+
+def test_swap_assignments_invalidates_migrated_rows(stack):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    cache = GPUFeatureCache.for_store(store, 256)
+    store.attach_cache(cache)
+    cold = np.flatnonzero(np.asarray(store.tier_t) >= TIER_HOST)
+    hot = np.flatnonzero(np.asarray(store.tier_t) < TIER_HOST)
+    store.lookup(jnp.asarray(cold[:8], jnp.int32))   # admit 8 cold rows
+    assert cache.resident_rows() == 8
+    store.swap_assignments(list(zip(hot[:4].tolist(), cold[:4].tolist())))
+    # both swap sides dropped: the promoted rows stop burning capacity
+    assert cache.stats["invalidated"] >= 4 and cache.resident_rows() <= 4
+    ids = jnp.asarray(np.arange(g.num_nodes), jnp.int32)
+    assert np.array_equal(np.asarray(store.lookup(ids)), feats)
+
+
+# ---------------------------------------------------------------------------
+# Churn: cached lookups racing migration + prefetch publication (satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_cached_lookups_racing_migration_and_stage_churn(stack, tmp_path):
+    """The test_prefetch.py race harness with a device cache attached: one
+    thread runs fused lookups through the cache, one re-publishes the
+    staging buffer, while the main thread migrates rows on the same store —
+    every observed row must stay exact (stale cache entries are
+    value-correct by the lookup-equivalence invariant)."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack, spill_path=str(tmp_path / "race.spill"))
+    cache = GPUFeatureCache.for_store(store, 128)    # small: eviction churn
+    store.attach_cache(cache)
+    rng = np.random.default_rng(7)
+    hops = [rng.integers(0, g.num_nodes, 16).astype(np.int32),
+            rng.integers(0, g.num_nodes, 48).astype(np.int32)]
+    expected = [feats[h] for h in hops]
+    stop = threading.Event()
+    errors: list[str] = []
+    pf = Prefetcher(store, budget=g.num_nodes)
+
+    def reader():
+        while not stop.is_set():
+            got = store.lookup_hops(hops)
+            for e, o in zip(expected, got):
+                if not np.array_equal(np.asarray(o), e):
+                    errors.append("torn cached lookup during migration")
+                    return
+
+    def refresher():
+        rrng = np.random.default_rng(13)
+        while not stop.is_set():
+            scores = rrng.random(g.num_nodes)
+            scores[scores < 0.5] = 0.0
+            try:
+                pf.refresh(scores=scores)
+            except BaseException as exc:  # surface, don't hang the test
+                errors.append(f"refresh raised: {exc!r}")
+                return
+
+    threads = [threading.Thread(target=reader),
+               threading.Thread(target=refresher)]
+    for t in threads:
+        t.start()
+    try:
+        drifted = fap.copy()
+        drifted[np.argsort(fap)[:80]] += fap.max() * 3
+        tgt = quiver_placement(drifted, topo)
+        for _ in range(10):
+            pairs = migration_pairs(store.plan.tier, tgt.tier, drifted,
+                                    budget=20)
+            if pairs:
+                store.swap_assignments(pairs)
+            store.promote_misses(budget=4)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+    assert not errors, errors
+    for e, o in zip(expected, store.lookup_hops(hops)):
+        assert np.array_equal(np.asarray(o), e)
+    stats = store.reset_stats()
+    assert stats["cache_hits"] > 0       # the cache really was on the path
+    pf.close()
+
+
+# ---------------------------------------------------------------------------
+# Controller feedback: sizing stays bounded under any sketch (acceptance)
+# ---------------------------------------------------------------------------
+def test_cold_path_sizing_bounded_under_pathological_sketch(stack):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    cache = GPUFeatureCache.for_store(store, 32)
+    store.attach_cache(cache)
+    pf = Prefetcher(store, budget=24)
+    cfg = AdaptiveConfig(cache_rows_bounds=(16, 128),
+                         stage_budget_bounds=(16, 96),
+                         prefetch_cadence_bounds=(1, 4))
+    ctl = AdaptiveController(g, fan, store, None, prefetcher=pf, config=cfg)
+    # pathological sketch: every node looks infinitely hot — targets must
+    # clamp to the configured upper bounds, never grow unboundedly
+    ctl.sketch.counts[:] = 1e18
+    for _ in range(12):
+        r = ctl.tune_cold_path()
+        assert 16 <= r["cache_rows"] <= 128
+        assert 16 <= r["stage_budget"] <= 96
+        assert 1 <= r["refresh_cadence"] <= 4
+    assert cache.capacity == 128 and pf.budget == 96   # converged to caps
+    # opposite pathology: a silent sketch shrinks toward the lower bounds
+    ctl.sketch.counts[:] = 0.0
+    for _ in range(12):
+        r = ctl.tune_cold_path()
+    assert r["cold_ws"] == 0
+    assert cache.capacity == 16 and pf.budget == 16
+    assert ctl.stats["cold_tunings"] == 24
+    pf.close()
+
+
+def test_controller_step_reports_cold_tuning(stack):
+    """step() wires tune_cold_path into the control loop when a cache is
+    attached (and skips it cleanly when neither cache nor prefetcher)."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    ctl = AdaptiveController(g, fan, store, None,
+                             config=AdaptiveConfig(rows_per_step=2))
+    assert ctl.step()["cold"] is None    # nothing to tune
+    store.attach_cache(GPUFeatureCache.for_store(store, 64))
+    r = ctl.step()
+    assert r["cold"] is not None and "cache_rows" in r["cold"]

@@ -104,3 +104,18 @@ def test_fap_truncated_leq_untruncated_transition(graph):
     p_u = compute_fap(graph, (2,), truncated=False)
     # truncation can only boost per-edge acceptance (min(deg,l)/deg ≥ 1/deg)
     assert (p_t >= p_u - 1e-6).all()
+
+
+def test_dispatch_stats_schema_pinned_with_cache_counters():
+    """The dispatch-stats schema is load-bearing: benchmarks and the
+    engine's ``summary()["store"]`` snapshot read these exact keys, and the
+    device cache extended it with the ``cache_*`` counters — any further
+    extension must update this pin (and tests/test_prefetch.py's copy)."""
+    from repro.core.feature_store import _new_stats
+
+    stats = _new_stats()
+    assert set(stats) == {
+        "lookup_calls", "fused_calls", "device_gathers", "host_fetches",
+        "disk_misses", "spill_reads", "prefetch_hits", "prefetch_misses",
+        "cache_hits", "cache_misses", "cache_evictions"}
+    assert all(v == 0 for v in stats.values())

@@ -25,7 +25,8 @@ from repro.serving import (AdaptiveConfig, AdaptiveController, HostExecutor,
 # them) — extending the schema must update this set AND _new_stats().
 STATS_SCHEMA = {"lookup_calls", "fused_calls", "device_gathers",
                 "host_fetches", "disk_misses", "spill_reads",
-                "prefetch_hits", "prefetch_misses"}
+                "prefetch_hits", "prefetch_misses",
+                "cache_hits", "cache_misses", "cache_evictions"}
 
 
 # ---------------------------------------------------------------------------

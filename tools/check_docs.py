@@ -36,6 +36,7 @@ API = {
         "TieredFeatureStore.publish_stage",
         "TieredFeatureStore.promote_misses", "DiskSpillTier"],
     "src/repro/core/prefetch.py": ["Prefetcher"],
+    "src/repro/core/gpu_cache.py": ["GPUFeatureCache"],
 }
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
