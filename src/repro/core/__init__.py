@@ -11,7 +11,8 @@ touching the shims themselves (including the legacy ``ServingEngine``
 construction signature, resolved lazily below) emits the
 ``DeprecationWarning``."""
 from repro.core.fap import compute_fap, monte_carlo_fap
-from repro.core.feature_store import (DiskSpillTier, ShardedFeatureStore,
+from repro.core.feature_store import (STATS_SCHEMA, DiskSpillTier,
+                                      ShardedFeatureStore,
                                       TieredFeatureStore)
 from repro.core.gpu_cache import GPUFeatureCache
 from repro.core.prefetch import Prefetcher
@@ -35,7 +36,8 @@ __all__ = [
     "monte_carlo_fap", "TopologySpec", "PlacementPlan", "quiver_placement",
     "hash_placement", "degree_placement", "freq_placement", "p3_placement",
     "expert_placement", "migration_pairs", "TieredFeatureStore",
-    "ShardedFeatureStore", "DiskSpillTier", "GPUFeatureCache", "Prefetcher",
+    "ShardedFeatureStore", "DiskSpillTier", "STATS_SCHEMA",
+    "GPUFeatureCache", "Prefetcher",
     "LatencyCurve", "CalibrationResult", "calibrate", "calibrate_executors",
     "CostModelRouter", "HybridScheduler",
     "StaticScheduler", "Request", "WorkloadGenerator", "DynamicBatcher",

@@ -64,12 +64,23 @@ from repro.graph.sampler import fixed_size_unique
 from repro.kernels.tiered_gather.ops import tiered_gather
 
 
+# Canonical stats schema for TieredFeatureStore dispatch accounting — THE
+# single source of truth. Tests import it (tests/test_prefetch.py,
+# tests/test_metrics.py), docs/invariants.md tables it, and quiverlint's
+# schema-sync pass cross-checks every producer and doc against it.
+STATS_SCHEMA: tuple = (
+    "lookup_calls", "fused_calls", "device_gathers", "host_fetches",
+    "disk_misses", "spill_reads", "prefetch_hits", "prefetch_misses",
+    "cache_hits", "cache_misses", "cache_evictions")
+
+
 def _new_stats() -> dict[str, int]:
     """Dispatch accounting shared by both lookup paths (benchmark signals:
     ``benchmarks/fused_gather.py`` reports the per-request dispatch
     reduction, ``benchmarks/prefetch.py`` the critical-path host-callback
-    reduction). The schema is pinned by ``tests/test_prefetch.py`` — new
-    counters must be added there too:
+    reduction). The schema is ``STATS_SCHEMA`` above — new counters are
+    added there, documented in ``docs/invariants.md``, and picked up by
+    the tests automatically:
 
       lookup_calls / fused_calls   per-hop vs fused lookup entries
       device_gathers               tiered_gather dispatches (HOT/WARM)
@@ -94,11 +105,7 @@ def _new_stats() -> dict[str, int]:
       cache_evictions              resident cache rows displaced by those
                                    admissions
     """
-    return {"lookup_calls": 0, "fused_calls": 0,
-            "device_gathers": 0, "host_fetches": 0,
-            "disk_misses": 0, "spill_reads": 0,
-            "prefetch_hits": 0, "prefetch_misses": 0,
-            "cache_hits": 0, "cache_misses": 0, "cache_evictions": 0}
+    return dict.fromkeys(STATS_SCHEMA, 0)
 
 
 class DiskSpillTier:
@@ -486,7 +493,9 @@ class TieredFeatureStore:
         gathers = 1 if fused else 2
         tier_path = (partial(self._fused_unique, use_pallas=use_pallas)
                      if fused else self._lookup_unique)
-        cache = self.cache
+        # lock-free single reference read: any published cache (or None) is
+        # valid here — cached rows are copies, so bit-identity cannot break
+        cache = self.cache  # quiverlint: disable=lock-discipline atomic reference read, any snapshot valid
         if cache is None or not include_host:
             self._count(device_gathers=gathers)
             return tier_path(uniq, include_host, snap)
@@ -613,7 +622,9 @@ class TieredFeatureStore:
         """PCIe-analogue slow path: host callback, ids sorted by address
         (the paper's TLB optimization) before the gather."""
         if host is None:
-            host, disk = self.host, self.disk
+            # one coherent snapshot — reading the two attributes directly
+            # could tear across a concurrent migration publish
+            _, _, host, disk, _, _, _ = self._snapshot()
 
         def cb(tier_np, slot_np):
             tier_np = np.asarray(tier_np)
@@ -632,7 +643,7 @@ class TieredFeatureStore:
 
         return io_callback(
             cb, jax.ShapeDtypeStruct((ids.shape[0], self.feat_dim),
-                                     self.hot.dtype), tier, slot,
+                                     host.dtype), tier, slot,
             ordered=False)
 
     # -- prefetch staging ----------------------------------------------------
@@ -717,17 +728,21 @@ class TieredFeatureStore:
             Number of feature rows moved (``2 *`` pairs swapped), also
             accumulated into :attr:`promoted_rows` / :attr:`migrated_rows`.
         """
-        if self._disk_miss_counts is None:
-            return 0
         with self._stats_lock:
+            if self._disk_miss_counts is None:
+                return 0
             counts = self._disk_miss_counts.copy()
-        tier = np.asarray(self.tier_t)
+        # tier/slot must come from one coherent snapshot: reading them in
+        # two separate attribute loads can tear across a migration publish
+        # and pair a node's new tier with its old slot
+        _, _, _, _, tier_t, slot_t, _ = self._snapshot()
+        tier = np.asarray(tier_t)
         cand = np.flatnonzero((tier == TIER_DISK) & (counts >= min_misses))
         hosts = np.flatnonzero(tier == TIER_HOST)
         if not cand.size or not hosts.size:
             return 0
         cand = cand[np.argsort(-counts[cand], kind="stable")][:budget]
-        slot = np.asarray(self.slot_t)
+        slot = np.asarray(slot_t)
         victims = hosts[np.lexsort((-slot[hosts], counts[hosts]))]
         k = min(cand.size, victims.size)
         pairs = list(zip(cand[:k].tolist(), victims[:k].tolist()))

@@ -288,6 +288,7 @@ class GPUFeatureCache:
         with self._lock:
             stats = dict(self.stats)
             resident = int((self._node_of >= 0).sum())
+            capacity = self.capacity
         asked = stats["hits"] + stats["misses"]
-        return {**stats, "capacity": self.capacity, "resident": resident,
+        return {**stats, "capacity": capacity, "resident": resident,
                 "hit_rate": stats["hits"] / asked if asked else 0.0}

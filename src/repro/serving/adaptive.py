@@ -464,7 +464,10 @@ class AdaptiveController:
                 continue
             drift = curve_drift(old, new)
             key = name if model == DEFAULT_MODEL else f"{model}/{name}"
-            self.stats["last_drift"][key] = drift
+            with self._lock:
+                # unlocked writes here race report()'s iteration over
+                # last_drift (dict-changed-size-during-iteration)
+                self.stats["last_drift"][key] = drift
             if drift > self.config.drift_threshold:
                 router.update_curve(name, new)
                 swapped += 1
@@ -550,7 +553,10 @@ class AdaptiveController:
         """Adaptation counters for logging: steps, migrated rows, refits,
         micro tunings, batches seen, per-``(model/)executor`` last drift,
         and seeds observed."""
-        return {**{k: v for k, v in self.stats.items() if k != "last_drift"},
+        with self._lock:
+            stats = dict(self.stats)
+            last_drift = dict(stats["last_drift"])
+        return {**{k: v for k, v in stats.items() if k != "last_drift"},
                 "last_drift": {k: round(v, 4)
-                               for k, v in self.stats["last_drift"].items()},
+                               for k, v in last_drift.items()},
                 "seeds_observed": self.sketch.total_observed}

@@ -418,8 +418,9 @@ class ServingEngine:
                 self._metrics.shed += len(batch)
                 self._metrics.model(model).shed += len(batch)
             return None
-        metrics = self._metrics  # bind this run: stragglers from a failed
-        with self._acct:         # run must not pollute the next run's stats
+        with self._lock:         # bind this run: stragglers from a failed
+            metrics = self._metrics  # run must not pollute the next run
+        with self._acct:
             self._inflight_batches += 1
         name = None
         try:
@@ -492,9 +493,11 @@ class ServingEngine:
 
     # -- serving loops (drop-in for the old pipeline API) --------------------
     def _reset(self) -> ServeMetrics:
-        self._metrics = ServeMetrics()
-        self._metrics.started = time.perf_counter()
-        return self._metrics
+        metrics = ServeMetrics()
+        metrics.started = time.perf_counter()
+        with self._lock:
+            self._metrics = metrics
+        return metrics
 
     def _store_stats(self) -> dict[str, dict]:
         """Snapshot of the shared stores' dispatch counters (deduplicated by

@@ -108,14 +108,19 @@ def test_fap_truncated_leq_untruncated_transition(graph):
 
 def test_dispatch_stats_schema_pinned_with_cache_counters():
     """The dispatch-stats schema is load-bearing: benchmarks and the
-    engine's ``summary()["store"]`` snapshot read these exact keys, and the
-    device cache extended it with the ``cache_*`` counters — any further
-    extension must update this pin (and tests/test_prefetch.py's copy)."""
+    engine's ``summary()["store"]`` snapshot read these exact keys. The
+    canonical ``STATS_SCHEMA`` constant is the single source of truth —
+    ``_new_stats()`` must produce exactly those keys, zeroed, and the
+    ``cache_*`` counters must mirror the device cache's own schema."""
+    from repro.core import STATS_SCHEMA
     from repro.core.feature_store import _new_stats
+    from repro.core.gpu_cache import _new_cache_stats
 
     stats = _new_stats()
-    assert set(stats) == {
-        "lookup_calls", "fused_calls", "device_gathers", "host_fetches",
-        "disk_misses", "spill_reads", "prefetch_hits", "prefetch_misses",
-        "cache_hits", "cache_misses", "cache_evictions"}
+    assert set(stats) == set(STATS_SCHEMA)
+    assert len(STATS_SCHEMA) == len(set(STATS_SCHEMA))
     assert all(v == 0 for v in stats.values())
+    cache_keys = set(_new_cache_stats())
+    for key in STATS_SCHEMA:
+        if key.startswith("cache_"):
+            assert key[len("cache_"):] in cache_keys

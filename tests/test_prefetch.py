@@ -20,13 +20,13 @@ from repro.models.gnn_basic import sage_init, sage_layered
 from repro.serving import (AdaptiveConfig, AdaptiveController, HostExecutor,
                            ServingEngine, StaticScheduler)
 
-# The pinned dispatch-stats schema: ServeMetrics.summary()["store"] relies
-# on these exact counters (benchmarks/prefetch.py + fused_gather.py read
-# them) — extending the schema must update this set AND _new_stats().
-STATS_SCHEMA = {"lookup_calls", "fused_calls", "device_gathers",
-                "host_fetches", "disk_misses", "spill_reads",
-                "prefetch_hits", "prefetch_misses",
-                "cache_hits", "cache_misses", "cache_evictions"}
+# The canonical dispatch-stats schema: ServeMetrics.summary()["store"]
+# relies on these exact counters (benchmarks/prefetch.py + fused_gather.py
+# read them). One source of truth — quiverlint's schema-sync pass keeps
+# producers and docs aligned with it.
+from repro.core import STATS_SCHEMA as _SCHEMA  # noqa: E402
+
+STATS_SCHEMA = set(_SCHEMA)
 
 
 # ---------------------------------------------------------------------------

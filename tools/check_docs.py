@@ -1,112 +1,17 @@
 #!/usr/bin/env python3
-"""Docs gate (CI `docs` job): fails on broken intra-repo markdown links in
-README.md / docs/*.md and on missing docstrings in the public serving API.
+"""Thin shim: the docs gate now lives in quiverlint as the ``docs`` pass
+(one entry point, one CI invocation — see tools/quiverlint/).
 
-Pure stdlib (``ast`` + ``re``) so the CI job needs no dependencies — API
-files are parsed, never imported.
-
-    python tools/check_docs.py
+    python tools/check_docs.py  ==  python tools/quiverlint --pass docs
 """
 from __future__ import annotations
 
-import ast
-import re
 import sys
 from pathlib import Path
 
-REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-MD_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
-
-# Public serving API surface whose docstrings are load-bearing (referenced
-# from docs/architecture.md). A bare class name means "class docstring +
-# every public method"; "Class.method" pins specific methods only.
-API = {
-    "src/repro/serving/engine.py": ["ServingEngine", "MicroBatcher"],
-    "src/repro/serving/executors.py": ["Executor", "BaseExecutor",
-                                       "HostExecutor", "DeviceExecutor",
-                                       "ShardedExecutor"],
-    "src/repro/serving/router.py": ["CostModelRouter"],
-    "src/repro/serving/registry.py": ["ModelRegistry", "ModelEntry"],
-    "src/repro/serving/adaptive.py": ["AdaptiveController",
-                                      "FrequencySketch"],
-    "src/repro/core/feature_store.py": [
-        "TieredFeatureStore.lookup", "TieredFeatureStore.lookup_hops",
-        "TieredFeatureStore.swap_assignments",
-        "TieredFeatureStore.publish_stage",
-        "TieredFeatureStore.promote_misses", "DiskSpillTier"],
-    "src/repro/core/prefetch.py": ["Prefetcher"],
-    "src/repro/core/gpu_cache.py": ["GPUFeatureCache"],
-}
-
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-
-
-def check_links() -> list[str]:
-    errors = []
-    for md in MD_FILES:
-        if not md.exists():
-            errors.append(f"{md.relative_to(REPO)}: file missing")
-            continue
-        # scan the whole text, not line-by-line: [text](target) may wrap
-        # across a line break inside the bracketed text
-        text = md.read_text()
-        for m in LINK_RE.finditer(text):
-            target = m.group(1)
-            if target.startswith(("http://", "https://", "#", "mailto:")):
-                continue
-            lineno = text.count("\n", 0, m.start()) + 1
-            path = (md.parent / target.split("#", 1)[0]).resolve()
-            if not path.exists():
-                errors.append(f"{md.relative_to(REPO)}:{lineno}: "
-                              f"broken link -> {target}")
-    return errors
-
-
-def _methods(cls: ast.ClassDef):
-    for node in cls.body:
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            yield node
-
-
-def check_docstrings() -> list[str]:
-    errors = []
-    for rel, names in API.items():
-        path = REPO / rel
-        tree = ast.parse(path.read_text())
-        classes = {n.name: n for n in ast.walk(tree)
-                   if isinstance(n, ast.ClassDef)}
-        for name in names:
-            cls_name, _, meth_name = name.partition(".")
-            cls = classes.get(cls_name)
-            if cls is None:
-                errors.append(f"{rel}: class {cls_name} not found")
-                continue
-            if not ast.get_docstring(cls):
-                errors.append(f"{rel}: {cls_name} has no class docstring")
-            wanted = ([m for m in _methods(cls) if m.name == meth_name]
-                      if meth_name else
-                      [m for m in _methods(cls)
-                       if not m.name.startswith("_")])
-            if meth_name and not wanted:
-                errors.append(f"{rel}: {cls_name}.{meth_name} not found")
-            for m in wanted:
-                if not ast.get_docstring(m):
-                    errors.append(f"{rel}:{m.lineno}: {cls_name}.{m.name} "
-                                  f"has no docstring")
-    return errors
-
-
-def main() -> int:
-    errors = check_links() + check_docstrings()
-    for e in errors:
-        print(f"ERROR: {e}")
-    n_md = len(MD_FILES)
-    n_api = sum(len(v) for v in API.values())
-    print(f"checked {n_md} markdown files, {n_api} API surfaces: "
-          f"{len(errors)} problem(s)")
-    return 1 if errors else 0
-
+from quiverlint.driver import main  # noqa: E402
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(["--pass", "docs"]))

@@ -1,0 +1,24 @@
+"""quiverlint — repo-specific static analysis for the Quiver serving stack.
+
+Enforces the invariants the serving stack's guarantees rest on (see
+docs/invariants.md): lock discipline over the copy-on-write publication
+protocol, trace safety inside jit/shard_map/Pallas bodies, the zero-
+host-callback hot-path budget, stats-schema consistency, and docs
+freshness. Pure stdlib (``ast``): files are parsed, never imported — the
+same philosophy as the old ``tools/check_docs.py``, which now lives here
+as the ``docs`` pass.
+
+Run from the repo root::
+
+    python tools/quiverlint [--json] [--pass NAME ...]
+
+Suppress a single finding inline with a justification::
+
+    something_flagged()  # quiverlint: disable=rule-id why this is safe
+
+or grandfather deliberate exceptions in ``tools/quiverlint/baseline.json``
+(a baselined finding that stops firing fails the run as *stale* so the
+baseline can only shrink).
+"""
+
+__version__ = "1.0"

@@ -1,0 +1,11 @@
+"""Entry point so the suite runs as ``python tools/quiverlint``."""
+import sys
+from pathlib import Path
+
+# make `import quiverlint` work when invoked by directory path
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from quiverlint.driver import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

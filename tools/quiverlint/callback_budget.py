@@ -1,0 +1,96 @@
+"""Pass ``callback`` — the zero-host-callback hot-path budget.
+
+The paper's headline serving claim is that the steady-state hot path
+performs **zero** host callbacks per request: every cold row is resolved
+through the single designated ``TieredFeatureStore._host_fetch``
+gateway, which the prefetcher and device cache keep off the critical
+path. This pass turns that from a benchmark outcome (``flash_crowd``
+asserting 0.00 callbacks/request) into a statically-checked property:
+
+1. build an intra-repo call graph with *broad* (reference-based,
+   over-approximate) resolution, so a callback cannot hide behind
+   ``functools.partial`` or a stored method reference;
+2. BFS from the registered hot-path roots (``lookup`` / ``lookup_hops``
+   / ``GPUFeatureCache.query`` / executor ``submit``→``_collect``
+   paths), never descending *into* a gateway;
+3. flag any reached function that calls ``io_callback`` /
+   ``pure_callback`` directly and is not a gateway, with the root→…→
+   offender chain in the message.
+
+Config drift is also an error: a registered root or gateway that no
+longer exists would silently vacuate the proof, so both are verified to
+resolve, and each gateway must actually contain a direct callback call.
+"""
+from __future__ import annotations
+
+import ast
+
+from quiverlint import callgraph
+from quiverlint.driver import Finding, SourceFile
+
+RULE = "callback-budget"
+
+
+def _direct_callers(config, index: callgraph.Index
+                    ) -> dict[str, int]:
+    """{func ref: line of first direct io_callback/pure_callback call}."""
+    out: dict[str, int] = {}
+    for fn in index.funcs:
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Call):
+                name = callgraph.dotted(node.func)
+                last = name.rsplit(".", 1)[-1] if name else None
+                if last in config.callback_names and fn.ref not in out:
+                    out[fn.ref] = node.lineno
+    return out
+
+
+def run(config, files: list[SourceFile]) -> list[Finding]:
+    index = callgraph.Index(files)
+    findings: list[Finding] = []
+
+    roots: list[callgraph.FuncInfo] = []
+    for qual in sorted(config.hot_path_roots):
+        hits = index.by_qualname.get(qual, [])
+        if not hits:
+            findings.append(Finding(
+                rule=RULE, path="tools/quiverlint/repo_config.py", line=1,
+                symbol=qual,
+                message=f"registered hot-path root `{qual}` not found — "
+                        f"update the registry so the callback proof stays "
+                        f"meaningful"))
+        roots.extend(hits)
+
+    direct = _direct_callers(config, index)
+    gateways = set(config.callback_gateways)
+    for qual in sorted(gateways):
+        hits = index.by_qualname.get(qual, [])
+        if not hits:
+            findings.append(Finding(
+                rule=RULE, path="tools/quiverlint/repo_config.py", line=1,
+                symbol=qual,
+                message=f"registered callback gateway `{qual}` not found"))
+        elif not any(h.ref in direct for h in hits):
+            findings.append(Finding(
+                rule=RULE, path=hits[0].file.rel, line=hits[0].node.lineno,
+                symbol=qual,
+                message=f"gateway `{qual}` contains no direct "
+                        f"io_callback/pure_callback call — the budget "
+                        f"proof is vacuous; update the registry"))
+
+    paths = callgraph.reachable_broad(index, roots, stop=gateways)
+    by_ref = {fn.ref: fn for fn in index.funcs}
+    for ref, chain in sorted(paths.items()):
+        if ref not in direct:
+            continue
+        fn = by_ref[ref]
+        if fn.qualname in gateways:
+            continue
+        pretty = " -> ".join(r.split("::", 1)[1] for r in chain)
+        findings.append(Finding(
+            rule=RULE, path=fn.file.rel, line=direct[ref],
+            symbol=fn.qualname,
+            message=f"hot path reaches a host callback outside the "
+                    f"designated gateway(s) "
+                    f"{sorted(gateways)}: {pretty}"))
+    return findings

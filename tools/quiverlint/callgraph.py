@@ -1,0 +1,180 @@
+"""Intra-repo function index and call graph.
+
+Two resolution modes serve two different passes:
+
+* **broad** (callback-budget): any ``Name`` load or ``Attribute`` access
+  whose simple name matches a known def counts as a potential call — an
+  over-approximation, so a hot path cannot *hide* an ``io_callback``
+  behind ``functools.partial`` or a method reference.
+* **narrow** (trace-safety): only calls that resolve unambiguously —
+  bare names to same-module defs or from-imports of repo modules, and
+  ``self.method()`` within the same class — so the taint checks never
+  chase a duck-typed ``.update()`` into unrelated code.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterable
+
+from quiverlint.driver import SourceFile
+
+
+def dotted(node: ast.AST) -> str | None:
+    """Render a Name/Attribute chain as ``a.b.c`` (None if not a chain)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    """One function/method definition somewhere in the analyzed files."""
+
+    qualname: str  # "Class.method" or "func" (nesting flattened with ".")
+    name: str
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    file: SourceFile
+    class_name: str | None
+
+    @property
+    def ref(self) -> str:
+        return f"{self.file.rel}::{self.qualname}"
+
+
+class Index:
+    """All defs across the file set, plus per-module import maps."""
+
+    def __init__(self, files: list[SourceFile]):
+        self.files = files
+        self.funcs: list[FuncInfo] = []
+        self.by_name: dict[str, list[FuncInfo]] = {}
+        self.by_qualname: dict[str, list[FuncInfo]] = {}
+        # per file: local name -> "module.path:defname" for from-imports
+        self.imports: dict[str, dict[str, str]] = {}
+        for sf in files:
+            self.imports[sf.rel] = self._imports(sf)
+            self._collect(sf, sf.tree, prefix="", class_name=None)
+
+    def _imports(self, sf: SourceFile) -> dict[str, str]:
+        out: dict[str, str] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    out[alias.asname or alias.name] = \
+                        f"{node.module}:{alias.name}"
+        return out
+
+    def _collect(self, sf: SourceFile, node: ast.AST, prefix: str,
+                 class_name: str | None) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                info = FuncInfo(qualname=qual, name=child.name, node=child,
+                                file=sf, class_name=class_name)
+                self.funcs.append(info)
+                self.by_name.setdefault(child.name, []).append(info)
+                self.by_qualname.setdefault(qual, []).append(info)
+                self._collect(sf, child, prefix=f"{qual}.",
+                              class_name=class_name)
+            elif isinstance(child, ast.ClassDef):
+                self._collect(sf, child, prefix=f"{child.name}.",
+                              class_name=child.name)
+            else:
+                self._collect(sf, child, prefix=prefix,
+                              class_name=class_name)
+
+    # -- broad resolution -------------------------------------------------
+
+    def broad_edges(self, fn: FuncInfo) -> list[FuncInfo]:
+        """Every def whose simple name is referenced anywhere in ``fn``."""
+        names: set[str] = set()
+        for node in ast.walk(fn.node):
+            if node is fn.node:
+                continue
+            if isinstance(node, ast.Name):
+                names.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                names.add(node.attr)
+        out: list[FuncInfo] = []
+        for name in names:
+            for target in self.by_name.get(name, ()):
+                if target is not fn:
+                    out.append(target)
+        return out
+
+    # -- narrow resolution ------------------------------------------------
+
+    def narrow_callees(self, fn: FuncInfo) -> list[FuncInfo]:
+        out: list[FuncInfo] = []
+        for node in ast.walk(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            out.extend(self.resolve_callable(node.func, fn))
+        return out
+
+    def resolve_callable(self, expr: ast.AST,
+                         scope: FuncInfo | SourceFile) -> list[FuncInfo]:
+        """Unambiguously resolve a callable expression to defs."""
+        sf = scope.file if isinstance(scope, FuncInfo) else scope
+        if isinstance(expr, ast.Name):
+            return self._resolve_name(expr.id, sf, scope)
+        if isinstance(expr, ast.Attribute):
+            # self.method() within the same class
+            if (isinstance(expr.value, ast.Name) and expr.value.id == "self"
+                    and isinstance(scope, FuncInfo) and scope.class_name):
+                qual = f"{scope.class_name}.{expr.attr}"
+                return [f for f in self.by_qualname.get(qual, ())
+                        if f.file is sf]
+        return []
+
+    def _resolve_name(self, name: str, sf: SourceFile,
+                      scope: FuncInfo | SourceFile) -> list[FuncInfo]:
+        # nested def in the same enclosing function
+        if isinstance(scope, FuncInfo):
+            qual = f"{scope.qualname}.{name}"
+            hits = [f for f in self.by_qualname.get(qual, ()) if f.file is sf]
+            if hits:
+                return hits
+        # module-level def in the same file
+        hits = [f for f in self.by_qualname.get(name, ()) if f.file is sf]
+        if hits:
+            return hits
+        # from-import of another analyzed module
+        imp = self.imports.get(sf.rel, {}).get(name)
+        if imp:
+            mod, _, defname = imp.partition(":")
+            mod_rel = mod.replace(".", "/")
+            for f in self.by_qualname.get(defname, ()):
+                if f.file.rel.endswith(f"{mod_rel}.py"):
+                    return [f]
+        return []
+
+
+def reachable_broad(index: Index, roots: Iterable[FuncInfo],
+                    stop: set[str] = frozenset()) -> dict[str, list[str]]:
+    """BFS over broad edges; returns {func ref: path of refs from a root}.
+
+    Functions whose qualname is in ``stop`` are recorded but never
+    traversed *into* (gateway semantics).
+    """
+    paths: dict[str, list[str]] = {}
+    queue: list[FuncInfo] = []
+    for r in roots:
+        if r.ref not in paths:
+            paths[r.ref] = [r.ref]
+            queue.append(r)
+    while queue:
+        fn = queue.pop(0)
+        if fn.qualname in stop:
+            continue
+        for nxt in index.broad_edges(fn):
+            if nxt.ref not in paths:
+                paths[nxt.ref] = paths[fn.ref] + [nxt.ref]
+                queue.append(nxt)
+    return paths

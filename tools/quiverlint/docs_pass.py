@@ -1,0 +1,100 @@
+"""Pass ``docs`` — the former ``tools/check_docs.py``, now a lint pass.
+
+Behaviorally identical checks: intra-repo markdown links in README.md /
+docs/*.md must resolve, and the public serving API surface registered in
+``repo_config`` must carry docstrings (a bare class name means class
+docstring + every public method; ``Class.method`` pins one method).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from quiverlint.driver import Finding, SourceFile
+
+LINK_RULE = "docs-link"
+DOC_RULE = "docs-docstring"
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _check_links(config) -> list[Finding]:
+    findings: list[Finding] = []
+    root: Path = config.root
+    for md in config.docs.md_files(root):
+        rel = md.relative_to(root).as_posix()
+        if not md.exists():
+            findings.append(Finding(rule=LINK_RULE, path=rel, line=1,
+                                    symbol="", message="file missing"))
+            continue
+        # scan the whole text, not line-by-line: [text](target) may wrap
+        # across a line break inside the bracketed text
+        text = md.read_text()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            lineno = text.count("\n", 0, m.start()) + 1
+            path = (md.parent / target.split("#", 1)[0]).resolve()
+            if not path.exists():
+                findings.append(Finding(
+                    rule=LINK_RULE, path=rel, line=lineno, symbol="",
+                    message=f"broken link -> {target}"))
+    return findings
+
+
+def _methods(cls: ast.ClassDef):
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _check_docstrings(config, files: list[SourceFile]) -> list[Finding]:
+    findings: list[Finding] = []
+    by_rel = {sf.rel: sf for sf in files}
+    for rel, names in config.docs.api.items():
+        sf = by_rel.get(rel)
+        if sf is None:
+            path = config.root / rel
+            if not path.exists():
+                findings.append(Finding(
+                    rule=DOC_RULE, path=rel, line=1, symbol="",
+                    message="API file missing"))
+                continue
+            sf = SourceFile.load(path, config.root)
+        classes = {n.name: n for n in ast.walk(sf.tree)
+                   if isinstance(n, ast.ClassDef)}
+        for name in names:
+            cls_name, _, meth_name = name.partition(".")
+            cls = classes.get(cls_name)
+            if cls is None:
+                findings.append(Finding(
+                    rule=DOC_RULE, path=rel, line=1, symbol=cls_name,
+                    message=f"class {cls_name} not found"))
+                continue
+            if not ast.get_docstring(cls):
+                findings.append(Finding(
+                    rule=DOC_RULE, path=rel, line=cls.lineno,
+                    symbol=cls_name,
+                    message=f"{cls_name} has no class docstring"))
+            wanted = ([m for m in _methods(cls) if m.name == meth_name]
+                      if meth_name else
+                      [m for m in _methods(cls)
+                       if not m.name.startswith("_")])
+            if meth_name and not wanted:
+                findings.append(Finding(
+                    rule=DOC_RULE, path=rel, line=cls.lineno,
+                    symbol=name,
+                    message=f"{cls_name}.{meth_name} not found"))
+            for m in wanted:
+                if not ast.get_docstring(m):
+                    findings.append(Finding(
+                        rule=DOC_RULE, path=rel, line=m.lineno,
+                        symbol=f"{cls_name}.{m.name}",
+                        message=f"{cls_name}.{m.name} has no docstring"))
+    return findings
+
+
+def run(config, files: list[SourceFile]) -> list[Finding]:
+    return _check_links(config) + _check_docstrings(config, files)

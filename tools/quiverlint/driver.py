@@ -1,0 +1,273 @@
+"""Shared quiverlint driver: file loading, findings, suppressions, baseline.
+
+Passes are plain functions ``(config, files) -> list[Finding]`` registered
+in ``PASSES``. The driver parses every source file exactly once, runs the
+requested passes, applies inline suppressions and the committed baseline,
+and renders human or ``--json`` output.
+
+Exit status is non-zero when there is any active (non-baselined,
+non-suppressed) finding, any *stale* baseline entry (a grandfathered
+finding that no longer fires — the baseline may only shrink), or any
+suppression comment without a justification.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Callable, Iterable
+
+SUPPRESS_RE = re.compile(
+    r"#\s*quiverlint:\s*disable=([A-Za-z0-9_,-]+)\s*(.*)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a location.
+
+    ``key`` deliberately excludes the line number so baseline entries
+    survive unrelated edits that shift code up or down a file.
+    """
+
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    symbol: str  # qualified name of the enclosing function/class, or ""
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}|{self.path}|{self.symbol}|{self.message}"
+
+    def render(self) -> str:
+        sym = f" ({self.symbol})" if self.symbol else ""
+        return f"{self.path}:{self.line}: [{self.rule}]{sym} {self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """A parsed python file shared by all passes (parsed exactly once)."""
+
+    path: Path
+    rel: str
+    text: str
+    lines: list[str]
+    tree: ast.Module
+
+    @classmethod
+    def load(cls, path: Path, root: Path) -> "SourceFile":
+        text = path.read_text()
+        return cls(path=path, rel=path.relative_to(root).as_posix(),
+                   text=text, lines=text.splitlines(),
+                   tree=ast.parse(text, filename=str(path)))
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list[Finding]          # active: not suppressed, not baselined
+    baselined: list[Finding]         # fired but grandfathered
+    suppressed: list[Finding]        # fired but inline-disabled with reason
+    stale_baseline: list[str]        # baseline keys that no longer fire
+    files_checked: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.stale_baseline
+
+
+PassFn = Callable[["object", list[SourceFile]], list[Finding]]
+
+
+def _dedupe(findings: Iterable[Finding]) -> list[Finding]:
+    seen: set[tuple[str, int]] = set()
+    out = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        if (f.key, f.line) not in seen:
+            seen.add((f.key, f.line))
+            out.append(f)
+    return out
+
+
+def apply_suppressions(
+    findings: list[Finding], files: dict[str, SourceFile]
+) -> tuple[list[Finding], list[Finding]]:
+    """Split findings into (kept, suppressed) using inline comments.
+
+    A suppression comment applies to its own line, or — when it is the
+    only thing on the line — to the next line. A comment with no reason
+    text is itself reported as a ``bad-suppression`` finding.
+    """
+    kept: list[Finding] = []
+    suppressed: list[Finding] = []
+    bad_lines: set[tuple[str, int]] = set()
+    for f in findings:
+        sf = files.get(f.path)
+        match = None
+        if sf is not None:
+            for lineno in (f.line, f.line - 1):
+                if not 1 <= lineno <= len(sf.lines):
+                    continue
+                line = sf.lines[lineno - 1]
+                m = SUPPRESS_RE.search(line)
+                if m is None:
+                    continue
+                # an own-line comment covers the next line; a trailing
+                # comment covers only its own line
+                if lineno == f.line or line.lstrip().startswith("#"):
+                    match = (lineno, m)
+                    break
+        if match is None:
+            kept.append(f)
+            continue
+        lineno, m = match
+        rules = {r.strip() for r in m.group(1).split(",")}
+        reason = m.group(2).strip()
+        if f.rule not in rules and "all" not in rules:
+            kept.append(f)
+            continue
+        if not reason:
+            if (f.path, lineno) not in bad_lines:
+                bad_lines.add((f.path, lineno))
+                kept.append(Finding(
+                    rule="bad-suppression", path=f.path, line=lineno,
+                    symbol=f.symbol,
+                    message="suppression comment has no justification "
+                            "(write `# quiverlint: disable=RULE reason`)"))
+            kept.append(f)
+            continue
+        suppressed.append(f)
+    return kept, suppressed
+
+
+def load_baseline(path: Path) -> dict[str, str]:
+    """Return {finding key: reason} from a baseline file (empty if absent)."""
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    return {e["key"]: e.get("reason", "") for e in data.get("findings", [])}
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    data = {
+        "version": 1,
+        "findings": [
+            {"key": f.key, "reason": "grandfathered",
+             "location": f"{f.path}:{f.line}"}
+            for f in findings
+        ],
+    }
+    path.write_text(json.dumps(data, indent=2) + "\n")
+
+
+def run(config, files: list[SourceFile],
+        passes: dict[str, PassFn],
+        baseline_path: Path | None = None) -> LintResult:
+    """Run ``passes`` over ``files`` and post-process the findings."""
+    raw: list[Finding] = []
+    for fn in passes.values():
+        raw.extend(fn(config, files))
+    raw = _dedupe(raw)
+    by_rel = {sf.rel: sf for sf in files}
+    kept, suppressed = apply_suppressions(raw, by_rel)
+
+    baseline = load_baseline(baseline_path) if baseline_path else {}
+    active, baselined = [], []
+    fired_keys = set()
+    for f in kept:
+        fired_keys.add(f.key)
+        (baselined if f.key in baseline else active).append(f)
+    stale = sorted(k for k in baseline if k not in fired_keys)
+    return LintResult(findings=active, baselined=baselined,
+                      suppressed=suppressed, stale_baseline=stale,
+                      files_checked=len(files))
+
+
+def render_human(result: LintResult, pass_names: list[str]) -> str:
+    out = []
+    for f in result.findings:
+        out.append(f"ERROR: {f.render()}")
+    for key in result.stale_baseline:
+        out.append(f"ERROR: stale baseline entry (no longer fires, "
+                   f"remove it): {key}")
+    out.append(
+        f"quiverlint: {len(result.findings)} finding(s), "
+        f"{len(result.baselined)} baselined, "
+        f"{len(result.suppressed)} suppressed, "
+        f"{len(result.stale_baseline)} stale baseline entr(ies) "
+        f"across {result.files_checked} files "
+        f"[passes: {', '.join(pass_names)}]")
+    return "\n".join(out)
+
+
+def render_json(result: LintResult, pass_names: list[str]) -> str:
+    def enc(f: Finding) -> dict:
+        return {"rule": f.rule, "path": f.path, "line": f.line,
+                "symbol": f.symbol, "message": f.message, "key": f.key}
+
+    return json.dumps({
+        "ok": result.ok,
+        "passes": pass_names,
+        "files_checked": result.files_checked,
+        "findings": [enc(f) for f in result.findings],
+        "baselined": [enc(f) for f in result.baselined],
+        "suppressed": [enc(f) for f in result.suppressed],
+        "stale_baseline": result.stale_baseline,
+    }, indent=2)
+
+
+def collect_files(root: Path, globs: list[str]) -> list[SourceFile]:
+    paths: set[Path] = set()
+    for pattern in globs:
+        for p in root.glob(pattern):
+            if p.suffix == ".py" and "__pycache__" not in p.parts:
+                paths.add(p)
+    return [SourceFile.load(p, root) for p in sorted(paths)]
+
+
+def main(argv: list[str] | None = None) -> int:
+    # imported lazily so driver.py stays importable from fixture tests
+    # without pulling in every pass module
+    from quiverlint import repo_config
+
+    parser = argparse.ArgumentParser(
+        prog="quiverlint",
+        description="repo-specific static analysis for the serving stack")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="machine-readable output")
+    parser.add_argument("--root", type=Path,
+                        default=Path(__file__).resolve().parent.parent.parent,
+                        help="repository root (default: auto-detected)")
+    parser.add_argument("--baseline", type=Path, default=None,
+                        help="baseline file (default: "
+                             "tools/quiverlint/baseline.json)")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write all current findings to the baseline "
+                             "and exit 0")
+    parser.add_argument("--pass", dest="passes", action="append",
+                        choices=sorted(repo_config.PASSES),
+                        help="run only the named pass (repeatable; "
+                             "default: all)")
+    args = parser.parse_args(argv)
+
+    root = args.root.resolve()
+    config = repo_config.build(root)
+    baseline_path = (args.baseline if args.baseline is not None
+                     else root / "tools" / "quiverlint" / "baseline.json")
+    pass_names = args.passes or sorted(repo_config.PASSES)
+    passes = {name: repo_config.PASSES[name] for name in pass_names}
+
+    files = collect_files(root, config.code_globs)
+    result = run(config, files, passes, baseline_path=baseline_path)
+
+    if args.write_baseline:
+        write_baseline(baseline_path, result.findings)
+        print(f"wrote {len(result.findings)} finding(s) to {baseline_path}")
+        return 0
+
+    print(render_json(result, pass_names) if args.as_json
+          else render_human(result, pass_names))
+    return 0 if result.ok else 1

@@ -1,0 +1,111 @@
+"""Pass ``lock`` — guarded-by registry for the copy-on-write protocol.
+
+The serving stack publishes state with a strict discipline: arrays are
+replaced (never mutated) under ``_mig_lock``, counters mutate under
+``_stats_lock``, and readers take a coherent snapshot under the same
+lock. This pass encodes that discipline as a registry mapping
+``(class, field) -> lock attribute`` and flags any ``self.<field>``
+read or write outside a lexical ``with self.<lock>:`` block.
+
+``__init__`` is always exempt (no concurrent access before the object
+is published); additional per-class methods can be whitelisted for
+designated publish helpers that hold the lock by construction or are
+documented lock-held-only.
+"""
+from __future__ import annotations
+
+import ast
+
+from quiverlint.driver import Finding, SourceFile
+
+RULE = "lock-discipline"
+
+
+def run(config, files: list[SourceFile]) -> list[Finding]:
+    registry: dict[str, dict[str, str]] = config.guarded_fields
+    exempt: dict[str, set[str]] = config.lock_exempt_methods
+    findings: list[Finding] = []
+    for sf in files:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            guarded = registry.get(node.name)
+            if not guarded:
+                continue
+            skip = {"__init__"} | exempt.get(node.name, set())
+            for item in node.body:
+                if not isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if item.name in skip:
+                    continue
+                _check_method(sf, node.name, item, guarded, findings)
+    return findings
+
+
+def _lock_attrs(with_node: ast.With | ast.AsyncWith) -> set[str]:
+    out: set[str] = set()
+    for item in with_node.items:
+        expr = item.context_expr
+        if (isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id == "self"):
+            out.add(expr.attr)
+    return out
+
+
+def _check_method(sf: SourceFile, cls: str,
+                  method: ast.FunctionDef | ast.AsyncFunctionDef,
+                  guarded: dict[str, str],
+                  findings: list[Finding]) -> None:
+    symbol = f"{cls}.{method.name}"
+
+    def visit(node: ast.AST, held: frozenset[str]) -> None:
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            inner = held | _lock_attrs(node)
+            for item in node.items:
+                visit(item.context_expr, held)
+                if item.optional_vars is not None:
+                    visit(item.optional_vars, held)
+            for child in node.body:
+                visit(child, inner)
+            return
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("wait_for", "wait")
+                and isinstance(node.func.value, ast.Attribute)
+                and isinstance(node.func.value.value, ast.Name)
+                and node.func.value.value.id == "self"
+                and node.func.value.attr in held):
+            # Condition.wait_for evaluates its predicate with the
+            # condition lock re-acquired — the lambda runs under the lock
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.Lambda):
+                    visit(child.body, held)
+                else:
+                    visit(child, held)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # a nested function may run after the lock is released
+            # (callbacks, executors) — analyze it as holding nothing
+            body = node.body if isinstance(node.body, list) else [node.body]
+            for child in body:
+                visit(child, frozenset())
+            return
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr in guarded):
+            lock = guarded[node.attr]
+            if lock not in held:
+                findings.append(Finding(
+                    rule=RULE, path=sf.rel, line=node.lineno, symbol=symbol,
+                    message=f"access to `self.{node.attr}` (guarded by "
+                            f"`self.{lock}`) outside `with self.{lock}:`"))
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for stmt in method.body:
+        visit(stmt, frozenset())

@@ -1,0 +1,242 @@
+"""Pass ``schema`` — one canonical stats schema, everywhere.
+
+``STATS_SCHEMA`` in ``src/repro/core/feature_store.py`` is the single
+source of truth for the tiered store's per-request counters. This pass
+cross-checks, without importing anything:
+
+* every ``self._count(key=...)`` increment in ``TieredFeatureStore``
+  names a schema key, and every schema key is incremented somewhere
+  (a key nobody produces is dead telemetry);
+* per-class stats dicts (``GPUFeatureCache``, ``Prefetcher``,
+  ``AdaptiveController``, ``ShardedFeatureStore``) declare exactly the
+  keys their class reads/writes via ``self.stats["..."]``;
+* the store mirrors the device cache: each ``cache_<k>`` in
+  ``STATS_SCHEMA`` corresponds to a ``<k>`` in the cache's own schema;
+* docs stay in sync: every schema key appears as a ``code span`` in the
+  documentation, and the table between the
+  ``<!-- quiverlint:stats-schema -->`` markers in ``docs/invariants.md``
+  lists exactly the schema keys.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from quiverlint.driver import Finding, SourceFile
+
+RULE = "schema-sync"
+
+
+def _find_class(files: list[SourceFile], rel_suffix: str, cls_name: str
+                ) -> tuple[SourceFile, ast.ClassDef] | None:
+    for sf in files:
+        if not sf.rel.endswith(rel_suffix):
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef) and node.name == cls_name:
+                return sf, node
+    return None
+
+
+def _const_str_keys(node: ast.AST) -> set[str]:
+    return {c.value for c in ast.walk(node)
+            if isinstance(c, ast.Constant) and isinstance(c.value, str)}
+
+
+def _schema_constant(files: list[SourceFile], rel_suffix: str,
+                     const_name: str) -> tuple[SourceFile, int, set[str]] | None:
+    for sf in files:
+        if not sf.rel.endswith(rel_suffix):
+            continue
+        for node in sf.tree.body:
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets = [node.target]
+            for t in targets:
+                if isinstance(t, ast.Name) and t.id == const_name:
+                    return sf, node.lineno, _const_str_keys(node.value)
+    return None
+
+
+def _stats_decl(sf: SourceFile, cls: ast.ClassDef) -> tuple[int, set[str]] | None:
+    """Keys of ``self.stats = {...}`` (or ``= factory()``) in a class."""
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(isinstance(t, ast.Attribute) and t.attr == "stats"
+                   and isinstance(t.value, ast.Name) and t.value.id == "self"
+                   for t in node.targets):
+            continue
+        value = node.value
+        if isinstance(value, ast.Dict):
+            return node.lineno, _const_str_keys(value)
+        if isinstance(value, ast.Call) and isinstance(value.func, ast.Name):
+            fname = value.func.id
+            for fn in ast.walk(sf.tree):
+                if isinstance(fn, ast.FunctionDef) and fn.name == fname:
+                    for ret in ast.walk(fn):
+                        if isinstance(ret, ast.Return) and ret.value is not None:
+                            return node.lineno, _const_str_keys(ret.value)
+    return None
+
+
+def _stats_uses(cls: ast.ClassDef) -> dict[str, int]:
+    """{key: first line} of ``self.stats["key"]`` subscripts in a class."""
+    out: dict[str, int] = {}
+    for node in ast.walk(cls):
+        if (isinstance(node, ast.Subscript)
+                and isinstance(node.value, ast.Attribute)
+                and node.value.attr == "stats"
+                and isinstance(node.value.value, ast.Name)
+                and node.value.value.id == "self"
+                and isinstance(node.slice, ast.Constant)
+                and isinstance(node.slice.value, str)):
+            out.setdefault(node.slice.value, node.lineno)
+    return out
+
+
+def _count_kwargs(cls: ast.ClassDef) -> dict[str, int]:
+    """{key: first line} of ``self._count(key=...)`` keyword increments."""
+    out: dict[str, int] = {}
+    for node in ast.walk(cls):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "_count"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "self"):
+            for kw in node.keywords:
+                if kw.arg:
+                    out.setdefault(kw.arg, node.lineno)
+    return out
+
+
+def run(config, files: list[SourceFile]) -> list[Finding]:
+    spec = config.schema
+    findings: list[Finding] = []
+
+    found = _schema_constant(files, spec.schema_file, spec.schema_const)
+    if found is None:
+        findings.append(Finding(
+            rule=RULE, path=spec.schema_file, line=1, symbol=spec.schema_const,
+            message=f"canonical `{spec.schema_const}` constant not found "
+                    f"in {spec.schema_file}"))
+        return findings
+    schema_sf, schema_line, schema = found
+
+    # producer/consumer agreement for the store itself
+    hit = _find_class(files, spec.schema_file, spec.store_class)
+    if hit is not None:
+        sf, cls = hit
+        produced = _count_kwargs(cls)
+        for key, line in sorted(produced.items()):
+            if key not in schema:
+                findings.append(Finding(
+                    rule=RULE, path=sf.rel, line=line,
+                    symbol=f"{cls.name}._count",
+                    message=f"stats key `{key}` incremented but absent "
+                            f"from {spec.schema_const}"))
+        for key in sorted(schema - set(produced)):
+            findings.append(Finding(
+                rule=RULE, path=schema_sf.rel, line=schema_line,
+                symbol=spec.schema_const,
+                message=f"schema key `{key}` is never incremented by "
+                        f"`{cls.name}._count` (dead telemetry)"))
+
+    # per-class declared-vs-used stats keys
+    class_schemas: dict[str, set[str]] = {}
+    for rel_suffix, cls_name in spec.stats_classes:
+        hit = _find_class(files, rel_suffix, cls_name)
+        if hit is None:
+            findings.append(Finding(
+                rule=RULE, path=rel_suffix, line=1, symbol=cls_name,
+                message=f"registered stats class `{cls_name}` not found"))
+            continue
+        sf, cls = hit
+        decl = _stats_decl(sf, cls)
+        if decl is None:
+            findings.append(Finding(
+                rule=RULE, path=sf.rel, line=cls.lineno, symbol=cls_name,
+                message="no `self.stats = {...}` declaration found"))
+            continue
+        decl_line, declared = decl
+        class_schemas[cls_name] = declared
+        used = _stats_uses(cls)
+        for key, line in sorted(used.items()):
+            if key not in declared:
+                findings.append(Finding(
+                    rule=RULE, path=sf.rel, line=line, symbol=cls_name,
+                    message=f"`self.stats[{key!r}]` used but not declared "
+                            f"in the class stats dict"))
+        for key in sorted(declared - set(used)):
+            findings.append(Finding(
+                rule=RULE, path=sf.rel, line=decl_line, symbol=cls_name,
+                message=f"declared stats key `{key}` is never read or "
+                        f"written by {cls_name}"))
+
+    # store's cache_* mirror of the device-cache schema
+    if spec.cache_class in class_schemas:
+        cache_keys = class_schemas[spec.cache_class]
+        for key in sorted(schema):
+            if key.startswith("cache_") and key[len("cache_"):] not in cache_keys:
+                findings.append(Finding(
+                    rule=RULE, path=schema_sf.rel, line=schema_line,
+                    symbol=spec.schema_const,
+                    message=f"`{key}` mirrors no `{key[len('cache_'):]}` "
+                            f"counter in {spec.cache_class}"))
+
+    # docs agreement
+    findings.extend(_check_docs(config, schema))
+    return findings
+
+
+MARKER_RE = re.compile(
+    r"<!--\s*quiverlint:stats-schema\s*-->(.*?)"
+    r"<!--\s*/quiverlint:stats-schema\s*-->", re.S)
+# inside the marker block only first-column table cells count as schema
+# entries (prose in other columns may legitimately mention other spans)
+CODE_SPAN_RE = re.compile(r"^\|\s*`([A-Za-z_][A-Za-z0-9_]*)`", re.M)
+
+
+def _check_docs(config, schema: set[str]) -> list[Finding]:
+    spec = config.schema
+    findings: list[Finding] = []
+    texts: dict[str, str] = {}
+    for path in spec.doc_files(config.root):
+        if path.exists():
+            texts[path.relative_to(config.root).as_posix()] = path.read_text()
+    everywhere = "\n".join(texts.values())
+    for key in sorted(schema):
+        if f"`{key}`" not in everywhere:
+            findings.append(Finding(
+                rule=RULE, path=spec.marker_doc, line=1, symbol=key,
+                message=f"schema key `{key}` is not documented as a "
+                        f"code span in any docs page"))
+
+    marker_rel = spec.marker_doc
+    text = texts.get(marker_rel)
+    if text is None:
+        findings.append(Finding(
+            rule=RULE, path=marker_rel, line=1, symbol="stats-schema",
+            message="stats-schema doc page missing"))
+        return findings
+    m = MARKER_RE.search(text)
+    if m is None:
+        findings.append(Finding(
+            rule=RULE, path=marker_rel, line=1, symbol="stats-schema",
+            message="no `<!-- quiverlint:stats-schema -->` block found"))
+        return findings
+    line = text.count("\n", 0, m.start()) + 1
+    listed = set(CODE_SPAN_RE.findall(m.group(1)))
+    for key in sorted(schema - listed):
+        findings.append(Finding(
+            rule=RULE, path=marker_rel, line=line, symbol="stats-schema",
+            message=f"schema key `{key}` missing from the stats-schema "
+                    f"table"))
+    for key in sorted(listed - schema):
+        findings.append(Finding(
+            rule=RULE, path=marker_rel, line=line, symbol="stats-schema",
+            message=f"documented key `{key}` is not in "
+                    f"{spec.schema_const} (stale docs)"))
+    return findings

@@ -1,0 +1,336 @@
+"""Pass ``trace`` — tracing discipline inside jit/shard_map/Pallas bodies.
+
+Finds every function that JAX traces — decorated with ``@jax.jit`` (also
+via ``functools.partial``), or passed to ``jax.jit`` / ``shard_map`` /
+``pl.pallas_call`` / ``pmap`` — plus everything those bodies reach
+through unambiguous intra-repo calls, and flags host-side operations on
+traced values:
+
+* ``np.*`` calls on a traced array (silently falls back to host),
+* ``.item()`` / ``int()`` / ``float()`` / ``bool()`` coercions,
+* Python ``if`` / ``while`` on a traced value (``TracerBoolConversionError``
+  at runtime; use ``jnp.where`` / ``lax.cond``),
+* boolean-mask indexing (data-dependent shapes break static-shape
+  guarantees the shard_map exchange and Pallas grids rely on).
+
+Parameters named in ``static_argnames`` / ``static_argnums`` are *not*
+traced, and neither are parameters of reached helpers annotated with a
+scalar Python type (``int``/``bool``/``float``/``str``) — branching on
+those is legal and common (``if use_pallas:``). ``.shape`` / ``.ndim``
+/ ``.dtype`` / ``len()`` of a traced array are static and un-taint.
+Functions passed to ``io_callback`` / ``pure_callback`` run on the
+host and are excluded.
+"""
+from __future__ import annotations
+
+import ast
+
+from quiverlint import callgraph
+from quiverlint.driver import Finding, SourceFile
+
+RULE = "trace-safety"
+
+UNTAINT_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "nbytes"}
+SCALAR_ANNOTATIONS = {"int", "bool", "float", "str"}
+COERCIONS = {"int", "float", "bool"}
+
+
+def _static_from_keywords(call: ast.Call, params: list[str]) -> set[str]:
+    static: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(node.value,
+                                                                 str):
+                    static.add(node.value)
+        elif kw.arg == "static_argnums":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(node.value,
+                                                                 int):
+                    if 0 <= node.value < len(params):
+                        static.add(params[node.value])
+    return static
+
+
+def _param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda
+                 ) -> list[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _annotation_static(fn, name: str) -> bool:
+    a = fn.args if not isinstance(fn, ast.Lambda) else None
+    if a is None:
+        return False
+    for p in a.posonlyargs + a.args + a.kwonlyargs:
+        if p.arg == name and p.annotation is not None:
+            try:
+                return ast.unparse(p.annotation) in SCALAR_ANNOTATIONS
+            except Exception:
+                return False
+    return False
+
+
+def _identity_test(test: ast.AST) -> bool:
+    """True for tests that never concretize a tracer: ``x is (not) None``
+    and static container membership (``"b" in params``)."""
+    if isinstance(test, ast.BoolOp):
+        return all(_identity_test(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _identity_test(test.operand)
+    return (isinstance(test, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                    for op in test.ops))
+
+
+class _Roots:
+    """Traced entry points: (FuncInfo, static param names) pairs."""
+
+    def __init__(self, config, index: callgraph.Index):
+        self.config = config
+        self.index = index
+        self.roots: dict[str, tuple[callgraph.FuncInfo, set[str]]] = {}
+        self.lambdas: list[tuple[SourceFile, ast.Lambda]] = []
+        self.host_bodies: set[int] = set()  # id() of io_callback host fns
+        for fn in index.funcs:
+            self._from_decorators(fn)
+        for sf in index.files:
+            self._from_calls(sf)
+
+    def _add(self, fn: callgraph.FuncInfo, static: set[str]) -> None:
+        if fn.ref in self.roots:
+            self.roots[fn.ref][1].update(static)
+        else:
+            self.roots[fn.ref] = (fn, set(static))
+
+    def _is_wrapper(self, expr: ast.AST) -> bool:
+        name = callgraph.dotted(expr)
+        return name in self.config.trace_wrappers if name else False
+
+    def _from_decorators(self, fn: callgraph.FuncInfo) -> None:
+        params = _param_names(fn.node)
+        for dec in fn.node.decorator_list:
+            if self._is_wrapper(dec):
+                self._add(fn, set())
+            elif isinstance(dec, ast.Call):
+                if self._is_wrapper(dec.func):
+                    self._add(fn, _static_from_keywords(dec, params))
+                else:
+                    name = callgraph.dotted(dec.func)
+                    if (name in ("partial", "functools.partial")
+                            and dec.args and self._is_wrapper(dec.args[0])):
+                        self._add(fn, _static_from_keywords(dec, params))
+
+    def _from_calls(self, sf: SourceFile) -> None:
+        # map call sites to their innermost enclosing function for
+        # scope-aware resolution of the traced-callable argument
+        scopes: dict[int, callgraph.FuncInfo] = {}
+        for info in self.index.funcs:
+            if info.file is sf:
+                for node in ast.walk(info.node):
+                    scopes[id(node)] = info
+
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            simple = callgraph.dotted(node.func)
+            simple_last = simple.rsplit(".", 1)[-1] if simple else None
+            scope = scopes.get(id(node), sf)
+            targets = self._arg_targets(node.args[0], scope, sf)
+            if simple_last in self.config.callback_names:
+                for t in targets:
+                    self.host_bodies.add(id(t.node))
+                if isinstance(node.args[0], ast.Lambda):
+                    self.host_bodies.add(id(node.args[0]))
+                continue
+            if not self._is_wrapper(node.func):
+                continue
+            if isinstance(node.args[0], ast.Lambda):
+                self.lambdas.append((sf, node.args[0]))
+            for t in targets:
+                self._add(t, _static_from_keywords(node,
+                                                   _param_names(t.node)))
+
+    def _arg_targets(self, arg: ast.AST, scope, sf: SourceFile
+                     ) -> list[callgraph.FuncInfo]:
+        """Resolve the traced-callable argument to repo defs.
+
+        Handles a direct name, ``functools.partial(f, ...)``, and a local
+        ``kernel = partial(f, ...)`` binding one level deep.
+        """
+        hits = self.index.resolve_callable(arg, scope)
+        if hits:
+            return hits
+        exprs = [arg]
+        if (isinstance(arg, ast.Name)
+                and isinstance(scope, callgraph.FuncInfo)):
+            for node in ast.walk(scope.node):
+                if (isinstance(node, ast.Assign)
+                        and any(isinstance(t, ast.Name) and t.id == arg.id
+                                for t in node.targets)):
+                    exprs.append(node.value)
+        out: list[callgraph.FuncInfo] = []
+        for expr in exprs:
+            for node in ast.walk(expr):
+                if isinstance(node, ast.Name):
+                    out.extend(self.index.resolve_callable(node, scope))
+        return out
+
+
+def run(config, files: list[SourceFile]) -> list[Finding]:
+    index = callgraph.Index(files)
+    roots = _Roots(config, index)
+    findings: list[Finding] = []
+    done: set[int] = set()
+
+    # BFS over unambiguous calls so helpers called from traced bodies
+    # (e.g. _sample_one_hop) are held to the same discipline
+    queue: list[tuple[callgraph.FuncInfo, set[str]]] = [
+        (fn, static) for fn, static in roots.roots.values()]
+    while queue:
+        fn, static = queue.pop(0)
+        if id(fn.node) in done or id(fn.node) in roots.host_bodies:
+            continue
+        done.add(id(fn.node))
+        static = static | {p for p in _param_names(fn.node)
+                           if _annotation_static(fn.node, p)}
+        _check_function(config, fn.file, fn.node, fn.qualname, static,
+                        findings, roots.host_bodies, done)
+        for callee in index.narrow_callees(fn):
+            if id(callee.node) not in done:
+                queue.append((callee, set()))
+
+    for sf, lam in roots.lambdas:
+        if id(lam) not in done and id(lam) not in roots.host_bodies:
+            done.add(id(lam))
+            _check_function(config, sf, lam, "<lambda>", set(), findings,
+                            roots.host_bodies, done)
+    return findings
+
+
+def _check_function(config, sf: SourceFile, fn, symbol: str,
+                    static: set[str], findings: list[Finding],
+                    host_bodies: set[int], done: set[int]) -> None:
+    tainted: set[str] = {p for p in _param_names(fn)
+                         if p not in static
+                         and not _annotation_static(fn, p)}
+    masks: set[str] = set()  # names bound to boolean comparisons
+    np_aliases = config.np_aliases
+
+    def is_tainted(expr: ast.AST) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id in tainted
+        if isinstance(expr, ast.Constant):
+            return False
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in UNTAINT_ATTRS:
+                return False
+            return is_tainted(expr.value)
+        if isinstance(expr, ast.Call):
+            name = callgraph.dotted(expr.func)
+            if name == "len" or name in COERCIONS:
+                return False
+            return any(is_tainted(c) for c in ast.iter_child_nodes(expr))
+        return any(is_tainted(c) for c in ast.iter_child_nodes(expr))
+
+    def bind(target: ast.AST, value_tainted: bool, is_mask: bool) -> None:
+        for node in ast.walk(target):
+            if isinstance(node, ast.Name):
+                if value_tainted:
+                    tainted.add(node.id)
+                else:
+                    tainted.discard(node.id)
+                if is_mask:
+                    masks.add(node.id)
+                else:
+                    masks.discard(node.id)
+
+    def emit(node: ast.AST, message: str) -> None:
+        findings.append(Finding(rule=RULE, path=sf.rel, line=node.lineno,
+                                symbol=symbol, message=message))
+
+    def walk(node: ast.AST, collect: bool) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not fn:
+            # nested body (fori_loop/scan/Pallas kernel) is traced too,
+            # with its parameters (loop carries, refs) traced — unless
+            # it is an io_callback host body
+            if collect and id(node) not in host_bodies \
+                    and id(node) not in done:
+                done.add(id(node))
+                inner_sym = f"{symbol}.<locals>.{getattr(node, 'name', 'λ')}"
+                _check_function(config, sf, node, inner_sym, set(),
+                                findings, host_bodies, done)
+            return
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = node.value
+            if value is not None:
+                walk(value, collect)
+                vt = is_tainted(value)
+                mask = isinstance(value, ast.Compare) and vt
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                if isinstance(node, ast.AugAssign):
+                    vt = vt or is_tainted(node.target)
+                for t in targets:
+                    if isinstance(t, (ast.Subscript, ast.Attribute)):
+                        walk(t, collect)
+                    else:
+                        bind(t, vt, mask)
+            return
+        if isinstance(node, (ast.For, ast.comprehension)):
+            it = node.iter
+            walk(it, collect)
+            bind(node.target, is_tainted(it), False)
+            rest = ([*node.body, *node.orelse] if isinstance(node, ast.For)
+                    else list(node.ifs))
+            for child in rest:
+                walk(child, collect)
+            return
+        if collect:
+            if isinstance(node, (ast.If, ast.While)) \
+                    and not _identity_test(node.test) \
+                    and is_tainted(node.test):
+                emit(node.test, "Python control flow on a traced value "
+                                "(use jnp.where / lax.cond / lax.while_loop)")
+            if isinstance(node, ast.Call):
+                name = callgraph.dotted(node.func)
+                if name:
+                    head, last = name.split(".", 1)[0], name.rsplit(".", 1)[-1]
+                    if head in np_aliases and \
+                            any(is_tainted(a) for a in node.args):
+                        emit(node, f"host numpy call `{name}(...)` on a "
+                                   f"traced value (use jnp)")
+                    if name in COERCIONS and node.args \
+                            and is_tainted(node.args[0]):
+                        emit(node, f"`{name}()` coercion of a traced value "
+                                   f"(concretization error under jit)")
+                    if last == "item" and not node.args \
+                            and isinstance(node.func, ast.Attribute) \
+                            and is_tainted(node.func.value):
+                        emit(node, "`.item()` on a traced value "
+                                   "(host sync, fails under jit)")
+            if isinstance(node, ast.Subscript):
+                idx = node.slice
+                if (isinstance(idx, ast.Compare) and is_tainted(idx)) or \
+                        (isinstance(idx, ast.Name) and idx.id in masks):
+                    emit(node, "boolean-mask indexing on a traced value "
+                               "(data-dependent shape; use jnp.where or a "
+                               "fixed-size gather)")
+        for child in ast.iter_child_nodes(node):
+            walk(child, collect)
+
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for collect in (False, True):  # pass 1 seeds taint, pass 2 reports
+        masks_snapshot = set(masks)
+        taint_snapshot = set(tainted)
+        if collect:
+            tainted |= taint_snapshot
+            masks |= masks_snapshot
+        for stmt in body:
+            walk(stmt, collect)
