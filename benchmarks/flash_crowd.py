@@ -84,9 +84,10 @@ def _assert_bit_identical(stack, store) -> None:
          "cached == uncached == all-HOT reference")
 
 
-def _flash_hotspot(store, fap, *, size: int) -> np.ndarray:
+def flash_hotspot(store, fap, *, size: int) -> np.ndarray:
     """Cold-tier nodes the offline FAP ranked lowest: phase-1 traffic never
-    touches them, so migration leaves them cold for the flash phase."""
+    touches them, so migration leaves them cold for the flash phase (also
+    reused by ``gateway_soak`` to build its slow-tier overload stream)."""
     tier = np.asarray(store.tier_t)
     cold = np.flatnonzero(tier >= TIER_HOST)
     if cold.size == 0:
@@ -138,7 +139,7 @@ def run(dry_run: bool = False) -> dict:
             # two half-windows of n_flash requests each, 2*n_flash <
             # interval, so no control step can react anywhere inside it —
             # the second (steady-state) half is the measured window
-            hotspot = _flash_hotspot(store, stack["fap"], size=hotspot_size)
+            hotspot = flash_hotspot(store, stack["fap"], size=hotspot_size)
             p2 = np.zeros(nodes)
             p2[hotspot] = 1.0 / hotspot.size
             gen.set_seed_prob(p2)

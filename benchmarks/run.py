@@ -25,6 +25,7 @@ MODULES = [
     "fused_gather",        # fused feature-collection hot path
     "prefetch",            # cold-tier staging vs critical-path callbacks
     "flash_crowd",         # device cache vs adaptive-only under drift
+    "gateway_soak",        # SLO-aware admission vs FIFO under overload
     "multi_model",         # shared-store registry vs isolated engines
     "policy_cdf",          # Fig. 10
     "workload_drift",      # online adaptation vs frozen placement

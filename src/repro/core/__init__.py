@@ -22,9 +22,9 @@ from repro.core.placement import (PlacementPlan, TopologySpec,
                                   migration_pairs, p3_placement,
                                   quiver_placement)
 from repro.core.psgs import batch_psgs, compute_psgs, monte_carlo_psgs
-from repro.core.serving import (DEFAULT_MODEL, DynamicBatcher, MicroBatcher,
-                                Request, WorkloadGenerator, batch_seeds,
-                                pad_to_bucket)
+from repro.core.serving import (DEFAULT_MODEL, PRIORITIES, DynamicBatcher,
+                                MicroBatcher, Request, WorkloadGenerator,
+                                batch_seeds, pad_to_bucket)
 from repro.serving.engine import ServeMetrics
 from repro.serving.router import (CalibrationResult, CostModelRouter,
                                   HybridScheduler, LatencyCurve,
@@ -42,7 +42,7 @@ __all__ = [
     "CostModelRouter", "HybridScheduler",
     "StaticScheduler", "Request", "WorkloadGenerator", "DynamicBatcher",
     "MicroBatcher", "batch_seeds", "pad_to_bucket", "ServingEngine",
-    "ServeMetrics", "DEFAULT_MODEL",
+    "ServeMetrics", "DEFAULT_MODEL", "PRIORITIES",
 ]
 
 

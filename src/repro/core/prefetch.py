@@ -36,8 +36,9 @@ DISK promotion every control step)::
 from __future__ import annotations
 
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Optional
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -62,18 +63,29 @@ class Prefetcher:
             refresh every that many completed batches (standalone mode —
             the AdaptiveController path refreshes per control step instead,
             at a cadence tuned from the prefetch miss ratio).
+        refresh_every_s: wall-clock twin of ``refresh_every``: when set, a
+            completion also triggers a refresh once that many seconds (by
+            ``clock``) passed since the last one — the two cadences
+            compose, whichever fires first.
+        clock: zero-arg seconds source for the time-based cadence
+            (injectable — tests pass ``repro.testing.FakeClock``).
     """
 
     def __init__(self, store, sketch=None, *, budget: int = 1024,
-                 refresh_every: Optional[int] = None):
+                 refresh_every: Optional[int] = None,
+                 refresh_every_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
         if budget <= 0:
             raise ValueError(f"budget must be positive, got {budget}")
         self.store = store
         self.sketch = sketch
         self.budget = int(budget)
         self.refresh_every = refresh_every
+        self.refresh_every_s = refresh_every_s
+        self.clock = clock
         self.stats = {"refreshes": 0, "staged_rows": 0, "skipped": 0,
                       "batches_seen": 0}
+        self._last_refresh_t = clock()
         self._lock = threading.Lock()
         self._refresh_lock = threading.Lock()
         self._inflight: Optional[Future] = None
@@ -101,6 +113,11 @@ class Prefetcher:
             self.stats["batches_seen"] += 1
             due = (self.refresh_every is not None
                    and self.stats["batches_seen"] % self.refresh_every == 0)
+            if not due and self.refresh_every_s is not None:
+                now = self.clock()
+                due = now - self._last_refresh_t >= self.refresh_every_s
+            if due:
+                self._last_refresh_t = self.clock()
         if due:
             self.refresh_async()
             decay = getattr(self.sketch, "decay_step", None)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterator, Optional
+from typing import Callable, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -19,16 +19,27 @@ from repro.serving.executors import pad_to_bucket  # canonical home moved
 from repro.serving.registry import DEFAULT_MODEL
 
 __all__ = ["Request", "WorkloadGenerator", "DynamicBatcher", "MicroBatcher",
-           "batch_seeds", "pad_to_bucket", "DEFAULT_MODEL"]
+           "batch_seeds", "pad_to_bucket", "DEFAULT_MODEL", "PRIORITIES"]
+
+# SLO priority classes (gateway admission ordering): interactive traffic
+# outranks batch, subject to the gateway's anti-starvation aging bound.
+PRIORITIES = ("interactive", "batch")
 
 
 @dataclasses.dataclass
 class Request:
     req_id: int
     seeds: np.ndarray            # (s,) seed node ids
-    arrival: float               # seconds (perf_counter domain)
+    arrival: float               # seconds (monotonic-clock domain)
     done: Optional[float] = None
     model: str = DEFAULT_MODEL   # registry entry that serves this request
+    # SLO fields (gateway traffic): priority class, deadline RELATIVE to
+    # arrival (None = no deadline), and the terminal outcome — exactly one
+    # of {"completed", "shed_window", "shed_deadline"} once the request
+    # leaves the system
+    priority: str = "batch"
+    deadline_s: Optional[float] = None
+    outcome: Optional[str] = None
 
     @property
     def latency(self) -> float:
@@ -72,21 +83,33 @@ class WorkloadGenerator:
         self.p = p / max(p.sum(), 1e-12)
 
     def make_request(self, seeds_per_request: int = 1, *,
-                     model: str = DEFAULT_MODEL) -> Request:
+                     model: str = DEFAULT_MODEL, priority: str = "batch",
+                     deadline_s: Optional[float] = None) -> Request:
         seeds = self.rng.choice(self.num_nodes, size=seeds_per_request,
                                 p=self.p)
         self._next_id += 1
         return Request(self._next_id, seeds.astype(np.int64),
-                       time.perf_counter(), model=model)
+                       time.monotonic(), model=model, priority=priority,
+                       deadline_s=deadline_s)
 
     def stream(self, n: int, seeds_per_request: int = 1, *,
-               models: Optional[list[str]] = None) -> Iterator[Request]:
+               models: Optional[list[str]] = None,
+               priorities: Optional[Sequence[str]] = None,
+               deadlines: Optional[Sequence[Optional[float]]] = None
+               ) -> Iterator[Request]:
         """Yield ``n`` requests. ``models`` (optional) tags them round-robin
         across the given model names — the interleaved multi-model client
-        mix; ``None`` keeps the untagged single-model stream."""
+        mix; ``None`` keeps the untagged single-model stream. ``priorities``
+        / ``deadlines`` (optional, cycled round-robin in lockstep with the
+        request index) tag the SLO class and relative deadline of each
+        request — the mixed interactive+batch client mix the gateway
+        benchmarks drive."""
         for i in range(n):
             model = models[i % len(models)] if models else DEFAULT_MODEL
-            yield self.make_request(seeds_per_request, model=model)
+            pr = priorities[i % len(priorities)] if priorities else "batch"
+            dl = deadlines[i % len(deadlines)] if deadlines else None
+            yield self.make_request(seeds_per_request, model=model,
+                                    priority=pr, deadline_s=dl)
 
 
 class DynamicBatcher:
@@ -100,11 +123,15 @@ class DynamicBatcher:
 
     def __init__(self, *, deadline_s: float = 0.002,
                  psgs_budget: Optional[float] = None, max_batch: int = 1024,
-                 psgs_table: Optional[np.ndarray] = None):
+                 psgs_table: Optional[np.ndarray] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.deadline_s = deadline_s
         self.psgs_budget = psgs_budget
         self.max_batch = max_batch
         self.psgs_table = psgs_table
+        # injectable seconds source for the batching deadline (tests pass
+        # repro.testing.FakeClock instead of sleeping past deadline_s)
+        self.clock = clock
         self._pending: list[Request] = []
         self._opened: Optional[float] = None
         self._model: Optional[str] = None
@@ -118,7 +145,8 @@ class DynamicBatcher:
         return type(self)(deadline_s=self.deadline_s,
                           psgs_budget=self.psgs_budget,
                           max_batch=self.max_batch,
-                          psgs_table=self.psgs_table)
+                          psgs_table=self.psgs_table,
+                          clock=self.clock)
 
     def add(self, req: Request) -> Optional[list[Request]]:
         """Add a request; returns a closed batch if a boundary was hit (or
@@ -129,7 +157,7 @@ class DynamicBatcher:
         if self._pending and model != self._model:
             closed = self.flush()
         if self._opened is None:
-            self._opened = time.perf_counter()
+            self._opened = self.clock()
         self._model = model
         self._pending.append(req)
         if self.psgs_table is not None:
@@ -142,7 +170,7 @@ class DynamicBatcher:
         full = len(self._pending) >= self.max_batch
         over_budget = (self.psgs_budget is not None
                        and self._acc_psgs >= self.psgs_budget)
-        expired = time.perf_counter() - self._opened >= self.deadline_s
+        expired = self.clock() - self._opened >= self.deadline_s
         if full or over_budget or expired:
             return self.flush()
         return None

@@ -19,7 +19,14 @@ stages predicted cold rows into a device-side buffer so HOST/DISK reads
 leave the request critical path (see ``benchmarks/prefetch.py``).
 ``--gpu-cache`` adds the request-granularity device cache in front of the
 cold tiers (``--gpu-cache-rows`` capacity; controller-sized under
-``--adaptive`` — see ``benchmarks/flash_crowd.py``).
+``--adaptive`` — see ``benchmarks/flash_crowd.py``). ``--gateway`` puts the
+SLO-aware admission gateway in front of the engine: requests carry a
+priority class (``--priority interactive|batch|mixed``) and optional
+relative deadline (``--deadline-ms``), the queue is ordered by deadline
+slack with anti-starvation aging, hopeless requests are shed before they
+ever occupy an executor, and ``--telemetry`` prints the streaming
+queue-depth/saturation/per-class-latency samples at the end (see
+``benchmarks/gateway_soak.py``).
 """
 from __future__ import annotations
 
@@ -38,8 +45,9 @@ from repro.graph import power_law_graph
 from repro.models.gnn_basic import sage_init, sage_layered
 from repro.serving import (AdaptiveConfig, AdaptiveController,
                            CostModelRouter, DeviceExecutor, FrequencySketch,
-                           HostExecutor, MicroBatcher, ModelRegistry,
-                           ServingEngine, ShardedExecutor, StaticScheduler,
+                           GatewayConfig, HostExecutor, MicroBatcher,
+                           ModelRegistry, ServingEngine, ServingGateway,
+                           ShardedExecutor, StaticScheduler,
                            build_model_entry, calibrate_executors)
 
 # --models presets: hidden layer widths of the GraphSAGE variant each model
@@ -201,13 +209,55 @@ def make_gpu_cache(args, store, controller):
     return cache
 
 
+def make_gateway(args, engine, controller):
+    """``--gateway`` wiring shared by the single- and multi-model paths:
+    put the SLO-aware admission gateway in front of the engine and — with
+    ``--adaptive`` — hand it to the controller so each control step tunes
+    the admission window (``queue_limit``) from observed saturation and
+    deadline sheds."""
+    if not args.gateway:
+        return None
+    gw = ServingGateway(engine,
+                        config=GatewayConfig(queue_limit=args.gateway_queue))
+    if controller is not None:
+        controller.attach_gateway(gw)
+    print(f"[serve] gateway: queue_limit={args.gateway_queue}, "
+          f"priority mix {args.priority!r}"
+          + (f", deadline {args.deadline_ms:.0f} ms"
+             if args.deadline_ms is not None else ""))
+    return gw
+
+
+def priority_stream_kwargs(args) -> dict:
+    """``--priority`` / ``--deadline-ms`` → ``WorkloadGenerator.stream``
+    kwargs: class tags (cycled round-robin for ``mixed``) and the relative
+    deadline carried by interactive requests (batch requests stay
+    deadline-free so aging — not slack — is what keeps them moving)."""
+    if not args.gateway:
+        return {}
+    dl = args.deadline_ms * 1e-3 if args.deadline_ms is not None else None
+    if args.priority == "mixed":
+        return {"priorities": ("interactive", "batch"),
+                "deadlines": (dl, None)}
+    return {"priorities": (args.priority,), "deadlines": (dl,)}
+
+
 def _serve_and_report(args, engine, psgs, reqs, controller,
-                      prefetcher=None, cache=None) -> None:
+                      prefetcher=None, cache=None, gateway=None) -> None:
     """Shared tail of the single- and multi-model launcher paths: warmup,
-    the optional micro-batched stream (with ``--adapt-micro`` attachment)
-    or pre-formed batches, then the JSON report."""
+    then the gateway path (per-request SLO admission), the optional
+    micro-batched stream (with ``--adapt-micro`` attachment) or pre-formed
+    batches, then the JSON report."""
     engine.warmup([reqs[0]])
-    if args.micro_batch > 0:
+    if gateway is not None:
+        metrics = gateway.serve(reqs)
+        print("[serve] gateway:", json.dumps(gateway.report()))
+        if args.telemetry:
+            samples = gateway.telemetry_samples()
+            print(f"[serve] telemetry: {len(samples)} samples, last 5:")
+            for s in samples[-5:]:
+                print("  ", json.dumps(s))
+    elif args.micro_batch > 0:
         # stream path: per-request ingest, then the PSGS-aware coalescing
         # stage feeds the fused gather super-batches under its deadline
         from repro.core import DynamicBatcher
@@ -272,10 +322,12 @@ def serve_multi_model(args, fanouts, graph, psgs, fap, store, gen) -> None:
     cache = make_gpu_cache(args, store, controller)
     engine = ServingEngine(registry, max_inflight=args.max_inflight,
                            admission=args.admission, hooks=hooks)
+    gateway = make_gateway(args, engine, controller)
     reqs = list(gen.stream(args.requests, seeds_per_request=args.batch,
-                           models=list(specs)))
+                           models=list(specs),
+                           **priority_stream_kwargs(args)))
     _serve_and_report(args, engine, psgs, reqs, controller, prefetcher,
-                      cache)
+                      cache, gateway)
 
 
 def main() -> None:
@@ -351,6 +403,27 @@ def main() -> None:
     p.add_argument("--gpu-cache-rows", type=int, default=2048,
                    help="device-cache row capacity (initial capacity under "
                         "--adaptive)")
+    p.add_argument("--gateway", action="store_true",
+                   help="SLO-aware admission gateway in front of the "
+                        "engine: priority classes, deadline-slack queue "
+                        "ordering with anti-starvation aging, and "
+                        "shed-before-dispatch for hopeless requests")
+    p.add_argument("--gateway-queue", type=int, default=256,
+                   help="gateway admission-queue depth bound (tuned live "
+                        "under --adaptive)")
+    p.add_argument("--priority", default="batch",
+                   choices=["interactive", "batch", "mixed"],
+                   help="priority class tagged on the request stream "
+                        "(mixed = alternating interactive/batch; needs "
+                        "--gateway)")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="relative deadline carried by interactive requests "
+                        "(mixed keeps batch requests deadline-free; needs "
+                        "--gateway)")
+    p.add_argument("--telemetry", action="store_true",
+                   help="print the gateway's streaming telemetry "
+                        "(queue depth, saturation, per-class latency "
+                        "percentiles) after serving (needs --gateway)")
     p.add_argument("--spill-path", default=None,
                    help="write DISK-tier rows to an np.memmap spill file at "
                         "this path (the real cold store); omit to keep them "
@@ -360,6 +433,13 @@ def main() -> None:
     if args.adapt_micro and not (args.adaptive and args.micro_batch > 0):
         raise SystemExit("--adapt-micro needs --adaptive and "
                          "--micro-batch > 0")
+    if not args.gateway and (args.priority != "batch" or args.telemetry
+                             or args.deadline_ms is not None):
+        raise SystemExit("--priority/--deadline-ms/--telemetry need "
+                         "--gateway")
+    if args.gateway and args.micro_batch > 0:
+        raise SystemExit("--gateway dispatches per request (admission "
+                         "ordering is the point); drop --micro-batch")
 
     graph, feats, psgs, fap, store, gen, infer_fn = build_stack(
         nodes=args.nodes, avg_degree=args.avg_degree, d_feat=args.d_feat,
@@ -420,9 +500,11 @@ def main() -> None:
     engine = ServingEngine(executors, router,
                            max_inflight=args.max_inflight,
                            admission=args.admission, hooks=hooks)
-    reqs = list(gen.stream(args.requests, seeds_per_request=args.batch))
+    gateway = make_gateway(args, engine, controller)
+    reqs = list(gen.stream(args.requests, seeds_per_request=args.batch,
+                           **priority_stream_kwargs(args)))
     _serve_and_report(args, engine, psgs, reqs, controller, prefetcher,
-                      cache)
+                      cache, gateway)
 
 
 if __name__ == "__main__":

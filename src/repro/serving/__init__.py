@@ -13,12 +13,17 @@ package):
                   calibrated router (the single-model API is the 1-entry
                   special case)
     engine.py     ServingEngine: admission control (global across models),
-                  per-batch futures, per-model metrics, telemetry hooks
+                  per-batch futures, per-model + per-class metrics,
+                  telemetry hooks
+    gateway.py    ServingGateway: SLO-aware admission in front of the
+                  engine — priority classes, deadline-slack queue ordering
+                  with anti-starvation aging, shed-before-dispatch, and a
+                  pollable streaming-telemetry endpoint
     adaptive.py   online workload adaptation: decayed seed-frequency sketch
                   (shared across models), live FAP re-placement (bounded
-                  tier migration), per-model router drift refit, and
-                  micro-batch auto-tuning (AdaptiveController plugs into
-                  engine hooks)
+                  tier migration), per-model router drift refit,
+                  micro-batch auto-tuning, and gateway admission-window
+                  tuning (AdaptiveController plugs into engine hooks)
 
 To add a new executor: subclass ``BaseExecutor``, implement
 ``process(seeds) -> one output row per seed``, calibrate it with
@@ -36,8 +41,11 @@ from repro.serving.router import (POLICIES, CalibrationResult,
                                   calibrate_executors)
 from repro.serving.registry import (DEFAULT_MODEL, ModelEntry, ModelRegistry,
                                     build_model_entry)
-from repro.serving.engine import (MicroBatcher, ModelStats, ServeMetrics,
+from repro.serving.engine import (CLASS_SAMPLE_SCHEMA, ClassStats,
+                                  MicroBatcher, ModelStats, ServeMetrics,
                                   ServingEngine)
+from repro.serving.gateway import (GATEWAY_SCHEMA, TELEMETRY_SAMPLE_SCHEMA,
+                                   GatewayConfig, ServingGateway)
 from repro.serving.adaptive import (AdaptiveConfig, AdaptiveController,
                                     FrequencySketch, curve_drift)
 
@@ -47,6 +55,9 @@ __all__ = [
     "CalibrationResult", "calibrate", "calibrate_executors",
     "CostModelRouter", "HybridScheduler", "StaticScheduler",
     "DEFAULT_MODEL", "ModelEntry", "ModelRegistry", "build_model_entry",
-    "ServingEngine", "ServeMetrics", "ModelStats", "MicroBatcher",
+    "ServingEngine", "ServeMetrics", "ModelStats", "ClassStats",
+    "CLASS_SAMPLE_SCHEMA", "MicroBatcher",
+    "ServingGateway", "GatewayConfig", "GATEWAY_SCHEMA",
+    "TELEMETRY_SAMPLE_SCHEMA",
     "AdaptiveConfig", "AdaptiveController", "FrequencySketch", "curve_drift",
 ]

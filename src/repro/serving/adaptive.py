@@ -152,6 +152,15 @@ class AdaptiveConfig:
     cache_headroom: float = 1.25   # cache target: headroom × cold working set
     cadence_miss_ratio: float = 0.25  # miss ratio above which cadence snaps
     #                                   back to refreshing every step
+    # gateway admission tuning (active when a ServingGateway is attached):
+    # per control step, nudge the gateway's queue_limit an `admission_step`
+    # fraction toward a target set by the interval's deadline sheds (halve —
+    # requests are going stale while queued, refuse them at admission
+    # instead) or by slack saturation (relax toward the cap), clamped to
+    # `queue_limit_bounds`
+    admission_step: float = 0.5
+    queue_limit_bounds: tuple[int, int] = (16, 4096)
+    admission_sat_low: float = 0.5  # saturation below which the window relaxes
 
 
 def curve_drift(old: LatencyCurve, new: LatencyCurve) -> float:
@@ -211,10 +220,13 @@ class AdaptiveController:
         self.stats = {"steps": 0, "migrated_rows": 0, "refits": 0,
                       "batches_seen": 0, "micro_tunings": 0,
                       "promoted_rows": 0, "prefetch_refreshes": 0,
-                      "cold_tunings": 0, "last_drift": {}}
+                      "cold_tunings": 0, "admission_tunings": 0,
+                      "last_drift": {}}
         self.prefetcher = None
         if prefetcher is not None:
             self.attach_prefetcher(prefetcher)
+        self.gateway = None
+        self._last_gateway_shed = 0
         self._since_step = 0
         # cold-path feedback state: last store-stats snapshot (interval
         # deltas), current prefetch refresh cadence (in control steps) and
@@ -248,6 +260,14 @@ class AdaptiveController:
         self.prefetcher = prefetcher
         if prefetcher is not None:
             prefetcher.sketch = self.sketch
+        return self
+
+    def attach_gateway(self, gateway) -> "AdaptiveController":
+        """Attach the :class:`~repro.serving.gateway.ServingGateway` whose
+        admission window (``config.queue_limit``) the control step may
+        tighten from observed saturation and deadline sheds; returns the
+        controller for chaining."""
+        self.gateway = gateway
         return self
 
     # -- engine hook protocol ------------------------------------------------
@@ -320,13 +340,15 @@ class AdaptiveController:
 
         Returns:
             ``{"migrated_rows", "refits", "pending", "micro",
-            "promoted_rows", "prefetched", "cold"}`` — rows moved this
-            step, curves swapped, nodes still off their target tier (0
-            means the placement has converged for this workload), the
-            micro-batcher bounds after tuning (``None`` when no
+            "promoted_rows", "prefetched", "cold", "admission"}`` — rows
+            moved this step, curves swapped, nodes still off their target
+            tier (0 means the placement has converged for this workload),
+            the micro-batcher bounds after tuning (``None`` when no
             micro-batcher is attached), miss-driven DISK rows promoted,
             whether a prefetch refresh was kicked off (subject to the
-            tuned cadence), and the :meth:`tune_cold_path` sizing result.
+            tuned cadence), the :meth:`tune_cold_path` sizing result, and
+            the :meth:`tune_admission` gateway-window result (``None``
+            when no gateway is attached).
         """
         with self._step_lock:
             target, fap = self.target_plan()
@@ -345,6 +367,7 @@ class AdaptiveController:
             # close the prefetch feedback loop BEFORE the refresh so the
             # freshly sized staging budget shapes this step's stage
             cold = self.tune_cold_path()
+            admission = self.tune_admission()
             prefetched = False
             if self.prefetcher is not None:
                 self._steps_since_refresh += 1
@@ -361,9 +384,11 @@ class AdaptiveController:
                 self.stats["migrated_rows"] += moved + promoted
                 self.stats["promoted_rows"] += promoted
                 self.stats["prefetch_refreshes"] += int(prefetched)
+                self.stats["admission_tunings"] += int(admission is not None)
             return {"migrated_rows": moved, "refits": refits,
                     "micro": micro, "promoted_rows": promoted,
                     "prefetched": prefetched, "cold": cold,
+                    "admission": admission,
                     "pending": int((target.tier != self.store.plan.tier)
                                    .sum())}
 
@@ -436,6 +461,47 @@ class AdaptiveController:
         with self._lock:
             self.stats["cold_tunings"] += 1
         return out
+
+    def tune_admission(self) -> Optional[dict]:
+        """Tighten or relax the attached gateway's admission window.
+
+        Per control step: when the interval saw deadline sheds (requests
+        going stale while queued, or hopeless at admission), the gateway's
+        ``queue_limit`` is nudged an ``admission_step`` fraction toward
+        half its current value — a shorter queue turns late dequeue-time
+        sheds into cheap admission-time refusals. When the interval was
+        shed-free and engine saturation is below ``admission_sat_low``,
+        the window relaxes toward the upper bound. Clamped to
+        ``queue_limit_bounds`` either way; the gateway reads
+        ``config.queue_limit`` per submit, so the nudge takes effect
+        immediately (plain attribute write, no torn state).
+
+        Returns:
+            ``{"queue_limit", "saturation", "deadline_sheds"}`` after the
+            nudge, or ``None`` when no gateway is attached.
+        """
+        gw = self.gateway
+        if gw is None:
+            return None
+        cfg = self.config
+        step = float(np.clip(cfg.admission_step, 0.0, 1.0))
+        lo, hi = cfg.queue_limit_bounds
+        rep = gw.report()
+        shed_dl = int(rep.get("shed_deadline", 0))
+        dl_delta = max(0, shed_dl - self._last_gateway_shed)
+        self._last_gateway_shed = shed_dl
+        saturation = float(rep.get("saturation", 0.0))
+        cur = int(gw.config.queue_limit)
+        if dl_delta > 0:
+            target = max(lo, cur // 2)
+        elif saturation < cfg.admission_sat_low:
+            target = hi
+        else:
+            target = cur
+        new = int(np.clip(round(cur + step * (target - cur)), lo, hi))
+        gw.config.queue_limit = new
+        return {"queue_limit": new, "saturation": saturation,
+                "deadline_sheds": dl_delta}
 
     def refit_curves(self) -> int:
         """Refit curves from live samples, per ``(model, executor)``; swap

@@ -32,7 +32,7 @@ import inspect
 import threading
 import time
 from concurrent.futures import Future
-from typing import Any, Iterable, Mapping, Optional, Sequence
+from typing import Any, Callable, Iterable, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -101,18 +101,22 @@ class MicroBatcher:
 
     def __init__(self, *, deadline_s: float = 0.004, max_seeds: int = 256,
                  psgs_budget: Optional[float] = None,
-                 psgs_table: Optional[np.ndarray] = None):
+                 psgs_table: Optional[np.ndarray] = None,
+                 clock: Callable[[], float] = time.monotonic):
         """Args:
             deadline_s: max time a closed batch may wait for company.
             max_seeds: seed-count bound of a super-batch.
             psgs_budget: accumulated-PSGS bound (needs ``psgs_table``);
                 ``None`` disables the workload-aware close condition.
             psgs_table: ``(N,)`` per-seed PSGS table for the budget.
+            clock: zero-arg seconds source for the coalescing deadline
+                (injectable — tests pass ``repro.testing.FakeClock``).
         """
         self.deadline_s = float(deadline_s)
         self.max_seeds = int(max_seeds)
         self.psgs_budget = psgs_budget
         self.psgs_table = psgs_table
+        self.clock = clock
         self._pending: list = []
         self._opened: Optional[float] = None
         self._model: Optional[str] = None
@@ -130,7 +134,8 @@ class MicroBatcher:
         return type(self)(deadline_s=self.deadline_s,
                           max_seeds=self.max_seeds,
                           psgs_budget=self.psgs_budget,
-                          psgs_table=self.psgs_table)
+                          psgs_table=self.psgs_table,
+                          clock=self.clock)
 
     def add(self, batch: list) -> Optional[list]:
         """Queue one closed batch; return a super-batch if a bound was hit.
@@ -150,7 +155,7 @@ class MicroBatcher:
         flushed = None
         if self._pending and model != self._model:
             flushed = self.flush()
-        now = time.perf_counter()
+        now = self.clock()
         if self._opened is None:
             self._opened = now
         self._model = model
@@ -195,6 +200,7 @@ class ModelStats:
 
     requests: int = 0
     shed: int = 0
+    shed_deadline: int = 0
     latencies: list[float] = dataclasses.field(default_factory=list)
     routed: dict[str, int] = dataclasses.field(default_factory=dict)
     exec_latencies: dict[str, list[float]] = dataclasses.field(
@@ -210,9 +216,48 @@ class ModelStats:
     def summary(self) -> dict:
         """Per-model report block (requests/shed, p50/p99, routing)."""
         return {"requests": self.requests, "shed": self.shed,
+                "shed_deadline": self.shed_deadline,
                 "p50_ms": self.percentile(0.5) * 1e3,
                 "p99_ms": self.percentile(0.99) * 1e3,
                 "routed": dict(self.routed)}
+
+
+# Pinned key set of every per-priority-class block — `ClassStats.summary()`
+# and the `classes` entries of gateway telemetry samples both carry exactly
+# these keys (cross-checked by quiverlint's schema pass against the marked
+# table in docs/invariants.md and by tests/test_gateway.py).
+CLASS_SAMPLE_SCHEMA = ("requests", "shed_window", "shed_deadline",
+                       "p50_ms", "p95_ms", "p99_ms")
+
+
+@dataclasses.dataclass
+class ClassStats:
+    """Per-priority-class slice of :class:`ServeMetrics` (SLO view): how
+    many requests of this class completed, how many were shed at the
+    admission window vs. for a hopeless deadline, and the class's latency
+    distribution. Keys of :meth:`summary` are pinned by
+    ``CLASS_SAMPLE_SCHEMA``."""
+
+    requests: int = 0
+    shed_window: int = 0
+    shed_deadline: int = 0
+    latencies: list[float] = dataclasses.field(default_factory=list)
+
+    def percentile(self, q: float) -> float:
+        """Latency quantile over this class's completed requests (0.0 when
+        none completed)."""
+        if not self.latencies:
+            return 0.0
+        return float(np.quantile(np.asarray(self.latencies), q))
+
+    def summary(self) -> dict:
+        """Per-class report block — keys exactly ``CLASS_SAMPLE_SCHEMA``."""
+        return {"requests": self.requests,
+                "shed_window": self.shed_window,
+                "shed_deadline": self.shed_deadline,
+                "p50_ms": self.percentile(0.5) * 1e3,
+                "p95_ms": self.percentile(0.95) * 1e3,
+                "p99_ms": self.percentile(0.99) * 1e3}
 
 
 def _exec_key(model: str, name: str) -> str:
@@ -228,17 +273,25 @@ class ServeMetrics:
     finished: float = 0.0
     requests: int = 0
     shed: int = 0
+    shed_deadline: int = 0
     routed: dict[str, int] = dataclasses.field(default_factory=dict)
     # per-model breakdowns (aggregate fields above are preserved: they sum
     # over models, and executor names repeated across models merge in
     # ``routed``); ``store_stats`` carries the shared stores' fused-gather
-    # dispatch counters snapshotted at the end of the run
+    # dispatch counters snapshotted at the end of the run; ``classes`` the
+    # per-priority-class SLO breakdown (gateway traffic — plain runs land
+    # everything in the default "batch" class)
     models: dict[str, ModelStats] = dataclasses.field(default_factory=dict)
+    classes: dict[str, ClassStats] = dataclasses.field(default_factory=dict)
     store_stats: dict[str, dict] = dataclasses.field(default_factory=dict)
 
     def model(self, name: str) -> ModelStats:
         """This model's stats slice (created on first touch)."""
         return self.models.setdefault(name, ModelStats())
+
+    def for_class(self, name: str) -> ClassStats:
+        """This priority class's stats slice (created on first touch)."""
+        return self.classes.setdefault(name, ClassStats())
 
     # backwards-compatible views of the two-executor counters
     @property
@@ -289,10 +342,12 @@ class ServeMetrics:
                 "max_ms": float(lat.max() * 1e3),
                 "pct_in_400ms": float((lat < 0.4).mean()) if served else 0.0,
                 "shed": self.shed,
+                "shed_deadline": self.shed_deadline,
                 "routed": dict(self.routed),
                 "routed_host": self.routed_host,
                 "routed_device": self.routed_device,
                 "models": {m: s.summary() for m, s in self.models.items()},
+                "classes": {c: s.summary() for c, s in self.classes.items()},
                 "executors": self.executor_percentiles(),
                 "store": {k: dict(v) for k, v in self.store_stats.items()}}
 
@@ -317,7 +372,8 @@ class ServingEngine:
                              | ModelRegistry | None) = None,
                  router=None, *, registry: Optional[ModelRegistry] = None,
                  max_inflight: int = 64, admission: str = "wait",
-                 hooks: Sequence = ()):
+                 hooks: Sequence = (),
+                 clock: Callable[[], float] = time.monotonic):
         if isinstance(executors, ModelRegistry):
             if router is not None or registry is not None:
                 raise ValueError("pass either a ModelRegistry or "
@@ -344,6 +400,10 @@ class ServingEngine:
         # accept (name, seeds[, model]) — the model tag is passed when the
         # hook's signature takes it.
         self.hooks = list(hooks)
+        # injectable seconds source: every timestamp the engine takes
+        # (arrival re-stamps, submit/complete times, run bounds) comes from
+        # here, so deadline tests drive a FakeClock instead of sleeping
+        self.clock = clock
         self.max_inflight = int(max_inflight)
         self._window = threading.BoundedSemaphore(self.max_inflight)
         self._lock = threading.Lock()
@@ -414,9 +474,7 @@ class ServingEngine:
         model = _batch_model(batch)
         entry = self.registry.get(model)
         if not self._window.acquire(blocking=self.admission == "wait"):
-            with self._lock:
-                self._metrics.shed += len(batch)
-                self._metrics.model(model).shed += len(batch)
+            self.record_shed(batch, model)
             return None
         with self._lock:         # bind this run: stragglers from a failed
             metrics = self._metrics  # run must not pollute the next run
@@ -428,7 +486,7 @@ class ServingEngine:
             # work and load-aware estimates see post-admission inflight
             seeds = _batch_seeds(batch)
             name = entry.router.route(seeds)
-            submitted_at = time.perf_counter()
+            submitted_at = self.clock()
             fut = entry.executors[name].submit(seeds)
         except BaseException:
             if name is not None:
@@ -447,11 +505,44 @@ class ServingEngine:
                                      submitted_at))
         return fut
 
+    def record_shed(self, batch: Sequence, model: Optional[str] = None, *,
+                    reason: str = "window") -> None:
+        """Count a rejected batch in the current run's metrics and stamp
+        every request's ``outcome``.
+
+        ``reason="window"`` is the admission-window drop (counted in
+        ``shed``, outcome ``shed_window``); ``reason="deadline"`` is the
+        SLO-aware gateway's hopeless-slack drop (counted in
+        ``shed_deadline``, outcome ``shed_deadline`` — the request never
+        occupied an executor). Both also land in the per-model and
+        per-priority-class breakdowns.
+        """
+        if reason not in ("window", "deadline"):
+            raise ValueError(f"reason must be 'window' or 'deadline', "
+                             f"got {reason!r}")
+        if model is None:
+            model = _batch_model(batch)
+        with self._lock:
+            metrics = self._metrics
+            ms = metrics.model(model)
+            for r in batch:
+                cs = metrics.for_class(getattr(r, "priority", "batch"))
+                if reason == "deadline":
+                    metrics.shed_deadline += 1
+                    ms.shed_deadline += 1
+                    cs.shed_deadline += 1
+                    r.outcome = "shed_deadline"
+                else:
+                    metrics.shed += 1
+                    ms.shed += 1
+                    cs.shed_window += 1
+                    r.outcome = "shed_window"
+
     def _complete(self, fut: Future, batch: list, name: str, model: str,
                   metrics: ServeMetrics, seeds: np.ndarray,
                   submitted_at: float) -> None:
         self._window.release()
-        now = time.perf_counter()
+        now = self.clock()
         with self._lock:
             if fut.exception() is not None:
                 if self._error is None:
@@ -460,8 +551,12 @@ class ServingEngine:
                 ms = metrics.model(model)
                 for r in batch:
                     r.done = now
+                    r.outcome = "completed"
                     metrics.latencies.append(r.latency)
                     ms.latencies.append(r.latency)
+                    cs = metrics.for_class(getattr(r, "priority", "batch"))
+                    cs.requests += 1
+                    cs.latencies.append(r.latency)
                 metrics.requests += len(batch)
                 metrics.routed[name] = metrics.routed.get(name, 0) + 1
                 ms.requests += len(batch)
@@ -491,12 +586,45 @@ class ServingEngine:
         if err is not None:
             raise err
 
+    # -- live load view (the gateway's dispatch gate + telemetry feed) -------
+    @property
+    def inflight(self) -> int:
+        """Batches admitted but not yet fully accounted (monotonic view of
+        the admission window's occupancy)."""
+        with self._acct:
+            return self._inflight_batches
+
+    @property
+    def saturation(self) -> float:
+        """``inflight ÷ max_inflight`` — 1.0 means the window is full and
+        the next submit blocks or sheds."""
+        return self.inflight / max(self.max_inflight, 1)
+
+    def class_summaries(self) -> dict[str, dict]:
+        """Live per-priority-class blocks of the current run (keys of each
+        block are ``CLASS_SAMPLE_SCHEMA``) — safe to poll mid-run."""
+        with self._lock:
+            return {c: cs.summary() for c, cs in self._metrics.classes.items()}
+
     # -- serving loops (drop-in for the old pipeline API) --------------------
     def _reset(self) -> ServeMetrics:
         metrics = ServeMetrics()
-        metrics.started = time.perf_counter()
+        metrics.started = self.clock()
         with self._lock:
             self._metrics = metrics
+        return metrics
+
+    def begin_run(self) -> ServeMetrics:
+        """Open a fresh measured run and return its metrics object — for
+        callers (the gateway, by-hand tests) that drive ``submit_batch``
+        directly instead of through :meth:`run`/:meth:`serve_stream`."""
+        return self._reset()
+
+    def end_run(self, metrics: ServeMetrics) -> ServeMetrics:
+        """Close a run opened with :meth:`begin_run`: stamp the wall-clock
+        end and snapshot the shared stores' dispatch counters."""
+        metrics.finished = self.clock()
+        metrics.store_stats = self._store_stats()
         return metrics
 
     def _store_stats(self) -> dict[str, dict]:
@@ -572,7 +700,7 @@ class ServingEngine:
             for r in requests:
                 if gap_s:
                     time.sleep(gap_s)
-                r.arrival = time.perf_counter()
+                r.arrival = self.clock()
                 b, m = stages(getattr(r, "model", DEFAULT_MODEL))
                 out = b.add(r)
                 if out and m is not None:
@@ -599,8 +727,7 @@ class ServingEngine:
             # stamp even when drain() re-raises an executor failure, so a
             # partially-failed run reports throughput over real wall time
             # instead of dividing by finished=0
-            metrics.finished = time.perf_counter()
-            metrics.store_stats = self._store_stats()
+            self.end_run(metrics)
         return metrics
 
     def run(self, batches: Sequence[list], *,
@@ -614,14 +741,13 @@ class ServingEngine:
             for b in batches:
                 if pace_s:
                     time.sleep(pace_s)
-                now = time.perf_counter()
+                now = self.clock()
                 for r in b:
                     r.arrival = now
                 self.submit_batch(b)
             self.drain()
         finally:
-            metrics.finished = time.perf_counter()
-            metrics.store_stats = self._store_stats()
+            self.end_run(metrics)
         return metrics
 
     def warmup(self, batch, *, rounds: int = 2) -> None:

@@ -135,6 +135,11 @@ class ModelRegistry:
             raise KeyError(f"unknown model {name!r}; registered: "
                            f"{list(self._entries)}") from None
 
+    def router_for(self, name: str = DEFAULT_MODEL):
+        """The router serving ``name`` — the gateway's slack-estimation
+        handle (``router.estimate_seconds`` when the router offers it)."""
+        return self.get(name).router
+
     @property
     def names(self) -> list[str]:
         """Registered model names, in registration order."""

@@ -344,6 +344,26 @@ class CostModelRouter:
             est *= 1.0 + ex.inflight / max(ex.capacity, 1)
         return est
 
+    def estimate_seconds(self, seeds: np.ndarray) -> float:
+        """Best-case service-time estimate of a batch: the minimum
+        policy-selected estimate over its eligible executors — the number
+        the SLO gateway subtracts from a request's deadline to order the
+        admission queue by slack.
+
+        Args:
+            seeds: ``(B,)`` seed ids of the batch (``-1`` padding ignored).
+
+        Returns:
+            Estimated seconds on the cheapest eligible executor (including
+            load-aware inflation when enabled), or ``0.0`` when no curve
+            has been fit yet — an optimistic gateway never sheds on a
+            missing estimate.
+        """
+        if not self._curves:
+            return 0.0
+        q = self.batch_cost(seeds)
+        return min(self.estimate(name, q) for name in self._eligible(seeds))
+
     def crossover(self, a: str, b: str, *, lo: Optional[float] = None,
                   hi: Optional[float] = None, grid_points: int = 512
                   ) -> float:

@@ -1,0 +1,10 @@
+"""Deterministic test infrastructure (fake clocks — no sleeps in tests).
+
+Anything here is importable from production code paths only as a default
+argument *type*, never as a default *value*: runtime components default
+to ``time.monotonic`` and accept any zero-arg float callable, so this
+package stays test-only at runtime.
+"""
+from repro.testing.clock import FakeClock
+
+__all__ = ["FakeClock"]

@@ -225,9 +225,11 @@ def test_micro_batcher_coalesces_until_max_seeds():
 
 
 def test_micro_batcher_deadline_closes():
-    mb = MicroBatcher(deadline_s=0.01, max_seeds=10**6)
+    from repro.testing import FakeClock
+    clk = FakeClock()
+    mb = MicroBatcher(deadline_s=0.01, max_seeds=10**6, clock=clk)
     assert mb.add([_req(0)]) is None
-    time.sleep(0.02)
+    clk.advance(0.02)
     out = mb.add([_req(1)])                   # deadline hit at add time
     assert out is not None and len(out) == 2
 

@@ -1,0 +1,428 @@
+"""SLO serving gateway: FakeClock-driven deadline/aging semantics, the
+three-way outcome partition, telemetry schema/monotonicity, adaptive
+admission tuning, and the BENCH row-schema pin of gateway_soak.
+
+Every timing-sensitive test here injects `repro.testing.FakeClock` and
+gates executors on `threading.Event` — there is deliberately no
+`time.sleep` anywhere in this module (the flake class the injectable
+clock exists to kill)."""
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core import (DEFAULT_MODEL, PRIORITIES, DynamicBatcher,
+                        Prefetcher, Request, WorkloadGenerator)
+from repro.serving import (CLASS_SAMPLE_SCHEMA, GATEWAY_SCHEMA,
+                           TELEMETRY_SAMPLE_SCHEMA, AdaptiveConfig,
+                           AdaptiveController, ClassStats, CostModelRouter,
+                           GatewayConfig, LatencyCurve, ModelRegistry,
+                           ServingEngine, ServingGateway, StaticScheduler)
+from repro.testing import FakeClock
+
+
+# ---------------------------------------------------------------------------
+# Fakes: gateway semantics need executors that block on command, not timers
+# ---------------------------------------------------------------------------
+class GatedExecutor:
+    """Executor whose work blocks until `gate` is set (deterministic
+    occupancy without sleeping)."""
+    kind = "device"
+
+    def __init__(self, name, *, capacity=2, gate=None, d_out=4):
+        self.name = name
+        self.capacity = capacity
+        self.gate = gate
+        self.d_out = d_out
+        self.batches: list[np.ndarray] = []
+        self._pool = ThreadPoolExecutor(max_workers=capacity)
+
+    def cost(self, seeds):
+        return float((np.asarray(seeds) >= 0).sum())
+
+    def _work(self, seeds):
+        if self.gate is not None:
+            self.gate.wait()
+        return np.zeros((len(seeds), self.d_out), np.float32)
+
+    def submit(self, seeds):
+        self.batches.append(np.asarray(seeds).copy())
+        return self._pool.submit(self._work, seeds)
+
+    def run(self, seeds):
+        return self._work(seeds)
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+
+
+def _flat_curve(cost: float) -> LatencyCurve:
+    return LatencyCurve(psgs=np.array([0.0, 100.0]),
+                        avg=np.array([cost, cost]),
+                        mx=np.array([cost, cost]))
+
+
+def _req(i, *, priority="batch", deadline_s=None, model=DEFAULT_MODEL):
+    return Request(i, np.asarray([i % 8], np.int64), 0.0, model=model,
+                   priority=priority, deadline_s=deadline_s)
+
+
+def _gateway(*, clk=None, gate=None, max_inflight=1, admission="wait",
+             est_s=None, **cfg_kw):
+    """Single gated executor behind a gateway sharing one FakeClock.
+    `est_s` switches the router to a calibrated CostModelRouter whose flat
+    curve makes `estimate_seconds` return ~est_s per seed."""
+    clk = clk or FakeClock()
+    gate = gate if gate is not None else threading.Event()
+    ex = {"host": GatedExecutor("host", capacity=4, gate=gate)}
+    if est_s is None:
+        router = StaticScheduler("host")
+    else:
+        router = CostModelRouter(np.full(8, 1.0), "latency_preferred")
+        router.register("host", _flat_curve(est_s), kind="host")
+    reg = ModelRegistry().register(DEFAULT_MODEL, ex, router)
+    engine = ServingEngine(reg, max_inflight=max_inflight,
+                           admission=admission, clock=clk)
+    gw = ServingGateway(engine, config=GatewayConfig(**cfg_kw))
+    return gw, engine, ex["host"], gate, clk
+
+
+def _close(gw):
+    gw.engine.close()
+
+
+# ---------------------------------------------------------------------------
+# FakeClock itself
+# ---------------------------------------------------------------------------
+def test_fake_clock_advances_and_never_rewinds():
+    clk = FakeClock(start=5.0)
+    assert clk() == 5.0
+    assert clk.advance(0.25) == 5.25
+    clk.sleep(0.75)                     # time.sleep drop-in moves the clock
+    assert clk() == 6.0
+    with pytest.raises(ValueError, match="backwards"):
+        clk.advance(-0.1)
+    assert "FakeClock" in repr(clk)
+
+
+def test_dynamic_batcher_deadline_via_fake_clock():
+    clk = FakeClock()
+    b = DynamicBatcher(deadline_s=0.01, max_batch=100, clock=clk)
+    assert b.add(_req(0)) is None
+    clk.advance(0.02)                   # deadline passes without sleeping
+    out = b.add(_req(1))                # deadline hit closes at add time
+    assert out is not None and [r.req_id for r in out] == [0, 1]
+    assert b.clone().clock is clk       # clones keep the injected clock
+
+
+def test_prefetcher_time_cadence_via_fake_clock():
+    refreshed = []
+
+    class _Probe(Prefetcher):
+        def refresh_async(self, scores=None):
+            refreshed.append(self.clock())
+            return None
+
+    clk = FakeClock()
+    store = type("S", (), {"publish_stage": staticmethod(lambda *a: None)})()
+    pf = _Probe(store, budget=4, refresh_every_s=1.0, clock=clk)
+    seeds = np.array([1])
+    pf.on_batch_complete("host", seeds, 1e-3)
+    assert refreshed == []              # cadence not yet due
+    clk.advance(1.5)
+    pf.on_batch_complete("host", seeds, 1e-3)
+    assert refreshed == [1.5]           # due purely by fake elapsed time
+    pf.on_batch_complete("host", seeds, 1e-3)
+    assert refreshed == [1.5]           # stamp advanced: not due again
+    assert pf.report()["batches_seen"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Admission outcomes: queued / shed_window / shed_deadline
+# ---------------------------------------------------------------------------
+def test_gateway_completes_open_stream_fifo():
+    gw, _eng, ex, gate, _clk = _gateway()
+    gate.set()                          # executors never block
+    reqs = [_req(i) for i in range(6)]
+    m = gw.serve(reqs)
+    assert m.requests == 6 and m.shed == 0 and m.shed_deadline == 0
+    assert all(r.outcome == "completed" for r in reqs)
+    # one class, no deadlines: dequeue order degenerates to FIFO
+    assert [int(b[0]) for b in ex.batches] == [i % 8 for i in range(6)]
+    rep = gw.report()
+    assert rep["admitted"] == rep["dispatched"] == rep["completed"] == 6
+    assert rep["shed_window"] == rep["shed_deadline"] == 0
+    assert rep["queue_depth"] == 0
+    _close(gw)
+
+
+def test_admission_sheds_hopeless_deadline_without_dispatch():
+    gw, eng, ex, gate, _clk = _gateway()
+    gate.set()
+    m = eng.begin_run()
+    doomed = _req(0, priority="interactive", deadline_s=-1.0)
+    assert gw.submit(doomed) == "shed_deadline"
+    eng.end_run(m)
+    assert doomed.outcome == "shed_deadline"
+    assert not hasattr(doomed, "dispatched")    # never reached an executor
+    assert ex.batches == []
+    assert m.shed_deadline == 1 and m.shed == 0
+    assert m.for_class("interactive").shed_deadline == 1
+    assert gw.report()["shed_deadline"] == 1
+    _close(gw)
+
+
+def test_admission_sheds_window_when_queue_full():
+    gw, eng, _ex, gate, _clk = _gateway(queue_limit=2)
+    m = eng.begin_run()
+    held = _req(0)
+    assert gw.submit(held) == "queued"          # dispatched, gated in-flight
+    assert gw.submit(_req(1)) == "queued"
+    assert gw.submit(_req(2)) == "queued"       # queue now at queue_limit
+    spilled = _req(3)
+    assert gw.submit(spilled) == "shed_window"
+    assert spilled.outcome == "shed_window"
+    assert gw.queue_depth == 2
+    gate.set()
+    gw.drain()
+    eng.end_run(m)
+    assert m.shed == 1 and m.requests == 3
+    rep = gw.report()
+    assert rep["shed_window"] == 1 and rep["max_queue_depth"] == 2
+    assert rep["completed"] == 3 and rep["queue_depth"] == 0
+    _close(gw)
+
+
+def test_dequeue_recheck_sheds_request_gone_stale_in_queue():
+    gw, eng, ex, gate, clk = _gateway()
+    m = eng.begin_run()
+    assert gw.submit(_req(0)) == "queued"       # occupies the single slot
+    stale = _req(1, priority="interactive", deadline_s=0.05)
+    assert gw.submit(stale) == "queued"         # meetable at admission...
+    clk.advance(0.1)                            # ...expired while queued
+    gate.set()
+    gw.drain()
+    eng.end_run(m)
+    assert stale.outcome == "shed_deadline"
+    assert not hasattr(stale, "dispatched")     # zero expired dispatches
+    assert len(ex.batches) == 1                 # only request 0 ran
+    rep = gw.report()
+    assert rep["dispatched"] == 1 and rep["shed_deadline"] == 1
+    assert rep["admitted"] == 2                 # stale WAS admitted
+    _close(gw)
+
+
+def test_slack_ordering_dispatches_tightest_deadline_first():
+    gw, _eng, ex, gate, _clk = _gateway()
+    _ = gw.engine.begin_run()
+    gw.submit(_req(0))                          # holds the slot (gated)
+    gw.submit(_req(1, deadline_s=20.0))
+    gw.submit(_req(2, deadline_s=5.0))          # tightest slack
+    gw.submit(_req(3))                          # no deadline: slack cap
+    gate.set()
+    gw.drain()
+    assert [int(b[0]) for b in ex.batches] == [0, 2, 1, 3]
+    _close(gw)
+
+
+def test_aging_bound_promotes_interactive_over_batch():
+    gw, _eng, ex, gate, clk = _gateway(aging_bound_s=0.25)
+    _ = gw.engine.begin_run()
+    gw.submit(_req(0))                          # gated slot holder
+    gw.submit(_req(1, deadline_s=1.0))          # batch, tight-ish slack
+    gw.submit(_req(2, priority="interactive"))  # no deadline: loses on slack
+    # below the aging bound the batch request's 1.0s slack beats the
+    # interactive request's capped slack; past the bound the interactive
+    # request is tier-promoted and preempts outright
+    clk.advance(0.3)
+    gate.set()
+    gw.drain()
+    assert [int(b[0]) for b in ex.batches] == [0, 2, 1]
+    assert gw.report()["aged_dispatches"] >= 1
+    _close(gw)
+
+
+def test_batch_bias_breaks_fresh_ties_interactive_first():
+    gw, _eng, ex, gate, _clk = _gateway()
+    _ = gw.engine.begin_run()
+    gw.submit(_req(0))                          # gated slot holder
+    gw.submit(_req(1, priority="batch"))        # same (capped) slack…
+    gw.submit(_req(2, priority="interactive"))  # …but no batch_bias_s
+    gate.set()
+    gw.drain()
+    assert [int(b[0]) for b in ex.batches] == [0, 2, 1]
+    _close(gw)
+
+
+def test_estimate_seconds_feeds_slack_check():
+    # flat 2s service estimate: a 1s deadline is hopeless at admission even
+    # though it has not yet expired; a 5s deadline clears the slack check
+    gw, eng, _ex, gate, _clk = _gateway(est_s=2.0)
+    gate.set()
+    m = eng.begin_run()
+    router = eng.registry.router_for(DEFAULT_MODEL)
+    assert router.estimate_seconds(np.array([1])) == pytest.approx(2.0)
+    assert gw.submit(_req(0, deadline_s=1.0)) == "shed_deadline"
+    assert gw.submit(_req(1, deadline_s=5.0)) == "queued"
+    gw.drain()
+    eng.end_run(m)
+    assert m.shed_deadline == 1 and m.requests == 1
+    _close(gw)
+
+
+def test_workload_generator_tags_priority_and_deadline():
+    gen = WorkloadGenerator(16, np.ones(16), distribution="uniform", seed=0)
+    reqs = list(gen.stream(4, priorities=PRIORITIES,
+                           deadlines=(0.2, None)))
+    assert [r.priority for r in reqs] == ["interactive", "batch"] * 2
+    assert [r.deadline_s for r in reqs] == [0.2, None, 0.2, None]
+    assert all(r.priority == "batch" and r.deadline_s is None
+               for r in gen.stream(2))
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: schema, monotonicity, pollable stream
+# ---------------------------------------------------------------------------
+def test_telemetry_samples_schema_and_monotone_timestamps():
+    gw, eng, _ex, gate, clk = _gateway()
+    gate.set()
+    m = eng.begin_run()
+    for i in range(4):
+        gw.submit(_req(i, priority=PRIORITIES[i % 2]))
+        clk.advance(0.01)
+    gw.drain()
+    eng.end_run(m)
+    samples = gw.telemetry_samples()
+    assert samples and len(samples) <= GatewayConfig().telemetry_capacity
+    ts = [s["t"] for s in samples]
+    assert ts == sorted(ts)                     # monotone non-decreasing
+    for s in samples:
+        assert set(s) == set(TELEMETRY_SAMPLE_SCHEMA)
+        for block in s["classes"].values():
+            assert set(block) == set(CLASS_SAMPLE_SCHEMA)
+    last = gw.sample_telemetry()                # explicit poll mid-idle
+    assert last["queue_depth"] == 0 and last["inflight"] == 0
+    assert gw.report()["telemetry_samples"] == len(gw.telemetry_samples())
+    _close(gw)
+
+
+def test_telemetry_min_interval_rate_limits_auto_samples():
+    gw, eng, _ex, gate, clk = _gateway(telemetry_min_interval_s=10.0)
+    gate.set()
+    m = eng.begin_run()
+    for i in range(5):                          # clock frozen: one sample
+        gw.submit(_req(i))
+    gw.drain()
+    eng.end_run(m)
+    assert gw.report()["telemetry_samples"] == 1
+    clk.advance(11.0)
+    gw.submit(_req(9))
+    gw.drain()
+    assert gw.report()["telemetry_samples"] == 2
+    _close(gw)
+
+
+def test_telemetry_stream_drains_buffer_then_stops():
+    gw, eng, _ex, gate, _clk = _gateway()
+    gate.set()
+    m = eng.begin_run()
+    for i in range(3):
+        gw.submit(_req(i))
+    gw.drain()
+    eng.end_run(m)
+    got = list(gw.telemetry_stream(stop=lambda: True))
+    assert got == gw.telemetry_samples()        # everything buffered, once
+    assert all(set(s) == set(TELEMETRY_SAMPLE_SCHEMA) for s in got)
+    _close(gw)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive admission tuning
+# ---------------------------------------------------------------------------
+def test_tune_admission_tightens_on_sheds_then_relaxes_when_idle():
+    gw, eng, _ex, gate, _clk = _gateway(queue_limit=256)
+    gate.set()
+    ctl = AdaptiveController(
+        type("_G", (), {"num_nodes": 8})(), (2,),
+        type("S", (), {"plan": None})(), None, psgs_table=np.full(8, 1.0),
+        config=AdaptiveConfig(admission_step=0.5,
+                              queue_limit_bounds=(16, 4096)))
+    assert ctl.tune_admission() is None         # no gateway attached yet
+    assert ctl.attach_gateway(gw) is ctl
+    m = eng.begin_run()
+    gw.submit(_req(0, deadline_s=-1.0))         # one deadline shed
+    out = ctl.tune_admission()
+    assert out["deadline_sheds"] == 1
+    # halve-target under sheds, half-step: 256 → 192
+    assert out["queue_limit"] == gw.config.queue_limit == 192
+    gw.drain()
+    eng.end_run(m)
+    out2 = ctl.tune_admission()                 # shed-free + idle: relax
+    assert out2["deadline_sheds"] == 0 and out2["saturation"] == 0.0
+    assert 192 < out2["queue_limit"] <= 4096
+    _close(gw)
+
+
+# ---------------------------------------------------------------------------
+# Schema pins: constants, stats dicts and the BENCH row format
+# ---------------------------------------------------------------------------
+def test_gateway_stats_keys_pin_gateway_schema():
+    gw, *_ = _gateway()
+    assert tuple(gw.stats) == GATEWAY_SCHEMA
+    assert set(gw.report()) == set(GATEWAY_SCHEMA) | {"queue_depth",
+                                                      "saturation"}
+    _close(gw)
+
+
+def test_class_stats_summary_pins_class_sample_schema():
+    assert tuple(ClassStats().summary()) == CLASS_SAMPLE_SCHEMA
+    gw, eng, _ex, gate, _clk = _gateway()
+    gate.set()
+    m = eng.begin_run()
+    gw.submit(_req(0, priority="interactive"))
+    gw.drain()
+    eng.end_run(m)
+    for block in eng.class_summaries().values():
+        assert tuple(block) == CLASS_SAMPLE_SCHEMA
+    _close(gw)
+
+
+def test_gateway_soak_row_schema_is_pinned():
+    """Regression pin of the BENCH_gateway_soak.json row format: CI smokes
+    the benchmark with --json-out, so its schema drifting silently would
+    break downstream consumers before anything failed loudly."""
+    gs = pytest.importorskip("benchmarks.gateway_soak")
+    assert gs.ROW_SCHEMA == (
+        "mode", "requests", "completed", "shed_window", "shed_deadline",
+        "expired_dispatches", "max_queue_depth", "interactive_p50_ms",
+        "interactive_p99_ms", "batch_p50_ms", "batch_p99_ms", "wall_s")
+    row = gs.build_row(**{k: 0 for k in gs.ROW_SCHEMA})
+    assert tuple(row) == gs.ROW_SCHEMA          # emitted in schema order
+    with pytest.raises(ValueError, match="missing"):
+        gs.build_row(mode="fifo")
+    with pytest.raises(ValueError, match="extra=\\['bogus'\\]"):
+        gs.build_row(bogus=1, **{k: 0 for k in gs.ROW_SCHEMA})
+
+
+# ---------------------------------------------------------------------------
+# Slow tier: the flash-crowd soak through the real serving stack
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_gateway_soak_dry_run_end_to_end(tmp_path, monkeypatch):
+    """Drive the full gateway_soak benchmark (dry-run sizing): its in-run
+    asserts cover bounded queue depth, zero expired dispatches, the doomed
+    shed and the interactive-p99 win over FIFO; here we re-check the
+    emitted rows against the pinned schema."""
+    gs = pytest.importorskip("benchmarks.gateway_soak")
+    monkeypatch.setenv("BENCH_JSON_DIR", str(tmp_path))
+    rows = gs.run(dry_run=True, json_out=str(tmp_path / "soak.json"))
+    assert list(rows) == ["fifo", "gateway"]
+    for r in rows.values():
+        assert tuple(r) == gs.ROW_SCHEMA and r["mode"] in rows
+    fifo, gw_row = rows["fifo"], rows["gateway"]
+    assert gw_row["expired_dispatches"] == 0
+    assert gw_row["max_queue_depth"] <= 256
+    assert gw_row["interactive_p99_ms"] < fifo["interactive_p99_ms"]
+    assert (tmp_path / "soak.json").exists()
+    assert (tmp_path / "BENCH_gateway_soak.json").exists()

@@ -1,0 +1,167 @@
+"""Property tests of the SLO gateway's admission invariants (hypothesis).
+
+Driven against a synchronous instant-dispatch engine stand-in and a
+FakeClock, so every example is deterministic and sleep-free. The three
+pinned invariants:
+
+  1. outcome partition — every submitted request terminates in exactly one
+     of {completed, shed_window, shed_deadline}, and the gateway counters
+     agree with the per-request outcomes;
+  2. admission-window bound — the queue never exceeds ``queue_limit`` and
+     the overflow verdict is exactly ``shed_window``;
+  3. aging bound — once every queued interactive request has waited past
+     ``aging_bound_s``, no batch request is dispatched before any of them.
+"""
+from concurrent.futures import Future
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+pytestmark = pytest.mark.hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Request
+from repro.serving import GatewayConfig, ServingGateway
+from repro.testing import FakeClock
+
+
+class InstantEngine:
+    """Engine stand-in: dispatch completes inline on the submitting thread.
+
+    Implements exactly the surface the gateway touches (`submit_batch`,
+    `record_shed`, `max_inflight`, `clock`, `registry.router_for`,
+    `inflight`/`saturation`/`class_summaries`, `drain`). `max_inflight`
+    is a plain attribute the tests flip between 0 (queue builds) and huge
+    (everything drains synchronously)."""
+
+    def __init__(self, clock, max_inflight=1):
+        self.clock = clock
+        self.max_inflight = max_inflight
+        self.registry = SimpleNamespace(router_for=lambda name: object())
+        self.dispatched: list = []
+        self.inflight = 0
+        self.saturation = 0.0
+
+    def class_summaries(self):
+        return {}
+
+    def record_shed(self, batch, model=None, *, reason="window"):
+        for r in batch:
+            r.outcome = ("shed_window" if reason == "window"
+                         else "shed_deadline")
+
+    def submit_batch(self, batch):
+        for r in batch:
+            r.outcome = "completed"
+        self.dispatched.extend(batch)
+        fut = Future()
+        fut.set_result(np.zeros((len(batch), 1), np.float32))
+        return fut
+
+    def drain(self):
+        pass
+
+
+def _gateway(clk, *, max_inflight, **cfg_kw):
+    eng = InstantEngine(clk, max_inflight=max_inflight)
+    return ServingGateway(eng, config=GatewayConfig(**cfg_kw),
+                          clock=clk), eng
+
+
+def _req(i, priority="batch", deadline_s=None):
+    return Request(i, np.array([i % 8], np.int64), 0.0, priority=priority,
+                   deadline_s=deadline_s)
+
+
+OUTCOMES = ("completed", "shed_window", "shed_deadline")
+
+# (priority, relative deadline or None, clock advance before the submit)
+ARRIVALS = st.lists(
+    st.tuples(st.sampled_from(("interactive", "batch")),
+              st.sampled_from((None, -0.01, 0.05, 0.5, 5.0)),
+              st.floats(min_value=0.0, max_value=0.2)),
+    min_size=1, max_size=30)
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrivals=ARRIVALS, queue_limit=st.integers(1, 8))
+def test_every_request_terminates_in_exactly_one_outcome(arrivals,
+                                                         queue_limit):
+    clk = FakeClock()
+    gw, eng = _gateway(clk, max_inflight=0, queue_limit=queue_limit)
+    reqs = []
+    for i, (priority, dl, dt) in enumerate(arrivals):
+        clk.advance(dt)                 # queue ages between arrivals
+        r = _req(i, priority, dl)
+        reqs.append(r)
+        verdict = gw.submit(r)
+        assert verdict in ("queued", "shed_window", "shed_deadline")
+        assert gw.queue_depth <= queue_limit
+    eng.max_inflight = len(reqs) + 1    # open the window: drain everything
+    gw.pump()
+    gw.drain()
+    assert gw.queue_depth == 0
+    # exactly one terminal outcome each, and never shed_deadline without one
+    assert all(r.outcome in OUTCOMES for r in reqs)
+    counts = {o: sum(r.outcome == o for r in reqs) for o in OUTCOMES}
+    assert sum(counts.values()) == len(reqs)
+    assert all(r.outcome != "shed_deadline" for r in reqs
+               if r.deadline_s is None)
+    # gateway counters agree with the per-request outcomes
+    rep = gw.report()
+    assert rep["completed"] == counts["completed"] == len(eng.dispatched)
+    assert rep["shed_window"] == counts["shed_window"]
+    assert rep["shed_deadline"] == counts["shed_deadline"]
+    assert rep["dispatched"] == rep["completed"]
+    # conservation: every submit either dispatched or shed, and requests
+    # shed at dequeue time were admitted first
+    assert (rep["dispatched"] + rep["shed_window"]
+            + rep["shed_deadline"] == len(reqs))
+    assert rep["admitted"] >= rep["dispatched"]
+    assert rep["max_queue_depth"] <= queue_limit
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 24), queue_limit=st.integers(1, 8))
+def test_admission_window_bound_and_fifo_drain(n, queue_limit):
+    clk = FakeClock()
+    gw, eng = _gateway(clk, max_inflight=0, queue_limit=queue_limit)
+    reqs = [_req(i) for i in range(n)]  # one class, no deadlines
+    verdicts = [gw.submit(r) for r in reqs]
+    kept = min(n, queue_limit)
+    assert verdicts == ["queued"] * kept + ["shed_window"] * (n - kept)
+    assert gw.queue_depth == kept
+    assert gw.report()["max_queue_depth"] == kept <= queue_limit
+    eng.max_inflight = n + 1
+    gw.pump()
+    gw.drain()
+    # homogeneous queue degenerates to FIFO: admitted order == dispatch order
+    assert [r.req_id for r in eng.dispatched] == [r.req_id
+                                                  for r in reqs[:kept]]
+    assert all(r.outcome == "completed" for r in reqs[:kept])
+    assert all(r.outcome == "shed_window" for r in reqs[kept:])
+
+
+@settings(max_examples=40, deadline=None)
+@given(classes=st.lists(st.booleans(), min_size=2, max_size=20).filter(
+    lambda c: any(c) and not all(c)))
+def test_aged_interactive_is_never_passed_over_for_batch(classes):
+    clk = FakeClock()
+    gw, eng = _gateway(clk, max_inflight=0, aging_bound_s=0.25,
+                       queue_limit=64)
+    reqs = [_req(i, "interactive" if inter else "batch")
+            for i, inter in enumerate(classes)]
+    for r in reqs:
+        assert gw.submit(r) == "queued"
+    clk.advance(0.3)                    # every interactive is past the bound
+    eng.max_inflight = len(reqs) + 1
+    gw.pump()
+    gw.drain()
+    order = [r.priority for r in eng.dispatched]
+    n_inter = sum(classes)
+    # tier promotion: ALL aged interactive requests precede ALL batch ones
+    assert order == ["interactive"] * n_inter + \
+        ["batch"] * (len(reqs) - n_inter)
+    assert gw.report()["aged_dispatches"] == n_inter

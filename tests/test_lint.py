@@ -361,6 +361,7 @@ def schema_cfg(c):
         schema_file="store.py", schema_const="STATS_SCHEMA",
         store_class="Store", cache_class="Cache",
         stats_classes=(("store.py", "Cache"),),
+        aux_schemas=(),
         marker_doc="docs/invariants.md")
 
 
@@ -427,6 +428,56 @@ class TestSchemaSync:
         msgs = [f.message for f in res.findings]
         assert any("`a_misses` missing from" in m for m in msgs)
         assert any("`stale_key` is not in STATS_SCHEMA" in m for m in msgs)
+
+    AUX_DOC = SCHEMA_DOC + """
+    <!-- quiverlint:aux-x -->
+    | `hits` | h |
+    | `misses` | m |
+    <!-- /quiverlint:aux-x -->
+    """
+
+    def aux_cfg(self, c):
+        schema_cfg(c)
+        c.schema.aux_schemas = (("store.py", "AUX_SCHEMA", "Cache",
+                                 "aux-x"),)
+
+    def test_aux_schema_clean(self, tmp_path):
+        src = self.CLEAN + '\n        AUX_SCHEMA = ("hits", "misses")\n'
+        res = lint(tmp_path, src, ["schema"], configure=self.aux_cfg,
+                   name="store.py",
+                   extra_files=[("docs/invariants.md", self.AUX_DOC)])
+        assert res.findings == []
+
+    def test_aux_schema_drift_flagged_everywhere(self, tmp_path):
+        """One drifted aux constant fires on all three surfaces: the stats
+        declaration, the doc table, and a missing constant entirely."""
+        src = self.CLEAN + '\n        AUX_SCHEMA = ("hits", "evictions")\n'
+        res = lint(tmp_path, src, ["schema"], configure=self.aux_cfg,
+                   name="store.py",
+                   extra_files=[("docs/invariants.md", self.AUX_DOC)])
+        msgs = [f.message for f in res.findings]
+        assert any("key `evictions` missing from Cache's stats declaration"
+                   in m for m in msgs)
+        assert any("stats key `misses` is absent from `AUX_SCHEMA`" in m
+                   for m in msgs)
+        assert any("key `evictions` missing from the aux-x table" in m
+                   for m in msgs)
+        assert any("documented key `misses` is not in `AUX_SCHEMA`" in m
+                   for m in msgs)
+        # constant deleted outright -> flagged, not silently skipped
+        res = lint(tmp_path / "gone", self.CLEAN, ["schema"],
+                   configure=self.aux_cfg, name="store.py",
+                   extra_files=[("docs/invariants.md", self.AUX_DOC)])
+        assert any("aux schema constant `AUX_SCHEMA` not found" in
+                   f.message for f in res.findings)
+
+    def test_aux_schema_missing_marker_block_flagged(self, tmp_path):
+        src = self.CLEAN + '\n        AUX_SCHEMA = ("hits", "misses")\n'
+        res = lint(tmp_path, src, ["schema"], configure=self.aux_cfg,
+                   name="store.py",
+                   extra_files=[("docs/invariants.md", SCHEMA_DOC)])
+        assert any("no `<!-- quiverlint:aux-x -->` block found" in
+                   f.message for f in res.findings)
 
 
 # ---------------------------------------------------------------------------
@@ -567,11 +618,14 @@ class TestLockRegressions:
     def test_engine_reset_publishes_metrics_under_lock(self):
         """ServingEngine._reset assigned self._metrics without _lock,
         racing submit_batch's bind of the current run's metrics."""
+        import time
+
         from repro.serving.engine import ServingEngine
         eng = ServingEngine.__new__(ServingEngine)
         probe = LockProbe()
         eng._lock = probe
         eng._metrics = None
+        eng.clock = time.monotonic    # normally injected by __init__
         metrics = eng._reset()
         assert probe.acquired == 1
         assert eng._metrics is metrics and metrics.started > 0

@@ -2,6 +2,7 @@
 shared engine, model-pure batching (micro-batches never mix models), the
 per-model tail-flush regression, per-model adaptive refits, and micro-batch
 auto-tuning."""
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 
@@ -21,10 +22,10 @@ from repro.serving import (AdaptiveConfig, AdaptiveController,
 class FakeExecutor:
     kind = "device"
 
-    def __init__(self, name, *, capacity=2, delay_s=0.0, d_out=4):
+    def __init__(self, name, *, capacity=2, gate=None, d_out=4):
         self.name = name
         self.capacity = capacity
-        self.delay_s = delay_s
+        self.gate = gate            # optional Event: _work blocks until set
         self.d_out = d_out
         self.inflight = 0
         self.batches: list[np.ndarray] = []
@@ -34,8 +35,8 @@ class FakeExecutor:
         return float((np.asarray(seeds) >= 0).sum())
 
     def _work(self, seeds):
-        if self.delay_s:
-            time.sleep(self.delay_s)
+        if self.gate is not None:
+            self.gate.wait()
         return np.zeros((len(seeds), self.d_out), np.float32)
 
     def submit(self, seeds):
@@ -179,12 +180,18 @@ def test_different_curves_give_different_cutpoints():
 
 
 def test_shed_counted_per_model():
-    table = np.full(8, 1.0)
-    ex = {"host": FakeExecutor("host", capacity=1, delay_s=0.2)}
+    gate = threading.Event()        # holds the first batch on the executor
+    ex = {"host": FakeExecutor("host", capacity=1, gate=gate)}
     reg = ModelRegistry().register("only", ex, StaticScheduler("host"))
     engine = ServingEngine(reg, max_inflight=1, admission="shed")
-    m = engine.run([[_req(i, [0], "only")] for i in range(5)])
-    assert m.shed >= 1
+    m = engine.begin_run()
+    assert engine.submit_batch([_req(0, [0], "only")]) is not None
+    for i in range(1, 5):           # window pinned full: every submit sheds
+        assert engine.submit_batch([_req(i, [0], "only")]) is None
+    gate.set()
+    engine.drain()
+    engine.end_run(m)
+    assert m.shed == 4
     assert m.models["only"].shed == m.shed
     assert m.models["only"].requests + m.models["only"].shed == 5
     engine.close()

@@ -35,6 +35,19 @@ class SchemaSpec:
         ("core/prefetch.py", "Prefetcher"),
         ("serving/adaptive.py", "AdaptiveController"),
         ("core/feature_store.py", "ShardedFeatureStore"),
+        ("serving/gateway.py", "ServingGateway"),
+    )
+    # auxiliary schema constants: (file suffix, constant, stats class or
+    # None, doc marker). Each constant's keys must match the table between
+    # `<!-- quiverlint:<marker> -->` markers in marker_doc; with a stats
+    # class named, that class's `self.stats` declaration must equal the
+    # constant exactly (the constant is the class's published schema).
+    aux_schemas: tuple = (
+        ("serving/gateway.py", "GATEWAY_SCHEMA", "ServingGateway",
+         "gateway-schema"),
+        ("serving/gateway.py", "TELEMETRY_SAMPLE_SCHEMA", None,
+         "telemetry-schema"),
+        ("serving/engine.py", "CLASS_SAMPLE_SCHEMA", None, "class-schema"),
     )
     marker_doc: str = "docs/invariants.md"
 
@@ -57,6 +70,8 @@ class DocsSpec:
         "src/repro/serving/registry.py": ["ModelRegistry", "ModelEntry"],
         "src/repro/serving/adaptive.py": ["AdaptiveController",
                                           "FrequencySketch"],
+        "src/repro/serving/gateway.py": ["ServingGateway", "GatewayConfig"],
+        "src/repro/testing/clock.py": ["FakeClock"],
         "src/repro/core/feature_store.py": [
             "TieredFeatureStore.lookup", "TieredFeatureStore.lookup_hops",
             "TieredFeatureStore.swap_assignments",
@@ -100,6 +115,16 @@ class Config:
         },
         "Prefetcher": {
             "stats": "_lock", "_inflight": "_lock", "_error": "_lock",
+            "_last_refresh_t": "_lock",
+        },
+        "ServingGateway": {
+            # one condition guards all gateway state (docstring: the pump
+            # re-entrancy flags, queue, counters and telemetry ring move
+            # together)
+            "stats": "_cv", "_queue": "_cv", "_seq": "_cv",
+            "_gw_inflight": "_cv", "_pump_active": "_cv",
+            "_pump_again": "_cv", "_telemetry": "_cv",
+            "_last_sample_t": "_cv",
         },
         "ServingEngine": {
             "_error": "_lock", "_metrics": "_lock",
@@ -127,6 +152,8 @@ class Config:
         # _mig_lock; publisher serialization is the controller's _step_lock)
         "TieredFeatureStore": {"build", "swap_assignments"},
         "ShardedFeatureStore": {"build"},
+        # called with _cv held only (documented lock-held-only helpers)
+        "ServingGateway": {"_select_locked", "_pop_stale_locked"},
     })
 
     # -- trace-safety -----------------------------------------------------

@@ -15,7 +15,12 @@ cross-checks, without importing anything:
 * docs stay in sync: every schema key appears as a ``code span`` in the
   documentation, and the table between the
   ``<!-- quiverlint:stats-schema -->`` markers in ``docs/invariants.md``
-  lists exactly the schema keys.
+  lists exactly the schema keys;
+* auxiliary schema constants registered in ``SchemaSpec.aux_schemas``
+  (gateway counters, telemetry sample keys, per-class sample keys) each
+  match their own marked table in ``docs/invariants.md`` — and, when the
+  entry names a stats class, that class's ``self.stats`` declaration
+  equals the constant exactly.
 """
 from __future__ import annotations
 
@@ -188,15 +193,85 @@ def run(config, files: list[SourceFile]) -> list[Finding]:
 
     # docs agreement
     findings.extend(_check_docs(config, schema))
+
+    # auxiliary schema constants (gateway / telemetry / per-class samples)
+    findings.extend(_check_aux_schemas(config, files))
     return findings
 
 
-MARKER_RE = re.compile(
-    r"<!--\s*quiverlint:stats-schema\s*-->(.*?)"
-    r"<!--\s*/quiverlint:stats-schema\s*-->", re.S)
+def _marker_block(marker: str) -> re.Pattern:
+    return re.compile(
+        rf"<!--\s*quiverlint:{marker}\s*-->(.*?)"
+        rf"<!--\s*/quiverlint:{marker}\s*-->", re.S)
+
+
+MARKER_RE = _marker_block("stats-schema")
 # inside the marker block only first-column table cells count as schema
 # entries (prose in other columns may legitimately mention other spans)
 CODE_SPAN_RE = re.compile(r"^\|\s*`([A-Za-z_][A-Za-z0-9_]*)`", re.M)
+
+
+def _check_aux_schemas(config, files: list[SourceFile]) -> list[Finding]:
+    """Each registered aux constant: keys == its marked doc table, and —
+    when a stats class is registered — == that class's stats declaration."""
+    spec = config.schema
+    findings: list[Finding] = []
+    marker_path = config.root / spec.marker_doc
+    doc_text = marker_path.read_text() if marker_path.exists() else ""
+    for rel_suffix, const, cls_name, marker in getattr(spec, "aux_schemas",
+                                                       ()):
+        found = _schema_constant(files, rel_suffix, const)
+        if found is None:
+            findings.append(Finding(
+                rule=RULE, path=rel_suffix, line=1, symbol=const,
+                message=f"registered aux schema constant `{const}` not "
+                        f"found in {rel_suffix}"))
+            continue
+        sf, line, keys = found
+        if cls_name is not None:
+            hit = _find_class(files, rel_suffix, cls_name)
+            decl = _stats_decl(*hit) if hit is not None else None
+            if decl is None:
+                findings.append(Finding(
+                    rule=RULE, path=rel_suffix, line=line, symbol=cls_name,
+                    message=f"aux schema `{const}` names stats class "
+                            f"`{cls_name}` but its `self.stats = {{...}}` "
+                            f"declaration was not found"))
+            else:
+                decl_line, declared = decl
+                for key in sorted(keys - declared):
+                    findings.append(Finding(
+                        rule=RULE, path=sf.rel, line=decl_line,
+                        symbol=cls_name,
+                        message=f"`{const}` key `{key}` missing from "
+                                f"{cls_name}'s stats declaration"))
+                for key in sorted(declared - keys):
+                    findings.append(Finding(
+                        rule=RULE, path=sf.rel, line=decl_line,
+                        symbol=cls_name,
+                        message=f"{cls_name} stats key `{key}` is absent "
+                                f"from `{const}`"))
+        m = _marker_block(marker).search(doc_text)
+        if m is None:
+            findings.append(Finding(
+                rule=RULE, path=spec.marker_doc, line=1, symbol=marker,
+                message=f"no `<!-- quiverlint:{marker} -->` block found"))
+            continue
+        doc_line = doc_text.count("\n", 0, m.start()) + 1
+        listed = set(CODE_SPAN_RE.findall(m.group(1)))
+        for key in sorted(keys - listed):
+            findings.append(Finding(
+                rule=RULE, path=spec.marker_doc, line=doc_line,
+                symbol=marker,
+                message=f"`{const}` key `{key}` missing from the "
+                        f"{marker} table"))
+        for key in sorted(listed - keys):
+            findings.append(Finding(
+                rule=RULE, path=spec.marker_doc, line=doc_line,
+                symbol=marker,
+                message=f"documented key `{key}` is not in `{const}` "
+                        f"(stale docs)"))
+    return findings
 
 
 def _check_docs(config, schema: set[str]) -> list[Finding]:
