@@ -81,9 +81,10 @@ def build_serving_stack(*, nodes: int = 6000, avg_degree: float = 10.0,
     params = sage_init(jax.random.key(seed), [d_feat, 64, 64])
 
     @jax.jit
-    def infer_fn(hop_feats, hop_ids):
+    def infer_fn(hop_feats, hop_ids, deep_agg=None):
         masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
-        return sage_layered(params, hop_feats, fanouts, hop_masks=masks)
+        return sage_layered(params, hop_feats, fanouts, hop_masks=masks,
+                            deep_agg=deep_agg)
 
     return dict(graph=graph, feats=feats, psgs=psgs, fap=fap, gen=gen,
                 store=store, infer_fn=infer_fn, fanouts=fanouts, topo=topo)
@@ -114,29 +115,34 @@ def store_bytes(store) -> int:
 
 
 def make_executors(stack, *, num_workers: int = 2, max_batch: int = 128,
-                   fused: bool = True, infer_fn=None, store=None,
-                   rng_seed: int = 0):
+                   fused: bool = True, fuse_aggregate: bool = False,
+                   infer_fn=None, store=None, rng_seed: int = 0):
     """Host + device executor pair over a built stack (executor-graph API).
     ``fused=False`` selects the legacy per-hop feature-collection path;
-    ``infer_fn``/``store`` override the stack's (multi-model benchmarks
-    build one executor pair per model over the shared store)."""
+    ``fuse_aggregate=True`` the gather→aggregate fast path
+    (``store.lookup_aggregate``); ``infer_fn``/``store`` override the
+    stack's (multi-model benchmarks build one executor pair per model over
+    the shared store)."""
     g = stack["graph"]
     infer_fn = infer_fn if infer_fn is not None else stack["infer_fn"]
     store = store if store is not None else stack["store"]
     host = HostExecutor(g, store, stack["fanouts"], infer_fn,
                         capacity=num_workers, psgs_table=stack["psgs"],
-                        fused=fused, rng_seed=rng_seed)
+                        fused=fused, fuse_aggregate=fuse_aggregate,
+                        rng_seed=rng_seed)
     device = DeviceExecutor(g.device_arrays(), store, stack["fanouts"],
                             infer_fn, max_batch=max_batch,
                             capacity=num_workers, psgs_table=stack["psgs"],
-                            fused=fused, rng_seed=rng_seed)
+                            fused=fused, fuse_aggregate=fuse_aggregate,
+                            rng_seed=rng_seed)
     return {"host": host, "device": device}
 
 
 def make_engine(stack, router, *, num_workers: int = 2, max_batch: int = 128,
                 max_inflight: int = 64, admission: str = "wait",
-                fused: bool = True) -> ServingEngine:
+                fused: bool = True,
+                fuse_aggregate: bool = False) -> ServingEngine:
     return ServingEngine(
         make_executors(stack, num_workers=num_workers, max_batch=max_batch,
-                       fused=fused),
+                       fused=fused, fuse_aggregate=fuse_aggregate),
         router, max_inflight=max_inflight, admission=admission)

@@ -32,7 +32,8 @@ if __package__ in (None, ""):  # direct `python benchmarks/fused_gather.py`
 import jax
 import numpy as np
 
-from benchmarks.common import build_serving_stack, emit, make_engine, timeit
+from benchmarks.common import (build_serving_stack, emit, make_engine,
+                               timeit, write_bench_json)
 from repro.core import DynamicBatcher, MicroBatcher
 from repro.graph.sampler import host_sample_dense
 from repro.serving import HybridScheduler, pad_to_bucket
@@ -112,6 +113,8 @@ def run(dry_run: bool = False) -> dict:
     win = results["fused"]["rps"] / max(results["per_hop"]["rps"], 1e-9)
     emit("fused_gather/serve_speedup_x", win,
          "fused vs per-hop end-to-end throughput")
+    results["serve_speedup_x"] = win
+    write_bench_json("fused_gather", results)
     return results
 
 

@@ -1,0 +1,227 @@
+"""Fused gather→aggregate benchmark: layer-1 aggregation straight from the
+tier buffers vs gather-then-aggregate.
+
+The unfused serve path pays for the innermost hop twice: ``lookup_hops``
+writes the dense (n_sampled, d) neighbor tensor, then the model's first
+layer re-reads all of it just to reduce each fan-sized segment into its
+parent. ``TieredFeatureStore.lookup_aggregate`` (the ``gather_aggregate``
+Pallas kernel) folds that reduction into the gather — the dense tensor is
+never materialized — so per request it saves one full kernel pass and two
+trips of the largest tensor through memory.
+
+Because feature dimension is the axis that flips gather kernels between
+latency- and bandwidth-bound (arxiv 2212.00827), every claim is swept over
+embedding dims {16, 64, 256}; per dim this benchmark asserts
+
+  1. bit-identity: fused outer-hop rows, the fused aggregate and the final
+     model output all ``np.array_equal`` the unfused path,
+  2. strictly fewer kernel dispatches per request (gather + model-side
+     reduction pass vs one fused dispatch),
+  3. strictly lower modeled bytes moved for the innermost hop (the dense
+     tensor's write+read disappears),
+
+and measures store-level collection latency, end-to-end serving rps/p99
+with executors flipped between the two paths, plus the block_rows/block_dim
+autotune pick. Results land in ``BENCH_gather_aggregate.json``.
+
+    PYTHONPATH=src python benchmarks/gather_aggregate.py [--dry-run]
+
+``--dry-run`` shrinks node counts and repeat counts so CI can smoke the
+full code path (the sweep keeps all three dims and every assertion).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # direct `python benchmarks/gather_aggregate.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (build_serving_stack, emit, make_engine,
+                               make_executors, timeit, write_bench_json)
+from repro.graph.sampler import host_sample_dense
+from repro.kernels.gather_aggregate import autotune_gather_aggregate
+from repro.serving import HybridScheduler, pad_to_bucket
+
+DIMS = (16, 64, 256)
+
+
+def _sample_hops(stack, seeds: np.ndarray, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    hops = host_sample_dense(rng, stack["graph"],
+                             pad_to_bucket(seeds.astype(np.int32)),
+                             stack["fanouts"])
+    return [jnp.asarray(h) for h in hops]
+
+
+def _deep_bytes(hops, p: int, d: int, *, fused: bool) -> int:
+    """Modeled innermost-hop traffic per request (fp32): both paths read
+    each valid child row from its tier buffer once; the unfused path also
+    writes the dense (n_inner, d) tensor and reads it back for the model's
+    segment reduction, the fused path writes only the (P, d) aggregate."""
+    n_inner = int(hops[-1].shape[0])
+    n_valid = int((np.asarray(hops[-1]) >= 0).sum())
+    reads_src = n_valid * d * 4
+    agg_write = p * d * 4
+    if fused:
+        return reads_src + agg_write
+    return reads_src + 2 * n_inner * d * 4 + agg_write
+
+
+def run(dry_run: bool = False) -> dict:
+    nodes = 700 if dry_run else 4000
+    n_req, per = (10, 8) if dry_run else (50, 8)
+    repeats = 3 if dry_run else 5
+    fanouts = (4, 3)
+    results: dict = {"sweep": []}
+
+    # -- 1) embedding-dim sweep: identity + dispatches + bytes + latency -----
+    for d_feat in DIMS:
+        stack = build_serving_stack(nodes=nodes, d_feat=d_feat,
+                                    fanouts=fanouts, seed=0)
+        store, gen = stack["store"], stack["gen"]
+        gen.rng = np.random.default_rng(7)
+        hops = _sample_hops(stack, gen.make_request(per).seeds)
+        p = int(hops[-2].shape[0])
+        fan = fanouts[-1]
+
+        store.reset_stats()
+        feats_u = store.lookup_hops(hops)
+        jax.block_until_ready(feats_u)
+        s_u = store.reset_stats()
+        feats_f, agg = store.lookup_aggregate(hops)
+        jax.block_until_ready((feats_f, agg))
+        s_f = store.reset_stats()
+
+        # bit-identity: outer rows, the aggregate, and the model output
+        child = feats_u[-1].reshape(p, fan, -1)
+        m = (hops[-1] >= 0).astype(jnp.float32).reshape(p, fan, 1)
+        expected = (child * m).sum(1)
+        ident = (all(bool(jnp.array_equal(a, b))
+                     for a, b in zip(feats_u[:-1], feats_f))
+                 and bool(jnp.array_equal(agg, expected)))
+        infer = stack["infer_fn"]
+        out_ident = bool(jnp.array_equal(
+            infer(feats_u, hops), infer(feats_f, hops, deep_agg=agg)))
+        assert ident and out_ident, (
+            f"fused/unfused layer-1 paths diverged at d={d_feat}: "
+            f"collect={ident} model={out_ident}")
+
+        # kernel dispatches per request: the unfused path runs the tier
+        # gather AND a model-side reduction pass over the dense deepest-hop
+        # tensor; the fused path folds the reduction into its one dispatch
+        disp_u = s_u["device_gathers"] + 1
+        disp_f = s_f["device_gathers"]
+        assert disp_f < disp_u, (disp_f, disp_u)
+
+        bytes_u = _deep_bytes(hops, p, d_feat, fused=False)
+        bytes_f = _deep_bytes(hops, p, d_feat, fused=True)
+        assert bytes_f < bytes_u, (bytes_f, bytes_u)
+
+        t_u = timeit(lambda: infer(store.lookup_hops(hops), hops),
+                     repeats=repeats)
+        t_f = timeit(lambda: (lambda ff, ag: infer(ff, hops, deep_agg=ag))(
+            *store.lookup_aggregate(hops)), repeats=repeats)
+        store.reset_stats()
+
+        row = {"d_feat": d_feat, "bit_identical": ident and out_ident,
+               "dispatches": {"unfused": disp_u, "fused": disp_f},
+               "deep_hop_bytes": {"unfused": bytes_u, "fused": bytes_f},
+               "collect_infer_us": {"unfused": t_u * 1e6,
+                                    "fused": t_f * 1e6}}
+        results["sweep"].append(row)
+        emit(f"gather_aggregate/d{d_feat}_dispatches", float(disp_f),
+             f"unfused={disp_u};bit_identical={int(ident and out_ident)}")
+        emit(f"gather_aggregate/d{d_feat}_deep_bytes", float(bytes_f),
+             f"unfused={bytes_u};"
+             f"saved={1 - bytes_f / max(bytes_u, 1):.0%}")
+        emit(f"gather_aggregate/d{d_feat}_collect_infer_us", t_f * 1e6,
+             f"unfused={t_u * 1e6:.0f}us")
+
+    # -- 2) executor-level equivalence + end-to-end serving ------------------
+    stack = build_serving_stack(nodes=nodes, fanouts=fanouts, seed=0)
+    store, psgs, gen = stack["store"], stack["psgs"], stack["gen"]
+    gen.rng = np.random.default_rng(7)
+    seeds = gen.make_request(per).seeds
+
+    ex_u = make_executors(stack, num_workers=1, rng_seed=11)
+    ex_f = make_executors(stack, num_workers=1, fuse_aggregate=True,
+                          rng_seed=11)
+    # identical rng seeds → identical sampled hops → outputs must match
+    exec_ident = bool(jnp.array_equal(ex_u["host"].process(seeds),
+                                      ex_f["host"].process(seeds)))
+    assert exec_ident, "executor outputs diverged under fuse_aggregate"
+    results["executor_bit_identical"] = exec_ident
+    emit("gather_aggregate/executor_bit_identical", float(exec_ident))
+    for e in (*ex_u.values(), *ex_f.values()):
+        e.close()
+
+    thr = float(np.median(psgs)) * per * 2
+    for mode in ("fused", "fuse_aggregate"):
+        engine = make_engine(stack, HybridScheduler(psgs, thr),
+                             num_workers=2, max_batch=32,
+                             fuse_aggregate=mode == "fuse_aggregate")
+        gen.rng = np.random.default_rng(7)  # same workload for both modes
+        reqs = list(gen.stream(n_req, seeds_per_request=per))
+        engine.warmup([reqs[0]])
+        store.reset_stats()
+        metrics = engine.run([[r] for r in reqs])
+        stats = store.reset_stats()
+        s = metrics.summary()
+        results[mode] = {"rps": s["throughput_rps"], "p99_ms": s["p99_ms"],
+                         "fused_aggregates": stats["fused_aggregates"]}
+        emit(f"gather_aggregate/{mode}_rps", s["throughput_rps"],
+             f"p99={s['p99_ms']:.1f}ms;"
+             f"fused_aggregates={stats['fused_aggregates']}")
+        engine.close()
+    results["serve_speedup_x"] = (results["fuse_aggregate"]["rps"]
+                                  / max(results["fused"]["rps"], 1e-9))
+    emit("gather_aggregate/serve_speedup_x", results["serve_speedup_x"],
+         "fuse_aggregate vs fused end-to-end throughput")
+
+    # -- 3) block_rows/block_dim autotune (interpret-mode timing) ------------
+    hops = _sample_hops(stack, gen.make_request(per).seeds)
+    rng = np.random.default_rng(3)
+    s_seg = 64 if dry_run else 256
+    tier = jnp.asarray(rng.choice([0, 1, 99], size=(s_seg, fanouts[-1]),
+                                  p=[.5, .4, .1]).astype(np.int32))
+    slot = jnp.asarray(rng.integers(0, max(int(store.hot.shape[0]), 1),
+                                    (s_seg, fanouts[-1])).astype(np.int32))
+    tune = autotune_gather_aggregate(
+        tier, slot, store.hot, store.warm,
+        jnp.zeros((1, store.feat_dim), store.hot.dtype),
+        block_rows_candidates=(8, 16) if dry_run else (4, 8, 16, 32),
+        repeats=2 if dry_run else 3)
+    results["autotune"] = tune
+    emit("gather_aggregate/autotune_block_rows",
+         float(tune["best"]["block_rows"]),
+         f"block_dim={tune['best']['block_dim']};"
+         f"interpret={int(tune['interpret'])}")
+
+    write_bench_json("gather_aggregate", results)
+    return results
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dry-run", action="store_true",
+                   help="tiny sizes; CI smoke for the full fused path")
+    args = p.parse_args()
+    t0 = time.time()
+    results = run(dry_run=args.dry_run)
+    d0 = results["sweep"][0]["dispatches"]
+    print(f"# gather_aggregate: {d0['unfused']} -> {d0['fused']} "
+          f"dispatches/request, serve speedup "
+          f"{results['serve_speedup_x']:.2f}x over "
+          f"{len(results['sweep'])} dims ({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ MODULES = [
     "feature_collection",  # Fig. 16
     "serve_throughput",    # Fig. 9
     "fused_gather",        # fused feature-collection hot path
+    "gather_aggregate",    # fused gather→aggregate layer-1 path
     "prefetch",            # cold-tier staging vs critical-path callbacks
     "flash_crowd",         # device cache vs adaptive-only under drift
     "gateway_soak",        # SLO-aware admission vs FIFO under overload

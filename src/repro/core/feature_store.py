@@ -61,6 +61,7 @@ from repro.compat import shard_map
 from repro.core.placement import (PlacementPlan, TIER_DISK, TIER_HOST,
                                   TIER_HOT, TIER_WARM)
 from repro.graph.sampler import fixed_size_unique
+from repro.kernels.gather_aggregate.ops import gather_aggregate
 from repro.kernels.tiered_gather.ops import tiered_gather
 
 
@@ -69,9 +70,9 @@ from repro.kernels.tiered_gather.ops import tiered_gather
 # tests/test_metrics.py), docs/invariants.md tables it, and quiverlint's
 # schema-sync pass cross-checks every producer and doc against it.
 STATS_SCHEMA: tuple = (
-    "lookup_calls", "fused_calls", "device_gathers", "host_fetches",
-    "disk_misses", "spill_reads", "prefetch_hits", "prefetch_misses",
-    "cache_hits", "cache_misses", "cache_evictions")
+    "lookup_calls", "fused_calls", "fused_aggregates", "device_gathers",
+    "host_fetches", "disk_misses", "spill_reads", "prefetch_hits",
+    "prefetch_misses", "cache_hits", "cache_misses", "cache_evictions")
 
 
 def _new_stats() -> dict[str, int]:
@@ -83,7 +84,11 @@ def _new_stats() -> dict[str, int]:
     the tests automatically:
 
       lookup_calls / fused_calls   per-hop vs fused lookup entries
-      device_gathers               tiered_gather dispatches (HOT/WARM)
+      fused_aggregates             ``lookup_aggregate`` entries: samples
+                                   whose innermost-hop aggregation was
+                                   folded into the gather dispatch
+      device_gathers               tiered_gather / gather_aggregate
+                                   dispatches (HOT/WARM)
       host_fetches                 synchronous ``io_callback`` round-trips
                                    actually issued (a lookup whose cold rows
                                    are all staged — or that has none —
@@ -469,9 +474,137 @@ class TieredFeatureStore:
         return [out[int(offs[k]):int(offs[k + 1])]
                 for k in range(len(sizes))]
 
+    def lookup_aggregate(self, hops, *, include_host: bool = True,
+                         use_pallas: Optional[bool] = None,
+                         block_rows: int = 8, block_dim: int = 0):
+        """Fused feature collection + innermost-hop segment aggregation.
+
+        The innermost hop is the largest tensor of a layered sample and the
+        model consumes it exactly once: layer 1 immediately reduces each
+        fan-sized child segment into its parent. This entry point folds that
+        reduction into the gather itself with the ``gather_aggregate``
+        kernel — child rows stream from the HOT/WARM tier buffers (or the
+        pre-resolved cold side-table) straight into per-parent accumulators,
+        and the dense ``(n_sampled, d)`` neighbor tensor is never
+        materialized. Outer hops ride in the same dispatch as singleton
+        segments, so the whole sample still costs ONE device gather.
+
+        Cold (HOST/DISK) ids are resolved *before* the kernel through the
+        exact machinery :meth:`lookup_hops` uses — device cache probe,
+        staging-buffer hit, then at most one ``_host_fetch`` callback (the
+        single ``io_callback`` gateway) — into a compact side-table the
+        kernel indexes as tier 2, preserving all dispatch counters and the
+        one-gateway invariant.
+
+        Tier-equivalence guarantee: the returned aggregate is bit-identical
+        to gathering with :meth:`lookup_hops` and reducing in the model
+        (``(child * mask).sum(1)``), regardless of how rows are spread
+        across HOT/WARM/HOST/DISK tiers or moved by concurrent
+        :meth:`swap_assignments` — gathers copy rows and the fused kernel
+        accumulates in the same order over the same values.
+
+        Args:
+            hops: sequence of ≥ 2 id vectors (seeds first); the innermost
+                hop must have ``len(hops[-2]) * fan`` entries, ``-1``
+                padding for absent children.
+            include_host: as in :meth:`lookup`; ``False`` makes cold
+                children contribute zero rows (they still count toward the
+                caller's mask-derived segment sizes, as in the unfused
+                path).
+            use_pallas: kernel dispatch override, as in :meth:`lookup_hops`.
+            block_rows: segment-block height of the fused kernel.
+            block_dim: feature-dim tile width (0 → untiled); see the
+                ``gather_aggregate`` autotune harness.
+
+        Returns:
+            ``(feats, agg_sum)``: ``feats`` the ``(M_k, d)`` feature
+            matrices for ``hops[:-1]`` (bit-identical to
+            ``lookup_hops(hops)[:-1]``), ``agg_sum`` a
+            ``(len(hops[-2]), d)`` matrix of per-parent child-row sums —
+            divide by the mask count to finish mean aggregation
+            (``models.gnn_basic.sage_layered(deep_agg=...)`` does).
+
+        Raises:
+            ValueError: fewer than two hops, or the innermost hop is not a
+                whole multiple of the previous hop.
+        """
+        hops_j = [jnp.asarray(h, jnp.int32).reshape(-1) for h in hops]
+        sizes = [int(h.shape[0]) for h in hops_j]
+        if len(hops_j) < 2:
+            raise ValueError(
+                "lookup_aggregate needs seeds plus at least one frontier")
+        p, n_inner = sizes[-2], sizes[-1]
+        if p == 0 or n_inner == 0 or n_inner % p:
+            raise ValueError(
+                "innermost hop must be a (P*fan,) frontier of the previous "
+                f"hop, got sizes {sizes[-2:]}")
+        fan = n_inner // p
+        total = sum(sizes)
+        snap = self._snapshot()
+        self._count(fused_calls=1, fused_aggregates=1)
+        hot, warm = snap[0], snap[1]
+        tier_t, slot_t = snap[4], snap[5]
+        ids = jnp.concatenate(hops_j)
+        uniq, inv = fixed_size_unique(ids, total)
+        uniq_np = np.asarray(uniq)
+        valid_u = uniq_np >= 0
+        tier_np = np.asarray(tier_t)[np.maximum(uniq_np, 0)]
+        slot_np = np.asarray(slot_t)[np.maximum(uniq_np, 0)]
+        cold = valid_u & (tier_np >= TIER_HOST)
+        cold_idx = np.flatnonzero(cold)
+        # per-unique kernel addresses: 0=hot, 1=warm, 2=cold table, 99=skip
+        ktier = np.full(total, 99, np.int32)
+        ktier[valid_u & (tier_np == TIER_HOT)] = 0
+        ktier[valid_u & (tier_np == TIER_WARM)] = 1
+        kslot = slot_np.astype(np.int32)
+        if include_host and cold_idx.size:
+            cold_full = self._cached_unique(uniq, include_host, snap,
+                                            use_pallas, fused=True,
+                                            cold_only=True)
+            # pad the side-table row count to a power of two so the jitted
+            # kernel compiles once per bucket, not once per cold count
+            kpad = max(1, 1 << (int(cold_idx.size) - 1).bit_length())
+            pad_idx = np.zeros(kpad, np.int64)
+            pad_idx[:cold_idx.size] = cold_idx
+            cold_buf = cold_full[jnp.asarray(pad_idx)]
+            ktier[cold] = 2
+            kslot[cold] = np.arange(cold_idx.size, dtype=np.int32)
+        else:
+            # device-only probe (or nothing cold): cold children contribute
+            # zero rows, exactly like the unfused include_host=False path
+            cold_buf = jnp.zeros((1, self.feat_dim), hot.dtype)
+        inner_np = np.asarray(hops_j[-1])
+        inv_np = np.asarray(inv)
+        inv_inner = inv_np[total - n_inner:]
+        # segment matrix: one singleton segment per unique id (recovers the
+        # outer-hop feature rows from the same dispatch), then one fan-wide
+        # segment per innermost-hop parent. -1 children alias the last
+        # unique slot via ``inv``, so they are re-masked to 99 here.
+        seg_tier = np.full((total + p, fan), 99, np.int32)
+        seg_slot = np.zeros((total + p, fan), np.int32)
+        seg_tier[:total, 0] = ktier
+        seg_slot[:total, 0] = kslot
+        seg_tier[total:] = np.where(inner_np < 0, 99,
+                                    ktier[inv_inner]).reshape(p, fan)
+        seg_slot[total:] = np.where(inner_np < 0, 0,
+                                    kslot[inv_inner]).reshape(p, fan)
+        self._count(device_gathers=1)
+        out = gather_aggregate(jnp.asarray(seg_tier), jnp.asarray(seg_slot),
+                               hot, warm, cold_buf, block_rows=block_rows,
+                               block_dim=block_dim, use_pallas=use_pallas)
+        rows_u = out[:total]
+        agg = out[total:]
+        outer = ids[: total - n_inner]
+        outer_rows = jnp.where((outer >= 0)[:, None],
+                               rows_u[inv[: total - n_inner]], 0.0)
+        offs = np.concatenate([[0], np.cumsum(sizes[:-1])])
+        feats = [outer_rows[int(offs[k]):int(offs[k + 1])]
+                 for k in range(len(sizes) - 1)]
+        return feats, agg
+
     def _cached_unique(self, uniq: jnp.ndarray, include_host: bool,
                        snap: tuple, use_pallas: Optional[bool], *,
-                       fused: bool) -> jnp.ndarray:
+                       fused: bool, cold_only: bool = False) -> jnp.ndarray:
         """Route one (deduplicated) id vector through the optional device
         cache, then the tier dispatch for whatever remains.
 
@@ -490,9 +623,14 @@ class TieredFeatureStore:
         and migration moves rows with their nodes, so mixing cache hits
         with tier-path rows can never change a lookup result.
         """
-        gathers = 1 if fused else 2
-        tier_path = (partial(self._fused_unique, use_pallas=use_pallas)
-                     if fused else self._lookup_unique)
+        gathers = 0 if cold_only else (1 if fused else 2)
+        if cold_only:
+            # lookup_aggregate mode: the fused kernel reads HOT/WARM rows
+            # itself, so the tier path only resolves the cold remainder
+            tier_path = self._cold_unique
+        else:
+            tier_path = (partial(self._fused_unique, use_pallas=use_pallas)
+                         if fused else self._lookup_unique)
         # lock-free single reference read: any published cache (or None) is
         # valid here — cached rows are copies, so bit-identity cannot break
         cache = self.cache  # quiverlint: disable=lock-discipline atomic reference read, any snapshot valid
@@ -544,6 +682,23 @@ class TieredFeatureStore:
         dev_sorted = tiered_gather(tier[order], slot[order], hot, warm,
                                    use_pallas=use_pallas)
         out = jnp.zeros_like(dev_sorted).at[order].set(dev_sorted)
+        if include_host:
+            out = self._resolve_cold(uniq, tier, slot, out, host, disk,
+                                     stage)
+        return jnp.where((uniq >= 0)[:, None], out, 0.0)
+
+    def _cold_unique(self, uniq: jnp.ndarray, include_host: bool,
+                     snap: tuple) -> jnp.ndarray:
+        """Cold-rows-only tier path for :meth:`lookup_aggregate`: resolve
+        HOST/DISK rows through the staging buffer / ``_host_fetch`` gateway
+        exactly as the full paths do, but skip the device-tier gather (the
+        fused kernel streams HOT/WARM rows straight from the tier buffers).
+        Non-cold positions come back as zeros."""
+        hot, warm, host, disk, tier_t, slot_t, stage = snap
+        safe = jnp.maximum(uniq, 0)
+        tier = tier_t[safe]
+        slot = slot_t[safe]
+        out = jnp.zeros((uniq.shape[0], self.feat_dim), hot.dtype)
         if include_host:
             out = self._resolve_cold(uniq, tier, slot, out, host, disk,
                                      stage)

@@ -6,8 +6,9 @@ shapes/dtypes in interpret mode against the oracle.
 """
 from repro.kernels.embedding_bag import embedding_bag
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gather_aggregate import gather_aggregate
 from repro.kernels.segment_spmm import segment_spmm
 from repro.kernels.tiered_gather import tiered_gather
 
 __all__ = ["flash_attention", "segment_spmm", "embedding_bag",
-           "tiered_gather"]
+           "tiered_gather", "gather_aggregate"]

@@ -54,6 +54,11 @@ def embedding_bag_pallas(table: jnp.ndarray, ids: jnp.ndarray,
     """table: (V, d); ids: (B, bag) int32 (-1 pad); weights: (B, bag)|None."""
     bsz, bag = ids.shape
     d = table.shape[1]
+    if bsz == 0 or bag == 0 or d == 0:
+        # empty grid / zero-length dynamic slices are rejected by
+        # pallas_call; an empty bag reduces to zeros (mean guard included),
+        # like the oracle
+        return jnp.zeros((bsz, d), table.dtype)
     nb = -(-bsz // block_rows)
     pad = nb * block_rows - bsz
     ids_p = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)

@@ -1,0 +1,7 @@
+from repro.kernels.gather_aggregate.autotune import autotune_gather_aggregate
+from repro.kernels.gather_aggregate.kernel import gather_aggregate_pallas
+from repro.kernels.gather_aggregate.ops import gather_aggregate
+from repro.kernels.gather_aggregate.ref import gather_aggregate_ref
+
+__all__ = ["gather_aggregate", "gather_aggregate_pallas",
+           "gather_aggregate_ref", "autotune_gather_aggregate"]

@@ -1,0 +1,66 @@
+"""Block-size autotune harness for the fused gather→aggregate kernel.
+
+Sweeps ``block_rows`` (segment-block height → VMEM scratch rows, grid
+length) and ``block_dim`` (feature-dim tile width → scratch columns, second
+grid axis) over the caller's real shapes and picks the fastest config.
+
+On this CPU-only container the kernel runs in interpret mode, so the
+timings rank *dataflow* cost (loop trip counts, block bookkeeping), not HBM
+bandwidth. Real-hardware hook: on a TPU host ``ops.gather_aggregate``
+dispatches the compiled Pallas kernel automatically (``use_pallas=None`` →
+backend check), so this same harness — unchanged — times real DMA+VPU
+executions; pass the production (S, fan, d) shapes and persist the returned
+``best`` config next to the serving config.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from .ops import gather_aggregate
+
+DEFAULT_BLOCK_ROWS = (4, 8, 16, 32)
+DEFAULT_BLOCK_DIMS = (0,)  # 0 → no feature-dim tiling (single dim block)
+
+
+def _divisor_dims(d: int) -> tuple[int, ...]:
+    cands = [c for c in (32, 64, 128, 256) if c < d and d % c == 0]
+    return (0, *cands)
+
+
+def autotune_gather_aggregate(tier, slot, hot, warm, cold, *,
+                              block_rows_candidates=DEFAULT_BLOCK_ROWS,
+                              block_dim_candidates=None,
+                              repeats: int = 3) -> dict:
+    """Time every (block_rows, block_dim) candidate on the given inputs.
+
+    Returns ``{"best": {"block_rows": .., "block_dim": ..},
+    "timings_us": {"RxD": median_us, ...}, "interpret": bool}``. Numbers are
+    medians of ``repeats`` runs after one warmup (compile excluded).
+    """
+    if block_dim_candidates is None:
+        block_dim_candidates = _divisor_dims(int(hot.shape[1]))
+    interpret = jax.default_backend() != "tpu"
+    timings: dict[str, float] = {}
+    best = None
+    best_us = None
+    for br in block_rows_candidates:
+        for bd in block_dim_candidates:
+            gather_aggregate(tier, slot, hot, warm, cold, block_rows=br,
+                             block_dim=bd,
+                             use_pallas=True).block_until_ready()
+            samples = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                gather_aggregate(tier, slot, hot, warm, cold,
+                                 block_rows=br, block_dim=bd,
+                                 use_pallas=True).block_until_ready()
+                samples.append((time.perf_counter() - t0) * 1e6)
+            samples.sort()
+            med = samples[len(samples) // 2]
+            timings[f"{br}x{bd}"] = med
+            if best_us is None or med < best_us:
+                best_us = med
+                best = {"block_rows": br, "block_dim": bd}
+    return {"best": best, "timings_us": timings, "interpret": interpret}

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel fusing tier-aware row gather with segment aggregation.
+
+The serve path's largest tensor is the sampled-neighbor feature matrix:
+``tiered_gather`` writes a dense (n_sampled, d) gather result to HBM and the
+model's first aggregation layer immediately reads it back to reduce each
+fan-sized segment — two full trips through memory for data that is consumed
+exactly once. This kernel folds the segment reduction into the gather: per
+(tier, slot)-addressed child it pulls the row straight from whichever tier
+buffer owns it (HOT replica, WARM shard, or the compact pre-resolved cold
+buffer) and accumulates into the per-seed output segment in a VMEM scratch.
+The dense neighbor tensor is never materialized.
+
+Addressing: ``tier``/``slot`` are (S, fan) int32 with one row per output
+segment. Tier codes 0=hot, 1=warm, 2=cold-buffer; anything else (ops.py pads
+with 99, invalid children carry 99) contributes nothing — a degree-0 segment
+therefore yields an exact zero row, matching ``segment_spmm`` semantics.
+Accumulation is sequential fp32 over the fan axis, the same order as
+``tiered_gather``+``segment_spmm``, so the fused result is bit-identical to
+that two-kernel composition.
+
+Grid: (segment_blocks, dim_blocks). The second axis tiles the feature
+dimension in ``block_dim`` columns so the autotune harness can trade VMEM
+scratch footprint against grid overhead; per-column accumulation order is
+unchanged, so tiling never perturbs the numerics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import CompilerParams
+
+
+def _gather_agg_kernel(tier_ref, slot_ref, hot_ref, warm_ref, cold_ref,
+                       o_ref, acc_ref, *, fan: int, block_dim: int):
+    r = o_ref.shape[0]
+    jd = pl.program_id(1) * block_dim
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def seg_body(i, _):
+        def child_body(n, _):
+            t = tier_ref[i, n]
+            s = slot_ref[i, n]
+            hot_row = hot_ref[pl.ds(jnp.where(t == 0, s, 0), 1),
+                              pl.ds(jd, block_dim)]
+            warm_row = warm_ref[pl.ds(jnp.where(t == 1, s, 0), 1),
+                                pl.ds(jd, block_dim)]
+            cold_row = cold_ref[pl.ds(jnp.where(t == 2, s, 0), 1),
+                                pl.ds(jd, block_dim)]
+            row = jnp.where(
+                t == 0, hot_row.astype(jnp.float32),
+                jnp.where(t == 1, warm_row.astype(jnp.float32),
+                          jnp.where(t == 2, cold_row.astype(jnp.float32),
+                                    0.0)))
+            acc_ref[pl.ds(i, 1), :] += row
+            return 0
+
+        jax.lax.fori_loop(0, fan, child_body, 0)
+        return 0
+
+    jax.lax.fori_loop(0, r, seg_body, 0)
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gather_aggregate_pallas(tier: jnp.ndarray, slot: jnp.ndarray,
+                            hot: jnp.ndarray, warm: jnp.ndarray,
+                            cold: jnp.ndarray, *,
+                            block_rows: int = 8,
+                            block_dim: int = 0,
+                            interpret: bool = True) -> jnp.ndarray:
+    """tier/slot: (S, fan) int32 (tier 0=hot, 1=warm, 2=cold, else → zero
+    contribution); hot: (H, d); warm: (W, d); cold: (K, d). Returns (S, d):
+    per-segment sums of the addressed rows. ``block_dim`` ≤ 0 or a
+    non-divisor of d disables feature-dim tiling (single dim block)."""
+    s, fan = tier.shape
+    d = hot.shape[1]
+    if s == 0 or d == 0:
+        return jnp.zeros((s, d), hot.dtype)
+    if fan == 0:
+        return jnp.zeros((s, d), hot.dtype)
+    if block_dim <= 0 or d % block_dim:
+        block_dim = d
+    nb = -(-s // block_rows)
+    ndb = d // block_dim
+    pad = nb * block_rows - s
+    tier_p = jnp.pad(tier, ((0, pad), (0, 0)), constant_values=99)
+    slot_p = jnp.pad(slot, ((0, pad), (0, 0)))
+
+    kernel = functools.partial(_gather_agg_kernel, fan=fan,
+                               block_dim=block_dim)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb, ndb),
+        in_specs=[
+            pl.BlockSpec((block_rows, fan), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_rows, fan), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),     # hot replica in HBM
+            pl.BlockSpec(memory_space=pl.ANY),     # warm shard in HBM
+            pl.BlockSpec(memory_space=pl.ANY),     # resolved cold rows
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_dim), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb * block_rows, d), hot.dtype),
+        scratch_shapes=[pltpu.VMEM((block_rows, block_dim), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(tier_p, slot_p, hot, warm, cold)
+    return out[:s]

@@ -1,0 +1,37 @@
+"""Jitted dispatch for the fused gather→aggregate kernel.
+
+``use_pallas=None`` auto-selects: the Pallas kernel on TPU, the pure-jnp
+oracle elsewhere. On CPU the oracle *is* the serve path — it evaluates the
+same jnp expression as the unfused model aggregation, keeping the fused
+collect bit-identical there; the Pallas kernel (interpret mode off-TPU) is
+exercised by tests and the autotune harness.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gather_aggregate_pallas
+from .ref import gather_aggregate_ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "block_dim", "use_pallas"))
+def gather_aggregate(tier: jnp.ndarray, slot: jnp.ndarray,
+                     hot: jnp.ndarray, warm: jnp.ndarray,
+                     cold: jnp.ndarray, *,
+                     block_rows: int = 8,
+                     block_dim: int = 0,
+                     use_pallas: bool | None = None) -> jnp.ndarray:
+    """Fused tier-gather + segment-sum. tier/slot: (S, fan) int32 addresses
+    (tier 0=hot, 1=warm, 2=cold, other → zero contribution); hot/warm/cold:
+    (·, d) row tables. Returns (S, d) segment sums in fp32 accumulation."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return gather_aggregate_pallas(
+            tier, slot, hot, warm, cold, block_rows=block_rows,
+            block_dim=block_dim,
+            interpret=jax.default_backend() != "tpu")
+    return gather_aggregate_ref(tier, slot, hot, warm, cold)

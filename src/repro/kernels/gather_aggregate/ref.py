@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused gather→aggregate kernel.
+
+Deliberately phrased as ``(rows * mask).sum(axis=1)`` — the exact expression
+``models.gnn_basic.sage_layered`` uses for its masked neighbor aggregation —
+so the CPU serve path (which dispatches this oracle) is bit-identical to the
+unfused gather-then-aggregate model path, not merely allclose.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_aggregate_ref(tier: jnp.ndarray, slot: jnp.ndarray,
+                         hot: jnp.ndarray, warm: jnp.ndarray,
+                         cold: jnp.ndarray) -> jnp.ndarray:
+    """tier/slot: (S, fan) int32; hot/warm/cold: row tables sharing dim d.
+    Returns (S, d) per-segment sums; tier ∉ {0, 1, 2} contributes zero."""
+    safe = jnp.maximum(slot, 0)
+    hot_r = jnp.take(hot, jnp.minimum(safe, hot.shape[0] - 1), axis=0)
+    warm_r = jnp.take(warm, jnp.minimum(safe, warm.shape[0] - 1), axis=0)
+    cold_r = jnp.take(cold, jnp.minimum(safe, cold.shape[0] - 1), axis=0)
+    rows = jnp.where(
+        (tier == 0)[..., None], hot_r,
+        jnp.where((tier == 1)[..., None], warm_r,
+                  jnp.where((tier == 2)[..., None], cold_r, 0.0)))
+    m = (tier <= 2).astype(rows.dtype)[..., None]
+    return (rows * m).sum(axis=1).astype(hot.dtype)

@@ -60,6 +60,10 @@ def segment_spmm_pallas(ids: jnp.ndarray, feat: jnp.ndarray,
     None. Returns (N, d): per-row reduced neighbor features."""
     n, dmax = ids.shape
     d = feat.shape[1]
+    if n == 0 or dmax == 0 or d == 0:
+        # empty grid / zero-length dynamic slices are rejected by
+        # pallas_call; an empty reduction is exactly zeros, like the oracle
+        return jnp.zeros((n, d), feat.dtype)
     nb = -(-n // block_rows)
     pad = nb * block_rows - n
     ids_p = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)

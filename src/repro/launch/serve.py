@@ -63,14 +63,18 @@ MODEL_PRESETS = {
 
 def make_infer_fn(d_feat: int, hidden: tuple[int, ...],
                   fanouts: tuple[int, ...], seed: int = 0):
-    """Jitted GraphSAGE ``infer_fn(hop_feats, hop_ids)`` with the given
-    hidden widths — one per served model."""
+    """Jitted GraphSAGE ``infer_fn(hop_feats, hop_ids[, deep_agg])`` with
+    the given hidden widths — one per served model. ``deep_agg`` carries
+    the innermost hop pre-reduced by the fused gather→aggregate store path
+    (``hop_feats`` then omits that hop; masks still cover it via
+    ``hop_ids``)."""
     params = sage_init(jax.random.key(seed), [d_feat, *hidden])
 
     @jax.jit
-    def infer_fn(hop_feats, hop_ids):
+    def infer_fn(hop_feats, hop_ids, deep_agg=None):
         masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
-        return sage_layered(params, hop_feats, fanouts, hop_masks=masks)
+        return sage_layered(params, hop_feats, fanouts, hop_masks=masks,
+                            deep_agg=deep_agg)
 
     return infer_fn
 
@@ -143,19 +147,22 @@ def build_sharded_store(graph, feats, fap, *, hot_frac: float = 0.25):
 def build_executors(graph, store, fanouts, infer_fn, psgs, *,
                     num_workers: int, max_batch: int, sharded: bool,
                     feats=None, fap=None, hot_frac: float = 0.25,
-                    fused: bool = True):
+                    fused: bool = True, fuse_aggregate: bool = False):
     """Executor registry: host + device, plus the distributed (sharded)
     executor when requested and the runtime has ≥2 devices. ``fused``
     selects the single-dispatch feature-collection path
-    (``store.lookup_hops``); ``False`` keeps the legacy per-hop lookups."""
+    (``store.lookup_hops``); ``False`` keeps the legacy per-hop lookups.
+    ``fuse_aggregate`` additionally folds the innermost-hop aggregation
+    into the gather (``store.lookup_aggregate``); the sharded executor
+    ignores it (its store serves whole rows only)."""
     executors = {
         "host": HostExecutor(graph, store, fanouts, infer_fn,
                              capacity=num_workers, psgs_table=psgs,
-                             fused=fused),
+                             fused=fused, fuse_aggregate=fuse_aggregate),
         "device": DeviceExecutor(graph.device_arrays(), store, fanouts,
                                  infer_fn, max_batch=max_batch,
                                  capacity=num_workers, psgs_table=psgs,
-                                 fused=fused),
+                                 fused=fused, fuse_aggregate=fuse_aggregate),
     }
     if sharded:
         mesh, sstore, splan = build_sharded_store(graph, feats, fap,
@@ -377,6 +384,11 @@ def main() -> None:
                    help="fused feature collection (cross-hop dedup + one "
                         "tiered_gather dispatch); --no-fused keeps the "
                         "legacy per-hop store lookups")
+    p.add_argument("--fuse-aggregate", action=argparse.BooleanOptionalAction,
+                   default=False,
+                   help="fold the innermost-hop aggregation into the "
+                        "gather dispatch (gather_aggregate kernel; the "
+                        "dense neighbor tensor is never materialized)")
     p.add_argument("--micro-batch", type=int, default=0,
                    help="coalesce requests into gather-friendly "
                         "super-batches of up to this many seeds before "
@@ -463,7 +475,8 @@ def main() -> None:
                                 max_batch=args.batch,
                                 sharded=args.sharded and not static_policy,
                                 feats=feats, fap=fap,
-                                hot_frac=args.hot_frac, fused=args.fused)
+                                hot_frac=args.hot_frac, fused=args.fused,
+                                fuse_aggregate=args.fuse_aggregate)
     print(f"[serve] executors: {sorted(executors)}")
 
     if static_policy:

@@ -58,26 +58,47 @@ def sage_full_graph(params: dict, x: jnp.ndarray, src: jnp.ndarray,
 
 def sage_layered(params: dict, hop_feats: list[jnp.ndarray],
                  fanouts: Sequence[int],
-                 hop_masks: list[jnp.ndarray] | None = None) -> jnp.ndarray:
+                 hop_masks: list[jnp.ndarray] | None = None,
+                 deep_agg: jnp.ndarray | None = None) -> jnp.ndarray:
     """Minibatch/serving GraphSAGE: layer ℓ is applied at every remaining hop
     level, shrinking the deepest level each round (standard layered
-    evaluation). hop_feats[k]: (B·∏_{h≤k} f_h, d), -1-padded slots masked."""
+    evaluation). hop_feats[k]: (B·∏_{h≤k} f_h, d), -1-padded slots masked.
+
+    ``deep_agg`` is the fused gather→aggregate fast path: the store already
+    reduced the deepest hop's child rows into per-parent sums
+    (``TieredFeatureStore.lookup_aggregate``), so ``hop_feats`` carries one
+    entry FEWER (the dense deepest-hop tensor is never materialized) while
+    ``hop_masks``, when given, still covers every hop including the deepest —
+    its counts finish the mean here with the same ``m.sum(1)`` expression
+    the unfused branch uses, keeping the two forms bit-identical."""
     L = len(params["layers"])
     assert L == len(fanouts), (L, fanouts)
     h = list(hop_feats)
-    masks = list(hop_masks) if hop_masks is not None else [None] * len(h)
+    masks = (list(hop_masks) if hop_masks is not None
+             else [None] * (len(h) + (deep_agg is not None)))
     for layer in range(L):
         p = params["layers"][layer]
         new_h = []
         for lvl in range(L - layer):
             fan = fanouts[lvl]
-            child = h[lvl + 1].reshape(h[lvl].shape[0], fan, -1)
-            if masks[lvl + 1] is not None:
-                m = masks[lvl + 1].reshape(h[lvl].shape[0], fan, 1)
-                m = m.astype(child.dtype)
-                agg = (child * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+            fused_lvl = False
+            if deep_agg is not None:
+                fused_lvl = layer == 0 and lvl == L - 1
+            if fused_lvl:
+                if masks[lvl + 1] is not None:
+                    m = masks[lvl + 1].reshape(h[lvl].shape[0], fan, 1)
+                    m = m.astype(deep_agg.dtype)
+                    agg = deep_agg / jnp.maximum(m.sum(1), 1.0)
+                else:
+                    agg = deep_agg / fan
             else:
-                agg = child.mean(1)
+                child = h[lvl + 1].reshape(h[lvl].shape[0], fan, -1)
+                if masks[lvl + 1] is not None:
+                    m = masks[lvl + 1].reshape(h[lvl].shape[0], fan, 1)
+                    m = m.astype(child.dtype)
+                    agg = (child * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+                else:
+                    agg = child.mean(1)
             new_h.append(_sage_layer(p, h[lvl], agg,
                                      final=layer == L - 1))
         h = new_h

@@ -109,7 +109,8 @@ class BaseExecutor:
 
     def __init__(self, name: str, *, capacity: int = 1,
                  psgs_table: Optional[np.ndarray] = None,
-                 rng_seed: int = 0, fused: bool = True):
+                 rng_seed: int = 0, fused: bool = True,
+                 fuse_aggregate: bool = False):
         self.name = name
         self.capacity = int(capacity)
         self.psgs_table = psgs_table
@@ -118,6 +119,11 @@ class BaseExecutor:
         # is bit-identical; the flag exists for equivalence testing and for
         # stores that only implement lookup().
         self.fused = bool(fused)
+        # fused gather→aggregate: the store also reduces the innermost hop
+        # into per-parent sums (store.lookup_aggregate), so the dense
+        # deepest-hop tensor never materializes. Requires an ``infer_fn``
+        # accepting ``deep_agg=``; the flag is opt-in for that reason.
+        self.fuse_aggregate = bool(fuse_aggregate)
         self._pool = ThreadPoolExecutor(max_workers=self.capacity,
                                         thread_name_prefix=f"exec-{name}")
         self._lock = threading.Lock()
@@ -166,13 +172,20 @@ class BaseExecutor:
         """
         raise NotImplementedError
 
-    def _collect(self, store, hops) -> list[jnp.ndarray]:
-        """Feature collection for a layered sample: the fused single-dispatch
-        path (``store.lookup_hops``) when enabled and available, else the
-        legacy per-hop loop."""
+    def _collect(self, store, hops):
+        """Feature collection for a layered sample. Returns
+        ``(hop_feats, deep_agg)``: the fused gather→aggregate fast path
+        (``store.lookup_aggregate``) when ``fuse_aggregate`` is enabled and
+        the store supports it — ``hop_feats`` then omits the innermost hop
+        and ``deep_agg`` carries its pre-reduced per-parent sums — else the
+        fused single-dispatch path (``store.lookup_hops``) or the legacy
+        per-hop loop, both with ``deep_agg=None``."""
+        if (self.fuse_aggregate and len(hops) > 1
+                and hasattr(store, "lookup_aggregate")):
+            return store.lookup_aggregate(hops)
         if self.fused and hasattr(store, "lookup_hops"):
-            return store.lookup_hops(hops)
-        return [store.lookup(h) for h in hops]
+            return store.lookup_hops(hops), None
+        return [store.lookup(h) for h in hops], None
 
     def supports(self, seeds: np.ndarray) -> bool:
         """Eligibility for a batch — routers skip executors returning False
@@ -225,9 +238,11 @@ class HostExecutor(BaseExecutor):
     def __init__(self, graph, store, fanouts: Sequence[int],
                  infer_fn: Callable, *, capacity: int = 1,
                  psgs_table: Optional[np.ndarray] = None, rng_seed: int = 0,
-                 fused: bool = True, name: str = "host"):
+                 fused: bool = True, fuse_aggregate: bool = False,
+                 name: str = "host"):
         super().__init__(name, capacity=capacity, psgs_table=psgs_table,
-                         rng_seed=rng_seed, fused=fused)
+                         rng_seed=rng_seed, fused=fused,
+                         fuse_aggregate=fuse_aggregate)
         self.graph = graph
         self.store = store
         self.fanouts = tuple(fanouts)
@@ -241,7 +256,9 @@ class HostExecutor(BaseExecutor):
         hops_np = host_sample_dense(self._child_rng(), self.graph, seeds_p,
                                     self.fanouts)
         hops = [jnp.asarray(h) for h in hops_np]
-        hop_feats = self._collect(self.store, hops)
+        hop_feats, deep_agg = self._collect(self.store, hops)
+        if deep_agg is not None:
+            return self.infer_fn(hop_feats, hops, deep_agg=deep_agg)[:n]
         return self.infer_fn(hop_feats, hops)[:n]
 
 
@@ -257,9 +274,11 @@ class DeviceExecutor(BaseExecutor):
                  fanouts: Sequence[int], infer_fn: Callable, *,
                  max_batch: int = 128, capacity: int = 1,
                  psgs_table: Optional[np.ndarray] = None, rng_seed: int = 0,
-                 fused: bool = True, name: str = "device"):
+                 fused: bool = True, fuse_aggregate: bool = False,
+                 name: str = "device"):
         super().__init__(name, capacity=capacity, psgs_table=psgs_table,
-                         rng_seed=rng_seed, fused=fused)
+                         rng_seed=rng_seed, fused=fused,
+                         fuse_aggregate=fuse_aggregate)
         self.graph_dev = graph_dev
         self.store = store
         self.fanouts = tuple(fanouts)
@@ -278,8 +297,11 @@ class DeviceExecutor(BaseExecutor):
             seeds_p[:chunk.shape[0]] = chunk
             hops = device_sample(self._next_key(), *self.graph_dev,
                                  jnp.asarray(seeds_p), self.fanouts)
-            hop_feats = self._collect(self.store, hops)
-            outs.append(self.infer_fn(hop_feats, hops)[:chunk.shape[0]])
+            hop_feats, deep_agg = self._collect(self.store, hops)
+            out = (self.infer_fn(hop_feats, hops, deep_agg=deep_agg)
+                   if deep_agg is not None
+                   else self.infer_fn(hop_feats, hops))
+            outs.append(out[:chunk.shape[0]])
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
 
 
@@ -366,6 +388,11 @@ class ShardedExecutor(BaseExecutor):
             seeds_p[:chunk.shape[0]] = chunk
             hops = list(self._sample(*self.graph_dev, jnp.asarray(seeds_p),
                                      self._next_key()))
-            hop_feats = self._collect(self.sstore, hops)
-            outs.append(self.infer_fn(hop_feats, hops)[:chunk.shape[0]])
+            # ShardedFeatureStore has no lookup_aggregate — _collect falls
+            # back to the fused whole-row path there, deep_agg stays None
+            hop_feats, deep_agg = self._collect(self.sstore, hops)
+            out = (self.infer_fn(hop_feats, hops, deep_agg=deep_agg)
+                   if deep_agg is not None
+                   else self.infer_fn(hop_feats, hops))
+            outs.append(out[:chunk.shape[0]])
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)

@@ -1,0 +1,406 @@
+"""Fused gather→aggregate path (PR 9): the gather_aggregate kernel is
+bit-identical to the tiered_gather+segment_spmm composition across an
+embedding-dim sweep, lookup_aggregate matches the unfused layer-1 path
+(incl. all-cold batches and under concurrent migration), executors hand
+models pre-aggregated inputs without changing outputs, and the empty-shape
+regressions for segment_spmm / embedding_bag."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (TieredFeatureStore, TopologySpec, compute_fap,
+                        migration_pairs, quiver_placement)
+from repro.core.placement import TIER_HOST
+from repro.graph import power_law_graph
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.gather_aggregate import (autotune_gather_aggregate,
+                                            gather_aggregate,
+                                            gather_aggregate_pallas,
+                                            gather_aggregate_ref)
+from repro.kernels.segment_spmm.kernel import segment_spmm_pallas
+from repro.kernels.segment_spmm.ref import segment_spmm_ref
+from repro.kernels.tiered_gather.kernel import tiered_gather_pallas
+from repro.models.gnn_basic import sage_init, sage_layered
+from repro.serving import DeviceExecutor, HostExecutor
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fixtures (mirrors tests/test_fused_gather.py)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def stack():
+    n, d, fan = 900, 12, (4, 3)
+    g = power_law_graph(n, 6.0, seed=0)
+    feats = np.random.default_rng(1).normal(size=(n, d)).astype(np.float32)
+    fap = compute_fap(g, fan)
+    topo = TopologySpec(num_pods=1, devices_per_pod=1, rows_per_device=220,
+                        rows_host=330, hot_replicate_fraction=0.3)
+    return g, fan, feats, fap, topo
+
+
+def _fresh_store(stack):
+    g, fan, feats, fap, topo = stack
+    return TieredFeatureStore.build(feats, quiver_placement(fap, topo))
+
+
+def _hops(n, fan, batch, seed=0, pool=None):
+    """Layered (seeds, hop1, hop2) sample with -1 padding mixed in."""
+    rng = np.random.default_rng(seed)
+    draw = ((lambda s: rng.integers(-1, n, size=s)) if pool is None
+            else (lambda s: rng.choice(pool, size=s)))
+    return [jnp.asarray(draw(batch).astype(np.int32)),
+            jnp.asarray(draw(batch * fan[0]).astype(np.int32)),
+            jnp.asarray(draw(batch * fan[0] * fan[1]).astype(np.int32))]
+
+
+def _addresses(rng, s, fan, h, w, k, *, ragged=True):
+    """Random (tier, slot) segment matrix over 3 sources + invalid pads."""
+    tier = rng.choice([0, 1, 2, 99], size=(s, fan),
+                      p=[.4, .3, .2, .1]).astype(np.int32)
+    if ragged:
+        tier[0] = 99                         # degree-0 segment
+        tier[1, 1:] = 99                     # degree-1 segment
+    slot = np.zeros((s, fan), np.int32)
+    slot[tier == 0] = rng.integers(0, h, (tier == 0).sum())
+    slot[tier == 1] = rng.integers(0, w, (tier == 1).sum())
+    slot[tier == 2] = rng.integers(0, k, (tier == 2).sum())
+    return jnp.asarray(tier), jnp.asarray(slot)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level: gather_aggregate vs tiered_gather+segment_spmm, dim sweep
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("d", [16, 64, 256])
+def test_kernel_bit_identical_to_composition(d):
+    """The fused kernel accumulates in the same fp32 order as the
+    tiered_gather → segment_spmm composition, so interpret-mode outputs are
+    bitwise equal — the perf claim never trades numerics."""
+    rng = np.random.default_rng(d)
+    s, fan, h, w, k = 37, 5, 50, 40, 9
+    hot = jnp.asarray(rng.normal(size=(h, d)).astype(np.float32))
+    warm = jnp.asarray(rng.normal(size=(w, d)).astype(np.float32))
+    cold = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    tier, slot = _addresses(rng, s, fan, h, w, k)
+    fused = gather_aggregate_pallas(tier, slot, hot, warm, cold,
+                                    block_rows=8, interpret=True)
+    # the unfused reference: dense gather (cold rows substituted — copies,
+    # so no arithmetic differs), then the segment reduction kernel
+    dense = tiered_gather_pallas(tier.reshape(-1), slot.reshape(-1), hot,
+                                 warm, interpret=True)
+    cold_rows = jnp.take(cold, jnp.minimum(jnp.maximum(
+        slot.reshape(-1), 0), k - 1), axis=0)
+    dense = jnp.where((tier.reshape(-1) == 2)[:, None], cold_rows, dense)
+    pos = np.arange(s * fan, dtype=np.int32).reshape(s, fan)
+    pos = np.where(np.asarray(tier) <= 2, pos, -1).astype(np.int32)
+    comp = segment_spmm_pallas(jnp.asarray(pos), dense, block_rows=8,
+                               interpret=True)
+    assert np.array_equal(np.asarray(fused), np.asarray(comp))
+    # oracle within kernel tolerance, and bitwise vs itself under jit
+    ref = gather_aggregate_ref(tier, slot, hot, warm, cold)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref), **TOL)
+    via_ops = gather_aggregate(tier, slot, hot, warm, cold,
+                               use_pallas=False)
+    assert np.array_equal(np.asarray(via_ops), np.asarray(ref))
+
+
+@pytest.mark.parametrize("block_rows,block_dim", [(4, 0), (8, 8), (16, 4),
+                                                  (32, 16)])
+def test_kernel_tiling_never_changes_bits(block_rows, block_dim):
+    """block_rows/block_dim only re-tile the grid; per-column accumulation
+    order is untouched, so every config is bitwise identical."""
+    rng = np.random.default_rng(3)
+    s, fan, d = 19, 4, 32
+    hot = jnp.asarray(rng.normal(size=(30, d)).astype(np.float32))
+    warm = jnp.asarray(rng.normal(size=(20, d)).astype(np.float32))
+    cold = jnp.asarray(rng.normal(size=(5, d)).astype(np.float32))
+    tier, slot = _addresses(rng, s, fan, 30, 20, 5)
+    base = gather_aggregate_pallas(tier, slot, hot, warm, cold,
+                                   block_rows=8, interpret=True)
+    tiled = gather_aggregate_pallas(tier, slot, hot, warm, cold,
+                                    block_rows=block_rows,
+                                    block_dim=block_dim, interpret=True)
+    assert np.array_equal(np.asarray(base), np.asarray(tiled))
+
+
+def test_kernel_empty_and_ragged_segments():
+    d = 8
+    hot = jnp.ones((4, d), jnp.float32)
+    warm = jnp.ones((4, d), jnp.float32)
+    cold = jnp.ones((1, d), jnp.float32)
+    for s, fan in ((0, 3), (5, 0)):
+        tier = jnp.zeros((s, fan), jnp.int32)
+        out = gather_aggregate_pallas(tier, tier, hot, warm, cold,
+                                      interpret=True)
+        assert out.shape == (s, d) and not np.asarray(out).any()
+        ref = gather_aggregate_ref(tier, tier, hot, warm, cold)
+        assert ref.shape == (s, d) and not np.asarray(ref).any()
+    # all-invalid (degree-0) segments are exact zeros, never NaN
+    tier = jnp.full((6, 3), 99, jnp.int32)
+    out = gather_aggregate_pallas(tier, jnp.zeros_like(tier), hot, warm,
+                                  cold, interpret=True)
+    assert not np.asarray(out).any()
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_autotune_returns_valid_config():
+    rng = np.random.default_rng(0)
+    hot = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    tier, slot = _addresses(rng, 12, 3, 16, 16, 1, ragged=False)
+    tune = autotune_gather_aggregate(
+        tier, slot, hot, hot, jnp.zeros((1, 8), jnp.float32),
+        block_rows_candidates=(4, 8), block_dim_candidates=(0,), repeats=1)
+    assert tune["best"]["block_rows"] in (4, 8)
+    assert len(tune["timings_us"]) == 2
+    assert tune["interpret"] is (jax.default_backend() != "tpu")
+
+
+# ---------------------------------------------------------------------------
+# Store-level: lookup_aggregate vs lookup_hops + model aggregation
+# ---------------------------------------------------------------------------
+def _expected_agg(store, hops, fan):
+    """The unfused layer-1 path: gather, then the model's exact masked-mean
+    numerator ``(child * m).sum(1)``."""
+    feats_u = store.lookup_hops(hops)
+    p = int(hops[-2].shape[0])
+    child = feats_u[-1].reshape(p, fan[-1], -1)
+    m = (hops[-1] >= 0).astype(jnp.float32).reshape(p, fan[-1], 1)
+    return feats_u, (child * m).sum(1)
+
+
+@pytest.mark.parametrize("use_pallas", [None, True])
+def test_lookup_aggregate_matches_unfused(stack, use_pallas):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    hops = _hops(g.num_nodes, fan, 16, seed=1)
+    feats_u, expected = _expected_agg(store, hops, fan)
+    feats_f, agg = store.lookup_aggregate(hops, use_pallas=use_pallas)
+    assert len(feats_f) == len(hops) - 1
+    for a, b in zip(feats_u[:-1], feats_f):
+        if use_pallas is None:  # CPU dispatches the model-identical oracle
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+    if use_pallas is None:
+        assert np.array_equal(np.asarray(agg), np.asarray(expected))
+    else:
+        np.testing.assert_allclose(np.asarray(agg), np.asarray(expected),
+                                   **TOL)
+
+
+def test_lookup_aggregate_all_cold_batch(stack):
+    """Every sampled id on the HOST/DISK tiers: the whole aggregate flows
+    through the pre-resolved cold side-table (and one callback)."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    cold_pool = np.flatnonzero(np.asarray(store.plan.tier) >= TIER_HOST)
+    assert cold_pool.size > 0
+    hops = _hops(g.num_nodes, fan, 8, seed=2, pool=cold_pool)
+    feats_u, expected = _expected_agg(store, hops, fan)
+    store.reset_stats()
+    feats_f, agg = store.lookup_aggregate(hops)
+    stats = store.reset_stats()
+    assert np.array_equal(np.asarray(agg), np.asarray(expected))
+    for a, b in zip(feats_u[:-1], feats_f):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert stats["host_fetches"] == 1       # one gateway round-trip
+    assert stats["device_gathers"] == 1     # one fused kernel dispatch
+    assert stats["fused_aggregates"] == 1
+
+
+def test_lookup_aggregate_exclude_host_and_errors(stack):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    hops = _hops(g.num_nodes, fan, 8, seed=3)
+    feats_u, _ = _expected_agg(store, hops, fan)  # warm the jit caches
+    feats_un = store.lookup_hops(hops, include_host=False)
+    p = int(hops[-2].shape[0])
+    child = feats_un[-1].reshape(p, fan[-1], -1)
+    m = (hops[-1] >= 0).astype(jnp.float32).reshape(p, fan[-1], 1)
+    feats_f, agg = store.lookup_aggregate(hops, include_host=False)
+    assert np.array_equal(np.asarray(agg), np.asarray((child * m).sum(1)))
+    for a, b in zip(feats_un[:-1], feats_f):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="frontier"):
+        store.lookup_aggregate([hops[0]])
+    with pytest.raises(ValueError, match="P\\*fan"):
+        store.lookup_aggregate([hops[0], hops[1][:-1]])
+
+
+def test_lookup_aggregate_model_output_bit_identical(stack):
+    """The full serve contract: sage_layered(deep_agg=...) on the fused
+    collect equals the unfused forward bit for bit."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    params = sage_init(jax.random.key(0), [feats.shape[1], 16, 16])
+
+    @jax.jit
+    def infer(hop_feats, hop_ids, deep_agg=None):
+        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
+        return sage_layered(params, hop_feats, fan, hop_masks=masks,
+                            deep_agg=deep_agg)
+
+    hops = _hops(g.num_nodes, fan, 16, seed=4)
+    feats_u = store.lookup_hops(hops)
+    feats_f, agg = store.lookup_aggregate(hops)
+    out_u = infer(feats_u, hops)
+    out_f = infer(feats_f, hops, deep_agg=agg)
+    assert np.array_equal(np.asarray(out_u), np.asarray(out_f))
+
+
+def test_lookup_aggregate_under_concurrent_migration(stack):
+    """Migration-race harness (tests/test_fused_gather.py): a reader doing
+    fused gather→aggregate lookups while rows migrate between tiers must
+    only ever see exact aggregates — one snapshot covers resolve + kernel."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    rng = np.random.default_rng(7)
+    hops = [jnp.asarray(rng.integers(0, g.num_nodes, 8).astype(np.int32)),
+            jnp.asarray(rng.integers(0, g.num_nodes, 8 * fan[0])
+                        .astype(np.int32)),
+            jnp.asarray(rng.integers(0, g.num_nodes, 8 * fan[0] * fan[1])
+                        .astype(np.int32))]
+    p = 8 * fan[0]
+    exp_feats = [feats[np.asarray(h)] for h in hops[:-1]]
+    exp_agg = feats[np.asarray(hops[-1])].reshape(p, fan[1], -1).sum(1)
+    stop = threading.Event()
+    errors: list[str] = []
+
+    def reader():
+        while not stop.is_set():
+            got, agg = store.lookup_aggregate(hops)
+            for e, o in zip(exp_feats, got):
+                if not np.allclose(np.asarray(o), e, rtol=1e-5):
+                    errors.append("torn outer rows during migration")
+                    return
+            if not np.allclose(np.asarray(agg), exp_agg, rtol=1e-4,
+                               atol=1e-5):
+                errors.append("torn aggregate during migration")
+                return
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        drifted = fap.copy()
+        drifted[np.argsort(fap)[:80]] += fap.max() * 3
+        tgt = quiver_placement(drifted, topo)
+        for _ in range(10):
+            pairs = migration_pairs(store.plan.tier, tgt.tier, drifted,
+                                    budget=20)
+            if not pairs:
+                break
+            store.swap_assignments(pairs)
+    finally:
+        stop.set()
+        t.join(timeout=30)
+    assert not errors
+    _, agg = store.lookup_aggregate(hops)
+    np.testing.assert_allclose(np.asarray(agg), exp_agg, rtol=1e-4,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Executor-level: fuse_aggregate vs fused output equivalence
+# ---------------------------------------------------------------------------
+def _infer(stack):
+    g, fan, feats, fap, topo = stack
+    params = sage_init(jax.random.key(0), [feats.shape[1], 16, 16])
+
+    @jax.jit
+    def infer_fn(hop_feats, hop_ids, deep_agg=None):
+        masks = [(h >= 0).astype(jnp.float32)[:, None] for h in hop_ids]
+        return sage_layered(params, hop_feats, fan, hop_masks=masks,
+                            deep_agg=deep_agg)
+
+    return infer_fn
+
+
+def test_host_executor_fuse_aggregate_matches_fused(stack):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    infer_fn = _infer(stack)
+    seeds = np.arange(12)
+    outs = {}
+    for fa in (False, True):
+        ex = HostExecutor(g, store, fan, infer_fn, rng_seed=5,
+                          fuse_aggregate=fa)
+        outs[fa] = np.asarray(ex.run(seeds))
+        ex.close()
+    assert np.array_equal(outs[False], outs[True])  # same rng → same sample
+
+
+def test_device_executor_fuse_aggregate_matches_fused(stack):
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    infer_fn = _infer(stack)
+    seeds = np.arange(10)
+    outs = {}
+    for fa in (False, True):
+        ex = DeviceExecutor(g.device_arrays(), store, fan, infer_fn,
+                            max_batch=16, rng_seed=5, fuse_aggregate=fa)
+        outs[fa] = np.asarray(ex.run(seeds))
+        ex.close()
+    assert np.array_equal(outs[False], outs[True])
+
+
+def test_fuse_aggregate_dispatch_stats(stack):
+    """Structural accounting: the fused path folds the aggregation into its
+    single device gather and counts one fused_aggregates entry."""
+    g, fan, feats, fap, topo = stack
+    store = _fresh_store(stack)
+    hops = _hops(g.num_nodes, fan, 16, seed=6)
+    store.reset_stats()
+    store.lookup_aggregate(hops)
+    s = store.reset_stats()
+    assert s["fused_aggregates"] == 1 and s["fused_calls"] == 1
+    assert s["device_gathers"] == 1 and s["host_fetches"] <= 1
+    store.lookup_hops(hops)
+    s = store.reset_stats()
+    assert s["fused_aggregates"] == 0 and s["fused_calls"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: empty shapes in segment_spmm / embedding_bag
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,dmax,d", [(0, 4, 8), (5, 0, 8), (5, 4, 0),
+                                      (0, 0, 0)])
+def test_segment_spmm_empty_shapes(n, dmax, d):
+    ids = jnp.full((n, dmax), -1, jnp.int32)
+    feat = jnp.ones((max(n, 1), d), jnp.float32)
+    out = segment_spmm_pallas(ids, feat, interpret=True)
+    ref = segment_spmm_ref(ids, feat)
+    assert out.shape == (n, d) == ref.shape
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("b,bag,d", [(0, 4, 8), (5, 0, 8), (5, 4, 0)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embedding_bag_empty_shapes(b, bag, d, mode):
+    ids = jnp.full((b, bag), -1, jnp.int32)
+    table = jnp.ones((4, d), jnp.float32)
+    out = embedding_bag_pallas(table, ids, mode=mode, interpret=True)
+    ref = embedding_bag_ref(table, ids, mode=mode)
+    assert out.shape == (b, d) == ref.shape
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_degree_zero_rows_mean_is_zero_not_nan():
+    """All-padding rows (degree 0) must reduce to exact zeros under mean —
+    the divide guards in kernel and oracle."""
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(6, 8)).astype(np.float32))
+    ids = np.array([[0, 1, -1], [-1, -1, -1], [2, -1, -1]], np.int32)
+    for fn in (lambda: embedding_bag_pallas(table, jnp.asarray(ids),
+                                            mode="mean", interpret=True),
+               lambda: embedding_bag_ref(table, ids, mode="mean")):
+        out = np.asarray(fn())
+        assert np.isfinite(out).all()
+        assert not out[1].any()
+    spmm = np.asarray(segment_spmm_pallas(jnp.asarray(ids), table,
+                                          interpret=True))
+    assert np.isfinite(spmm).all() and not spmm[1].any()

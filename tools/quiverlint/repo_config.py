@@ -74,6 +74,7 @@ class DocsSpec:
         "src/repro/testing/clock.py": ["FakeClock"],
         "src/repro/core/feature_store.py": [
             "TieredFeatureStore.lookup", "TieredFeatureStore.lookup_hops",
+            "TieredFeatureStore.lookup_aggregate",
             "TieredFeatureStore.swap_assignments",
             "TieredFeatureStore.publish_stage",
             "TieredFeatureStore.promote_misses", "DiskSpillTier"],
@@ -169,6 +170,7 @@ class Config:
     # steady-state hot path entry points (qualnames)
     hot_path_roots: frozenset = frozenset({
         "TieredFeatureStore.lookup", "TieredFeatureStore.lookup_hops",
+        "TieredFeatureStore.lookup_aggregate",
         "ShardedFeatureStore.lookup", "ShardedFeatureStore.lookup_hops",
         "GPUFeatureCache.query",
         "BaseExecutor.submit", "BaseExecutor._collect",
