@@ -25,6 +25,7 @@ MODULES = [
     "fused_gather",        # fused feature-collection hot path
     "gather_aggregate",    # fused gather→aggregate layer-1 path
     "prefetch",            # cold-tier staging vs critical-path callbacks
+    "sharded_hierarchy",   # dedup exchange + per-shard staging/spill
     "flash_crowd",         # device cache vs adaptive-only under drift
     "gateway_soak",        # SLO-aware admission vs FIFO under overload
     "multi_model",         # shared-store registry vs isolated engines

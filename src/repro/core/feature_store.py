@@ -1016,35 +1016,89 @@ class TieredFeatureStore:
 # ---------------------------------------------------------------------------
 # Distributed store: shard_map one-sided reads over the mesh
 # ---------------------------------------------------------------------------
+
+# Canonical stats schema for ShardedFeatureStore dispatch accounting —
+# mirrored by the `sharded-schema` table in docs/invariants.md and
+# cross-checked against the class's stats declaration by quiverlint's
+# schema-sync pass.
+SHARDED_STATS_SCHEMA: tuple = (
+    "exchanges", "exchanged_ids", "stage_hits", "stage_misses",
+    "host_fetches", "cold_rows", "spill_reads")
+
+
+def _new_sharded_stats() -> dict[str, int]:
+    """Dispatch accounting for the sharded exchange (schema:
+    ``SHARDED_STATS_SCHEMA``; benchmark signal:
+    ``benchmarks/sharded_hierarchy.py``):
+
+      exchanges        dedup ``all_to_all`` exchanges dispatched
+      exchanged_ids    distinct (device, id) pairs moved through the
+                       exchange — an id duplicated across hops costs one
+                       entry however many positions repeat it
+      stage_hits       cold id occurrences resolved from a per-shard
+                       staging buffer inside the exchange
+      stage_misses     cold id occurrences that fell through to the
+                       host-side miss path
+      host_fetches     host-side cold fetch round-trips actually issued
+                       (a lookup whose cold ids are all staged issues 0)
+      cold_rows        id occurrences those fetches resolved
+      spill_reads      rows read from the per-shard DISK spill files
+    """
+    return {"exchanges": 0, "exchanged_ids": 0, "stage_hits": 0,
+            "stage_misses": 0, "host_fetches": 0, "cold_rows": 0,
+            "spill_reads": 0}
+
+
 class ShardedFeatureStore:
     """Feature store laid out over a device mesh axis.
 
     hot  : (n_hot, d) replicated
     warm : (world * rows_per_dev, d) sharded on axis 0 over ``axis_name``
-    Lookup runs under ``shard_map``; each device resolves its own request
-    vector; warm misses are exchanged with allgather+reduce_scatter (default)
-    or capacity-bounded all_to_all.
 
-    HOST/DISK-tier ids used to silently resolve to ZEROS here (the sharded
-    store serves only the HBM tiers). Built via :meth:`from_tiered` it now
-    keeps a reference to the source :class:`TieredFeatureStore` and
-    resolves cold ids through a correct — slow — host fetch after the mesh
-    exchange (:meth:`TieredFeatureStore.read_cold_rows`, one consistent
-    snapshot, so values stay exact even against racing promotion on the
-    source store). The fallback is counted in :attr:`stats`
-    (``host_fetches`` callbacks / ``cold_rows`` resolved), which the
-    serving engine snapshots into ``ServeMetrics.summary()["store"]``.
-    Directly-constructed stores (no tiered source) keep the zeros
-    behavior.
+    Lookup runs under ``shard_map``, with two exchange strategies:
+
+    ``"alltoall"`` (default) — the owner-sorted, capacity-bounded dedup
+    exchange. Ids are deduplicated host-side across *all* hops of a
+    sample, sorted by owner, padded to a pow2 per-(device, owner)
+    capacity, and moved through two untiled ``jax.lax.all_to_all``
+    collectives (requests out, rows back — the RDMA-read analogue: only
+    distinct rows travel). Cold (HOST/DISK) ids resolve from per-shard
+    staging buffers *inside* the same exchange when staged
+    (:meth:`publish_stage`); only actual misses fall back to one
+    host-side fetch (:meth:`read_cold_rows`) merged after the exchange.
+
+    ``"allgather"`` (legacy) — allgather every wanted warm slot, owners
+    answer, ``psum_scatter`` returns each requester's rows; every
+    occurrence is exchanged and cold ids are resolved by a host
+    post-pass.
+
+    Both strategies are bit-identical to each other, to per-hop calls
+    and to the single-host :class:`TieredFeatureStore` — rows are moved
+    and selected, never operated on. Built via :meth:`from_tiered` the
+    store keeps a reference to the source store for host fetches, and
+    optionally per-shard :class:`DiskSpillTier` files (``spill_dir=``)
+    so each shard owns its cold rows. Directly-constructed stores (no
+    tiered source) keep the documented zeros behavior for cold ids.
+    Dispatch counters land in :attr:`stats` (schema
+    ``SHARDED_STATS_SCHEMA``), which the serving engine snapshots into
+    ``ServeMetrics.summary()["store"]``.
     """
 
     def __init__(self, mesh: Mesh, axis_name: str, hot: jnp.ndarray,
                  warm: jnp.ndarray, tier_t: jnp.ndarray, slot_t: jnp.ndarray,
-                 owner_t: jnp.ndarray, strategy: str = "allgather"):
+                 owner_t: jnp.ndarray, strategy: str = "alltoall"):
         self.mesh, self.axis = mesh, axis_name
         self.world = int(np.prod([mesh.shape[a] for a in
                                   (axis_name if isinstance(axis_name, tuple)
                                    else (axis_name,))]))
+        if self.world and warm.shape[0] % self.world:
+            raise ValueError(
+                f"warm.shape[0] ({warm.shape[0]}) must be divisible by the "
+                f"mesh world size ({self.world}) — a ragged warm buffer "
+                f"would silently truncate the last shard")
+        if strategy not in ("alltoall", "allgather"):
+            raise ValueError(f"unknown exchange strategy {strategy!r} "
+                             f"(want 'alltoall' or 'allgather')")
         self.rows_per_dev = warm.shape[0] // max(self.world, 1)
         self.strategy = strategy
         rep = NamedSharding(mesh, P())
@@ -1055,30 +1109,36 @@ class ShardedFeatureStore:
         self.slot_t = jax.device_put(slot_t, rep)
         self.owner_t = jax.device_put(owner_t, rep)
         self.feat_dim = hot.shape[1]
-        # host-side tier mirror (static — the sharded store never migrates)
-        # so the cold-fallback mask costs no device round-trip per lookup
+        # host-side table mirrors (static — the sharded store never
+        # migrates) so per-lookup prep costs no device round-trips
         self._tier_np = np.asarray(tier_t)
+        self._slot_np = np.asarray(slot_t).astype(np.int64)
+        self._owner_np = np.asarray(owner_t).astype(np.int64)
+        self._has_cold = bool((self._tier_np >= TIER_HOST).any())
         self._tiered: Optional[TieredFeatureStore] = None
-        self.stats = {"host_fetches": 0, "cold_rows": 0}
+        self._spill: Optional[list] = None
+        self._spill_slot: Optional[np.ndarray] = None
+        self._spill_dtype = np.dtype(np.float32)
+        self._stage = None
+        self._stage_lock = threading.Lock()
+        self.stats = _new_sharded_stats()
         self._stats_lock = threading.Lock()
 
     @staticmethod
     def from_tiered(store: TieredFeatureStore, mesh: Mesh, axis_name: str,
-                    strategy: str = "allgather") -> "ShardedFeatureStore":
+                    strategy: str = "alltoall", *,
+                    spill_dir: Optional[str] = None) -> "ShardedFeatureStore":
         topo = store.plan.topology
         world = topo.num_pods * topo.devices_per_pod
         mesh_world = int(np.prod([mesh.shape[a] for a in
                                   (axis_name if isinstance(axis_name, tuple)
                                    else (axis_name,))]))
         assert world == mesh_world, (world, mesh_world)
-        # pad warm shards to equal size
+        # pad warm shards to equal size and rebuild the slot table against
+        # the padded bases
         rows = store.warm.shape[0]
         per = -(-rows // world)
-        warm = jnp.zeros((per * world, store.feat_dim), store.warm.dtype)
         counts = np.diff(np.append(np.asarray(store.warm_base), rows))
-        slot_shift = np.zeros(int(np.asarray(store.owner_t).shape[0]),
-                              np.int64)
-        # rebuild slot table with padded bases
         owner = np.asarray(store.owner_t)
         slot = np.asarray(store.slot_t).astype(np.int64)
         tier = np.asarray(store.tier_t)
@@ -1096,21 +1156,218 @@ class ShardedFeatureStore:
             mesh, axis_name, store.hot, jnp.asarray(warm_np),
             store.tier_t, jnp.asarray(new_slot, dtype=jnp.int32),
             store.owner_t, strategy)
-        ss._tiered = store    # cold-tier (HOST/DISK) host-fetch fallback
+        ss._tiered = store    # cold-tier (HOST/DISK) host-fetch miss path
+        if spill_dir is not None:
+            ss._attach_spill(store, spill_dir)
         return ss
+
+    def _attach_spill(self, store: TieredFeatureStore, spill_dir) -> None:
+        """Build one per-shard :class:`DiskSpillTier` file per mesh device
+        (shard ``w`` owns the DISK rows of ids with ``id % world == w``)
+        plus the id → shard-local-row table the miss path reads through.
+        Rows are copied at build time and stay exact under concurrent
+        source-store migration: swaps move placements, never values."""
+        world = max(self.world, 1)
+        os.makedirs(spill_dir, exist_ok=True)
+        n = self._tier_np.shape[0]
+        spill_slot = np.full(n, -1, np.int32)
+        tiers: list = []
+        disk_ids = np.flatnonzero(self._tier_np == TIER_DISK)
+        for w in range(world):
+            ids_w = disk_ids[disk_ids % world == w]
+            if ids_w.size == 0:
+                tiers.append(None)
+                continue
+            rows = store.read_cold_rows(ids_w)
+            path = os.path.join(spill_dir, f"shard{w:03d}.spill")
+            tiers.append(DiskSpillTier.build(rows, path))
+            spill_slot[ids_w] = np.arange(ids_w.size, dtype=np.int32)
+            self._spill_dtype = rows.dtype
+        self._spill = tiers
+        self._spill_slot = spill_slot
+
+    def read_cold_rows(self, ids: np.ndarray) -> np.ndarray:
+        """Host-side exact reader for cold (HOST/DISK) rows — the dedup
+        exchange's miss path and the staging source a
+        :class:`~repro.core.prefetch.Prefetcher` reads through. DISK rows
+        come from this store's per-shard spill files when built with
+        ``from_tiered(..., spill_dir=...)`` (counted as ``spill_reads``);
+        everything else — HOST rows, rows without a per-shard file, raced
+        promotions — delegates to the source store's
+        :meth:`TieredFeatureStore.read_cold_rows`. Plain numpy end to
+        end, never an ``io_callback``: quiverlint's callback pass pins
+        this as the only host-data route out of the sharded hot path.
+        Without a tiered source (directly-constructed store) cold rows
+        read as zeros."""
+        ids = np.asarray(ids).reshape(-1)
+        if self._spill is None or self._spill_slot is None:
+            if self._tiered is None:
+                return np.zeros((ids.shape[0], self.feat_dim),
+                                self._spill_dtype)
+            return self._tiered.read_cold_rows(ids)
+        world = max(self.world, 1)
+        safe = np.maximum(ids, 0)
+        srow = self._spill_slot[safe]
+        local = (ids >= 0) & (self._tier_np[safe] == TIER_DISK) & (srow >= 0)
+        out = np.zeros((ids.shape[0], self.feat_dim), self._spill_dtype)
+        if local.any():
+            idx = np.flatnonzero(local)
+            own = safe[idx] % world
+            for w in np.unique(own):
+                sel = idx[own == w]
+                out[sel] = self._spill[int(w)][srow[sel]]
+            with self._stats_lock:
+                self.stats["spill_reads"] += int(local.sum())
+        rest = (ids >= 0) & ~local
+        if rest.any() and self._tiered is not None:
+            out[rest] = self._tiered.read_cold_rows(ids[rest])
+        return out
+
+    def publish_stage(self, stage_slot, stage_rows) -> None:
+        """Publish (``stage_slot, stage_rows``) or clear (``None, None``)
+        the per-shard staging buffers. Accepts the global ``(N,)``
+        id → staged-row layout the
+        :class:`~repro.core.prefetch.Prefetcher` publishes (the
+        :meth:`TieredFeatureStore.publish_stage` contract) and re-bins it
+        per shard: cold id ``i`` goes to shard ``i % world``, every shard
+        is padded to a shared pow2 row capacity, and the buffer is
+        device_put sharded over the mesh axis — so the dedup exchange
+        resolves staged cold ids with the exact same ``all_to_all`` that
+        serves WARM rows, and one unmodified prefetcher feeds every
+        shard."""
+        if stage_slot is None or stage_rows is None:
+            with self._stage_lock:
+                self._stage = None
+            return
+        world = max(self.world, 1)
+        stage_slot = np.asarray(stage_slot)
+        rows_all = np.asarray(stage_rows)
+        ids = np.flatnonzero(stage_slot >= 0)
+        if ids.size == 0:
+            with self._stage_lock:
+                self._stage = None
+            return
+        rows = rows_all[stage_slot[ids]]
+        owner = ids % world
+        order = np.argsort(owner, kind="stable")
+        ids_o, own_o = ids[order], owner[order]
+        counts = np.bincount(own_o, minlength=world)
+        cap = 1 << max(int(counts.max()) - 1, 0).bit_length()
+        starts = np.zeros(world, np.int64)
+        np.cumsum(counts[:-1], out=starts[1:])
+        rank = np.arange(ids_o.size) - starts[own_o]
+        local = np.full(stage_slot.shape[0], -1, np.int32)
+        local[ids_o] = rank
+        buf = np.zeros((world * cap, rows.shape[1]), rows.dtype)
+        buf[own_o * cap + rank] = rows[order]
+        buf_dev = jax.device_put(jnp.asarray(buf),
+                                 NamedSharding(self.mesh, P(self.axis)))
+        with self._stage_lock:
+            self._stage = (local, buf_dev, int(cap))
+
+    @property
+    def tier_table_host(self) -> np.ndarray:
+        """Host-side mirror of the per-node tier table. Static — the
+        sharded store never migrates — so callers (the prefetcher's
+        predict step, the cold post-pass gate) read it without a
+        device→host transfer."""
+        return self._tier_np
+
+    def staged_rows(self) -> int:
+        """Rows currently staged across all shards (0 with no stage)."""
+        with self._stage_lock:
+            stage = self._stage
+        if stage is None:
+            return 0
+        return int((stage[0] >= 0).sum())
+
+    def _snapshot_stage(self):
+        with self._stage_lock:
+            return self._stage
+
+    def snapshot_stats(self) -> dict[str, int]:
+        """Coherent copy of the dispatch counters."""
+        with self._stats_lock:
+            return dict(self.stats)
+
+    def reset_stats(self) -> dict[str, int]:
+        """Snapshot and zero the dispatch counters (benchmark windows)."""
+        with self._stats_lock:
+            out = dict(self.stats)
+            for k in out:
+                self.stats[k] = 0
+        return out
+
+    def _check_world_multiple(self, m: int, what: str) -> None:
+        world = max(self.world, 1)
+        if m == 0 or m % world:
+            raise ValueError(
+                f"{what} = {m} must be a non-zero multiple of the mesh "
+                f"world size ({world}) so each device's shard is static — "
+                f"pad with -1 (executor padding guarantees this)")
 
     def lookup(self, ids: jnp.ndarray) -> jnp.ndarray:
         """ids: (world * m,) global ids sharded over the axis (each device
-        resolves m requests). Returns (world * m, d) with the same sharding.
+        resolves m requests; ``-1`` pads to zeros). Returns
+        (world * m, d) with the same sharding — bit-identical across
+        strategies and to the single-host tiered store, HOST/DISK ids
+        included.
 
-        HOT/WARM rows resolve inside one ``shard_map`` exchange; HOST/DISK
-        ids are then resolved through the source tiered store's host fetch
-        (when built via :meth:`from_tiered`) — slow but exact, counted in
-        :attr:`stats`. Without a tiered source, cold ids return zeros."""
+        Raises:
+            ValueError: when ``len(ids)`` is zero or not a multiple of
+                the mesh world size (the per-device shard must be
+                static)."""
+        ids = jnp.asarray(ids).reshape(-1)
+        self._check_world_multiple(int(ids.shape[0]), "len(ids)")
+        if self.strategy == "allgather":
+            return self._lookup_allgather(ids)
+        return self._lookup_dedup(ids)
+
+    def lookup_hops(self, hops) -> list[jnp.ndarray]:
+        """Fused multi-hop variant of :meth:`lookup`: ONE exchange over
+        the concatenated hop ids, rows scattered back per hop. Under the
+        default ``"alltoall"`` strategy the ids are deduplicated across
+        hops *before* the exchange, so a neighbor appearing in several
+        hop frontiers crosses the interconnect once and its row fans back
+        out through the inverse permutation — still bit-identical to
+        per-hop calls.
+
+        Args:
+            hops: sequence of ``(M_k,)`` id vectors, each with ``-1``
+                padding; every ``M_k`` must be a non-zero multiple of the
+                mesh world size (executor padding guarantees this).
+
+        Returns:
+            List of ``(M_k, d)`` feature matrices, one per hop.
+
+        Raises:
+            ValueError: when any hop length is zero or not a multiple of
+                the mesh world size — raised eagerly with the offending
+                hop named, instead of failing opaquely inside
+                ``shard_map``."""
+        hops_j = [jnp.asarray(h).reshape(-1) for h in hops]
+        if not hops_j:
+            raise ValueError("lookup_hops needs at least one hop")
+        sizes = [int(h.shape[0]) for h in hops_j]
+        for k, s in enumerate(sizes):
+            self._check_world_multiple(s, f"hop {k} length")
+        ids = hops_j[0] if len(hops_j) == 1 else jnp.concatenate(hops_j)
+        out = (self._lookup_allgather(ids) if self.strategy == "allgather"
+               else self._lookup_dedup(ids))
+        offs = np.concatenate([[0], np.cumsum(sizes)])
+        return [out[int(offs[k]):int(offs[k + 1])]
+                for k in range(len(sizes))]
+
+    def _lookup_allgather(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """Legacy exchange: allgather every wanted warm slot, owners
+        answer, ``psum_scatter`` returns each requester's rows; cold ids
+        are resolved by a host-side post-pass. Kept as the baseline the
+        ``sharded_hierarchy`` benchmark measures the dedup exchange
+        against."""
         axis = self.axis
         per = self.rows_per_dev
 
-        def body(hot, warm, tier_t, slot_t, owner_t, ids_l):
+        def allgather_body(hot, warm, tier_t, slot_t, owner_t, ids_l):
             my = jax.lax.axis_index(axis)
             safe = jnp.maximum(ids_l, 0)
             tier = tier_t[safe]
@@ -1137,17 +1394,16 @@ class ShardedFeatureStore:
             return jnp.where((ids_l >= 0)[:, None], out, 0.0)
 
         fn = shard_map(
-            body, mesh=self.mesh,
+            allgather_body, mesh=self.mesh,
             in_specs=(P(), P(axis), P(), P(), P(), P(axis)),
             out_specs=P(axis))
         out = fn(self.hot, self.warm, self.tier_t, self.slot_t, self.owner_t,
                  ids)
-        if self._tiered is None:
+        # cold (HOST/DISK) post-pass. The static tier mirror gates the
+        # device→host transfer of the id vector: a store with no cold
+        # tiers at all never pays it.
+        if self._tiered is None or not self._has_cold:
             return out
-        # correct (slow) fallback for the cold tiers the exchange cannot
-        # serve: fetch HOST/DISK rows host-side from the source store and
-        # merge them in (sharded like the exchange output, so downstream
-        # consumers see the same layout)
         ids_np = np.asarray(ids).reshape(-1)
         cold = (ids_np >= 0) & (self._tier_np[np.maximum(ids_np, 0)]
                                 >= TIER_HOST)
@@ -1164,27 +1420,127 @@ class ShardedFeatureStore:
         mask = jax.device_put(jnp.asarray(cold), shard0)
         return jnp.where(mask[:, None], rows_j, out)
 
-    def lookup_hops(self, hops) -> list[jnp.ndarray]:
-        """Fused multi-hop variant of :meth:`lookup`: concatenate the hop id
-        vectors, run ONE ``shard_map`` exchange over the whole sample, and
-        split the rows back per hop — (L+1) collective launches collapse to
-        one. Every position is resolved independently inside the exchange
-        (remote warm reads answer any id from any device), so the rows are
-        bit-identical to per-hop calls regardless of how concatenation
-        re-partitions the ids over the mesh.
+    def _lookup_dedup(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """Owner-sorted, capacity-bounded dedup exchange (strategy
+        ``"alltoall"``).
 
-        Args:
-            hops: sequence of ``(M_k,)`` id vectors, each with ``-1``
-                padding; every ``M_k`` (hence the total) must be a multiple
-                of the mesh world size, which executor padding guarantees.
+        Host-side prep: each device's slice of the request vector is
+        deduplicated (across every hop of a fused sample), classified per
+        tier, and the distinct WARM/staged-cold ids are sorted by owner
+        into a ``(world, world, cap)`` request tensor — ``cap`` is the
+        pow2 ceiling of the max per-(device, owner) count, so recompiles
+        stay bounded while shapes stay static. Inside ``shard_map`` the
+        requests move to their owners with one untiled ``all_to_all``,
+        owners answer with a single local gather from
+        ``concat(warm_shard, stage_shard)``, a second ``all_to_all``
+        carries the rows back, and an inverse permutation scatters each
+        device's distinct rows to its request positions. HOT rows gather
+        from the replicated buffer; cold ids without a staged row fall
+        back to one host-side :meth:`read_cold_rows` fetch merged after
+        the exchange — the miss path, counted only when actually issued.
+        Rows are moved and selected, never summed, which is what keeps
+        every path bit-identical."""
+        world = max(self.world, 1)
+        per = self.rows_per_dev
+        d = self.feat_dim
+        ids_np = np.asarray(ids).reshape(-1).astype(np.int64)
+        m = ids_np.shape[0]
+        m_dev = m // world
+        stage = self._snapshot_stage()
+        stage_local, stage_buf, _stage_cap = (
+            stage if stage is not None else (None, None, 1))
 
-        Returns:
-            List of ``(M_k, d)`` feature matrices, one per hop.
-        """
-        hops_j = [jnp.asarray(h).reshape(-1) for h in hops]
-        sizes = [int(h.shape[0]) for h in hops_j]
-        out = self.lookup(hops_j[0] if len(hops_j) == 1
-                          else jnp.concatenate(hops_j))
-        offs = np.concatenate([[0], np.cumsum(sizes)])
-        return [out[int(offs[k]):int(offs[k + 1])]
-                for k in range(len(sizes))]
+        safe = np.maximum(ids_np, 0)
+        tier = self._tier_np[safe]
+        valid = ids_np >= 0
+        is_hot = valid & (tier == TIER_HOT)
+        is_warm = valid & (tier == TIER_WARM)
+        is_cold = valid & (tier >= TIER_HOST)
+        staged = (is_cold & (stage_local[safe] >= 0)
+                  if stage_local is not None
+                  else np.zeros(m, dtype=bool))
+        exch = is_warm | staged
+        miss = is_cold & ~staged
+
+        # owner + owner-local row into concat(warm_shard, stage_shard);
+        # values at non-exchange positions are never read
+        owner = np.where(is_warm, self._owner_np[safe], safe % world)
+        lrow = np.where(is_warm, self._slot_np[safe] - owner * per,
+                        per + (stage_local[safe]
+                               if stage_local is not None else 0))
+        # per-device cross-hop dedup: device i requests each distinct id
+        # in its slice once, whatever the hop multiplicity
+        dev = np.repeat(np.arange(world), m_dev)
+        eidx = np.flatnonzero(exch)
+        n = self._tier_np.shape[0]
+        pair = dev[eidx] * (n + 1) + ids_np[eidx]
+        upair, urep, uinv = np.unique(pair, return_index=True,
+                                      return_inverse=True)
+        rep = eidx[urep]
+        u_dev, u_own, u_row = dev[rep], owner[rep], lrow[rep]
+        # owner-sort within each device (address-sorted requests);
+        # cap = pow2 ceiling of the max per-(device, owner) count
+        order = np.lexsort((u_row, u_own, u_dev))
+        sd, so, sr = u_dev[order], u_own[order], u_row[order]
+        grp = sd * world + so
+        first = np.ones(grp.shape[0], dtype=bool)
+        first[1:] = grp[1:] != grp[:-1]
+        gstart = np.flatnonzero(first)
+        glen = np.diff(np.append(gstart, grp.shape[0]))
+        rank = np.arange(grp.shape[0]) - np.repeat(gstart, glen)
+        cmax = int(glen.max()) if glen.size else 0
+        cap = 1 << max(cmax - 1, 0).bit_length()
+        req = np.full((world * world, cap), -1, np.int32)
+        req[sd * world + so, rank] = sr
+        # per-unique index into its requesting device's flat (world*cap)
+        # answer buffer, then fanned out to every request position
+        sel_u = np.zeros(upair.shape[0], np.int64)
+        sel_u[order] = so * cap + rank
+        sel = np.full(m, -1, np.int64)
+        sel[eidx] = sel_u[uinv]
+        hslot = np.where(is_hot, self._slot_np[safe], -1)
+
+        with self._stats_lock:
+            self.stats["exchanges"] += 1
+            self.stats["exchanged_ids"] += int(upair.shape[0])
+            self.stats["stage_hits"] += int(staged.sum())
+            self.stats["stage_misses"] += int(miss.sum())
+
+        axis = self.axis
+        stage_g = (stage_buf if stage_buf is not None
+                   else jnp.zeros((world, d), self.warm.dtype))
+
+        def exchange_body(hot, warm_l, stage_l, req_l, sel_l, hslot_l):
+            buf = jnp.concatenate([warm_l, stage_l], axis=0)
+            incoming = jax.lax.all_to_all(req_l, axis, 0, 0)    # (W, cap)
+            ans = buf[jnp.clip(incoming, 0, buf.shape[0] - 1)]  # (W, cap, d)
+            back = jax.lax.all_to_all(ans, axis, 0, 0)
+            flat = back.reshape(world * cap, d)
+            out = jnp.zeros((sel_l.shape[0], d), hot.dtype)
+            out = jnp.where((hslot_l >= 0)[:, None],
+                            hot[jnp.clip(hslot_l, 0, hot.shape[0] - 1)], out)
+            return jnp.where((sel_l >= 0)[:, None],
+                             flat[jnp.clip(sel_l, 0, flat.shape[0] - 1)],
+                             out)
+
+        fn = shard_map(
+            exchange_body, mesh=self.mesh,
+            in_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis)),
+            out_specs=P(axis))
+        out = fn(self.hot, self.warm, stage_g, jnp.asarray(req),
+                 jnp.asarray(sel, dtype=jnp.int32),
+                 jnp.asarray(hslot, dtype=jnp.int32))
+        if not miss.any():
+            return out
+        if self._tiered is None and self._spill is None:
+            return out    # no cold source: documented zeros behavior
+        miss_ids, minv = np.unique(ids_np[miss], return_inverse=True)
+        rows = np.zeros((m, d), dtype=np.dtype(out.dtype))
+        rows[miss] = self.read_cold_rows(miss_ids)[minv]
+        with self._stats_lock:
+            self.stats["host_fetches"] += 1
+            self.stats["cold_rows"] += int(miss.sum())
+        shard0 = NamedSharding(self.mesh, P(self.axis))
+        rows_j = jax.device_put(jnp.asarray(rows, out.dtype), shard0)
+        mask = jax.device_put(jnp.asarray(miss), shard0)
+        return jnp.where(mask[:, None], rows_j, out)

@@ -22,6 +22,13 @@ values, so prefetching can never change a lookup result — only remove the
 host round-trip (hits and fallback misses are counted in the store's
 dispatch stats).
 
+The store is duck-typed: anything exposing ``tier_t``, ``read_cold_rows``
+and ``publish_stage`` works. In particular one unmodified prefetcher
+drives the distributed store's per-shard staging —
+:meth:`ShardedFeatureStore.publish_stage` accepts the same global
+``(N,)`` id → row layout and re-bins it per shard, so the mesh-wide
+staging buffers are fed from the one shared sketch/FAP signal.
+
 Wire-up, standalone (the prefetcher feeds its own sketch via engine hooks
 and refreshes every ``refresh_every`` completed batches)::
 
@@ -47,10 +54,12 @@ from repro.core.placement import TIER_HOST
 
 
 class Prefetcher:
-    """Double-buffered cold-row prefetcher over a :class:`TieredFeatureStore`.
+    """Double-buffered cold-row prefetcher over a :class:`TieredFeatureStore`
+    (or any store with the same ``tier_t`` / ``read_cold_rows`` /
+    ``publish_stage`` surface, e.g. :class:`ShardedFeatureStore`).
 
     Attributes:
-        store: the tiered store whose stage this prefetcher owns.
+        store: the store whose stage this prefetcher owns.
         sketch: optional seed-frequency sketch (duck-typed: ``observe`` +
             ``counts``) used for prediction when no score vector is given;
             fed by :meth:`on_admit` when the prefetcher is an engine hook.
@@ -140,7 +149,12 @@ class Prefetcher:
                 raise ValueError("predict() needs scores or a sketch")
             scores = self.sketch.counts
         scores = np.asarray(scores, dtype=np.float64)
-        tier = np.asarray(self.store.tier_t)
+        # prefer a store-provided host-side tier mirror (the sharded
+        # store's tables are static) over a device→host transfer of the
+        # full tier table on every refresh
+        tier = getattr(self.store, "tier_table_host", None)
+        if tier is None:
+            tier = np.asarray(self.store.tier_t)
         cold = np.flatnonzero((tier >= TIER_HOST) & (scores > 0.0))
         if not cold.size:
             return cold
@@ -169,7 +183,8 @@ class Prefetcher:
                 staged = 0
             else:
                 rows = self.store.read_cold_rows(ids)
-                n = int(np.asarray(self.store.tier_t).shape[0])
+                # shape is array metadata — no device→host transfer here
+                n = int(self.store.tier_t.shape[0])
                 stage_slot = np.full(n, -1, np.int32)
                 stage_slot[ids] = np.arange(ids.size, dtype=np.int32)
                 self.store.publish_stage(stage_slot, jnp.asarray(rows))

@@ -120,10 +120,14 @@ def parse_model_specs(specs: list[str]) -> dict[str, tuple[int, ...]]:
     return models
 
 
-def build_sharded_store(graph, feats, fap, *, hot_frac: float = 0.25):
+def build_sharded_store(graph, feats, fap, *, hot_frac: float = 0.25,
+                        spill_dir: str | None = None):
     """Mesh + sharded feature store shared by every model's sharded
     executor (built once — the whole point of co-serving is one copy of
-    the feature rows). Exits when the runtime has <2 devices."""
+    the feature rows). Exits when the runtime has <2 devices. With
+    ``spill_dir`` the DISK-tier rows are split into per-shard
+    ``DiskSpillTier`` files (shard = id % world) so each shard's cold
+    misses read its own mmap, never a cross-shard one."""
     world = len(jax.devices())
     if world < 2:
         raise SystemExit(
@@ -140,21 +144,24 @@ def build_sharded_store(graph, feats, fap, *, hot_frac: float = 0.25):
                         hot_replicate_fraction=hot_frac)
     splan = quiver_placement(fap, topo)
     sstore = ShardedFeatureStore.from_tiered(
-        TieredFeatureStore.build(feats, splan), mesh, "x")
+        TieredFeatureStore.build(feats, splan), mesh, "x",
+        spill_dir=spill_dir)
     return mesh, sstore, splan
 
 
 def build_executors(graph, store, fanouts, infer_fn, psgs, *,
                     num_workers: int, max_batch: int, sharded: bool,
                     feats=None, fap=None, hot_frac: float = 0.25,
-                    fused: bool = True, fuse_aggregate: bool = False):
+                    fused: bool = True, fuse_aggregate: bool = False,
+                    sharded_spill_dir: str | None = None):
     """Executor registry: host + device, plus the distributed (sharded)
     executor when requested and the runtime has ≥2 devices. ``fused``
     selects the single-dispatch feature-collection path
     (``store.lookup_hops``); ``False`` keeps the legacy per-hop lookups.
     ``fuse_aggregate`` additionally folds the innermost-hop aggregation
     into the gather (``store.lookup_aggregate``); the sharded executor
-    ignores it (its store serves whole rows only)."""
+    downgrades it with a one-time warning (its store serves whole rows
+    only — see the support matrix in ``docs/architecture.md``)."""
     executors = {
         "host": HostExecutor(graph, store, fanouts, infer_fn,
                              capacity=num_workers, psgs_table=psgs,
@@ -165,21 +172,25 @@ def build_executors(graph, store, fanouts, infer_fn, psgs, *,
                                  fused=fused, fuse_aggregate=fuse_aggregate),
     }
     if sharded:
-        mesh, sstore, splan = build_sharded_store(graph, feats, fap,
-                                                  hot_frac=hot_frac)
+        mesh, sstore, splan = build_sharded_store(
+            graph, feats, fap, hot_frac=hot_frac,
+            spill_dir=sharded_spill_dir)
         executors["sharded"] = ShardedExecutor(
             mesh, "x", graph.device_arrays(), sstore, fanouts, infer_fn,
             max_batch=max_batch, psgs_table=psgs, tier_table=splan.tier,
-            fused=fused)
+            fused=fused, fuse_aggregate=fuse_aggregate)
     return executors
 
 
-def make_prefetcher(args, store, fap, controller, hooks):
+def make_prefetcher(args, store, fap, controller, hooks, *, sstore=None):
     """``--prefetch`` wiring shared by the single- and multi-model paths:
     build the cold-tier prefetcher, hand it to the adaptive controller
     (refresh per control step, shared sketch) or — without ``--adaptive`` —
     register it as an engine hook with its own sketch and refresh cadence,
-    then stage the offline-FAP prediction before serving starts."""
+    then stage the offline-FAP prediction before serving starts. With a
+    sharded store (``sstore``) a second prefetcher drives its per-shard
+    staging buffers from the same score signal, so the mesh path sheds
+    host callbacks exactly like the single-host one."""
     if not args.prefetch:
         return None
     pf = Prefetcher(store, budget=args.prefetch_budget,
@@ -193,6 +204,18 @@ def make_prefetcher(args, store, fap, controller, hooks):
     staged = pf.refresh(scores=fap)
     print(f"[serve] prefetch: staged {staged} cold rows "
           f"(budget {args.prefetch_budget})")
+    if sstore is not None:
+        spf = Prefetcher(sstore, budget=args.prefetch_budget,
+                         refresh_every=(None if controller is not None
+                                        else args.adapt_interval))
+        if controller is not None:
+            controller.attach_prefetcher(spf)
+        else:
+            spf.sketch = pf.sketch
+            hooks.append(spf)
+        sstaged = spf.refresh(scores=fap)
+        print(f"[serve] prefetch: staged {sstaged} cold rows across the "
+              f"mesh shards (budget {args.prefetch_budget})")
     return pf
 
 
@@ -440,6 +463,11 @@ def main() -> None:
                    help="write DISK-tier rows to an np.memmap spill file at "
                         "this path (the real cold store); omit to keep them "
                         "in host memory")
+    p.add_argument("--sharded-spill-dir", default=None,
+                   help="directory for the sharded store's per-shard "
+                        "DiskSpillTier files (shard = id %% world); omit to "
+                        "serve sharded cold misses from the tiered source "
+                        "store (needs --sharded)")
     args = p.parse_args()
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     if args.adapt_micro and not (args.adaptive and args.micro_batch > 0):
@@ -452,6 +480,8 @@ def main() -> None:
     if args.gateway and args.micro_batch > 0:
         raise SystemExit("--gateway dispatches per request (admission "
                          "ordering is the point); drop --micro-batch")
+    if args.sharded_spill_dir is not None and not args.sharded:
+        raise SystemExit("--sharded-spill-dir needs --sharded")
 
     graph, feats, psgs, fap, store, gen, infer_fn = build_stack(
         nodes=args.nodes, avg_degree=args.avg_degree, d_feat=args.d_feat,
@@ -476,7 +506,8 @@ def main() -> None:
                                 sharded=args.sharded and not static_policy,
                                 feats=feats, fap=fap,
                                 hot_frac=args.hot_frac, fused=args.fused,
-                                fuse_aggregate=args.fuse_aggregate)
+                                fuse_aggregate=args.fuse_aggregate,
+                                sharded_spill_dir=args.sharded_spill_dir)
     print(f"[serve] executors: {sorted(executors)}")
 
     if static_policy:
@@ -508,7 +539,9 @@ def main() -> None:
                                   rows_per_step=args.adapt_rows,
                                   drift_threshold=args.drift_threshold))
         hooks.append(controller)
-    prefetcher = make_prefetcher(args, store, fap, controller, hooks)
+    prefetcher = make_prefetcher(
+        args, store, fap, controller, hooks,
+        sstore=getattr(executors.get("sharded"), "sstore", None))
     cache = make_gpu_cache(args, store, controller)
     engine = ServingEngine(executors, router,
                            max_inflight=args.max_inflight,

@@ -222,6 +222,9 @@ class AdaptiveController:
                       "promoted_rows": 0, "prefetch_refreshes": 0,
                       "cold_tunings": 0, "admission_tunings": 0,
                       "last_drift": {}}
+        # every attached prefetcher is refreshed/tuned per step; the first
+        # one stays aliased as `.prefetcher` for pre-multi-store callers
+        self.prefetchers: list = []
         self.prefetcher = None
         if prefetcher is not None:
             self.attach_prefetcher(prefetcher)
@@ -255,11 +258,19 @@ class AdaptiveController:
         """Attach a :class:`~repro.core.prefetch.Prefetcher` the control
         step re-stages each period (with the freshly recomputed FAP as the
         prediction score — it covers multi-hop frontier accesses, which the
-        seed sketch alone cannot). The prefetcher is pointed at the
-        controller's shared sketch; returns the controller for chaining."""
-        self.prefetcher = prefetcher
-        if prefetcher is not None:
-            prefetcher.sketch = self.sketch
+        seed sketch alone cannot). May be called more than once: each
+        prefetcher keeps its own store (e.g. one over the single-host
+        tiered store, one driving the sharded store's per-shard stages)
+        and all of them are refreshed and budget-tuned per control step
+        from the one shared sketch. ``None`` detaches them all. Returns
+        the controller for chaining."""
+        if prefetcher is None:
+            self.prefetchers = []
+            self.prefetcher = None
+            return self
+        prefetcher.sketch = self.sketch
+        self.prefetchers.append(prefetcher)
+        self.prefetcher = self.prefetchers[0]
         return self
 
     def attach_gateway(self, gateway) -> "AdaptiveController":
@@ -369,14 +380,16 @@ class AdaptiveController:
             cold = self.tune_cold_path()
             admission = self.tune_admission()
             prefetched = False
-            if self.prefetcher is not None:
+            if self.prefetchers:
                 self._steps_since_refresh += 1
                 if self._steps_since_refresh >= self._cadence:
                     self._steps_since_refresh = 0
                     # re-stage the cold tiers off the critical path, scored
                     # by the fresh FAP (covers multi-hop frontiers, not
-                    # just seeds)
-                    self.prefetcher.refresh_async(scores=fap)
+                    # just seeds) — every attached stage, single-host and
+                    # per-shard alike, restages from the same score vector
+                    for pf in self.prefetchers:
+                        pf.refresh_async(scores=fap)
                     prefetched = True
             self.sketch.decay_step()
             with self._lock:
@@ -417,8 +430,8 @@ class AdaptiveController:
             cache nor a prefetcher to tune.
         """
         cache = getattr(self.store, "cache", None)
-        pf = self.prefetcher
-        if cache is None and pf is None:
+        pfs = self.prefetchers
+        if cache is None and not pfs:
             return None
         cfg = self.config
         step = float(np.clip(cfg.cold_step, 0.0, 1.0))
@@ -440,13 +453,16 @@ class AdaptiveController:
             if new != cur:
                 cache.resize(new)
             out["cache_rows"] = new
-        if pf is not None:
+        if pfs:
             lo, hi = cfg.stage_budget_bounds
             target = int(np.clip(cold_ws, lo, hi))
-            cur = int(pf.budget)
-            new = int(np.clip(round(cur + step * (target - cur)), lo, hi))
-            pf.budget = new
-            out["stage_budget"] = new
+            for pf in pfs:
+                cur = int(pf.budget)
+                new = int(np.clip(round(cur + step * (target - cur)),
+                                  lo, hi))
+                pf.budget = new
+            # the reported budget is the primary (first-attached) stage's
+            out["stage_budget"] = int(pfs[0].budget)
             c_lo, c_hi = cfg.prefetch_cadence_bounds
             hits = delta.get("prefetch_hits", 0)
             misses = delta.get("prefetch_misses", 0)

@@ -631,9 +631,14 @@ class ServingEngine:
         """Snapshot of the shared stores' dispatch counters (deduplicated by
         identity — every model's executors read the same stores). Keys are
         ``<StoreClass>`` (``#i``-suffixed only if several distinct stores of
-        one class are in play)."""
+        one class are in play). Each snapshot additionally carries
+        ``collect_mode``: the feature-collection path(s) the executors
+        actually take for that store (``fuse_aggregate`` / ``fused`` /
+        ``per_hop``, ``+``-joined when executors disagree) — so a
+        silently-downgraded flag is visible in telemetry."""
         out: dict[str, dict] = {}
-        seen: set[int] = set()
+        keys: dict[int, str] = {}
+        modes: dict[str, set] = {}
         for _model, _name, ex in self.registry.all_executors():
             get_stores = getattr(ex, "stores", None)
             stores = (get_stores() if get_stores else
@@ -641,13 +646,21 @@ class ServingEngine:
                                    getattr(ex, "sstore", None)) if s])
             for store in stores:
                 stats = getattr(store, "stats", None)
-                if stats is None or id(store) in seen:
+                if stats is None:
                     continue
-                seen.add(id(store))
-                key = type(store).__name__
-                if key in out:
-                    key = f"{key}#{sum(k.startswith(key) for k in out)}"
-                out[key] = dict(stats)
+                key = keys.get(id(store))
+                if key is None:
+                    key = type(store).__name__
+                    if key in out:
+                        key = f"{key}#{sum(k.startswith(key) for k in out)}"
+                    keys[id(store)] = key
+                    out[key] = dict(stats)
+                    modes[key] = set()
+                mode = getattr(ex, "collect_mode", None)
+                if mode is not None:
+                    modes[key].add(mode(store))
+        for key, ms in modes.items():
+            out[key]["collect_mode"] = "+".join(sorted(ms)) if ms else "n/a"
         return out
 
     def serve_stream(self, requests: Sequence, batcher, *, gap_s: float = 0.0,

@@ -26,6 +26,7 @@ shims onto it), so it depends only on ``repro.graph`` + numpy/jax.
 from __future__ import annotations
 
 import threading
+import warnings
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Optional, Protocol, Sequence, runtime_checkable
 
@@ -187,6 +188,23 @@ class BaseExecutor:
             return store.lookup_hops(hops), None
         return [store.lookup(h) for h in hops], None
 
+    def collect_mode(self, store) -> str:
+        """The feature-collection path :meth:`_collect` takes for ``store``
+        under the current flags on a multi-hop sample:
+        ``"fuse_aggregate"`` (gather→aggregate fusion), ``"fused"``
+        (single cross-hop ``lookup_hops`` dispatch) or ``"per_hop"`` (the
+        legacy loop). The engine surfaces this per store in
+        ``ServeMetrics.summary()["store"]`` so a silently-downgraded flag
+        — e.g. ``fuse_aggregate=True`` against a store without
+        ``lookup_aggregate`` — is visible in telemetry, not just in a
+        construction-time warning. See the support matrix in
+        ``docs/architecture.md``."""
+        if self.fuse_aggregate and hasattr(store, "lookup_aggregate"):
+            return "fuse_aggregate"
+        if self.fused and hasattr(store, "lookup_hops"):
+            return "fused"
+        return "per_hop"
+
     def supports(self, seeds: np.ndarray) -> bool:
         """Eligibility for a batch — routers skip executors returning False
         (e.g. the sharded executor cannot serve cold-tier seeds exactly)."""
@@ -309,20 +327,32 @@ class ShardedExecutor(BaseExecutor):
     """Distributed serving path over a device mesh axis.
 
     Sampling runs mesh-local under ``shard_map`` (each device samples its
-    contiguous slice of the seed vector against the replicated CSR topology);
-    features come from ``ShardedFeatureStore.lookup`` — the one-sided
-    allgather/reduce-scatter exchange of paper §5.3. Rows placed on the
-    HOST/DISK tiers resolve to zeros here (the sharded store serves the
-    HBM tiers only): either build the sharded placement with full HBM
-    coverage, or pass ``tier_table`` (the placement's per-node tier array)
-    so :meth:`supports` declares cold-seed batches ineligible and the
-    router keeps them on the host executor.
+    contiguous slice of the seed vector against the replicated CSR
+    topology); features come from the sharded store's fused
+    ``lookup_hops`` — by default the owner-sorted dedup ``all_to_all``
+    exchange of paper §5.3. A store built via
+    ``ShardedFeatureStore.from_tiered`` resolves HOST/DISK rows exactly
+    (per-shard staged rows inside the exchange, host fetch on a miss);
+    only a directly-constructed store keeps the legacy zeros behavior
+    for cold ids — pass ``tier_table`` (the placement's per-node tier
+    array) there so :meth:`supports` declares cold-seed batches
+    ineligible and the router keeps them on the host executor.
+
+    Feature-collection support matrix: the sharded store serves whole
+    rows only, so ``fuse_aggregate=True`` (the gather→aggregate fusion of
+    ``TieredFeatureStore.lookup_aggregate``) cannot apply here — it is
+    accepted for construction-site symmetry with the other executors but
+    warns once and falls back to the fused ``lookup_hops`` path; the
+    active mode is surfaced per store as ``collect_mode`` in
+    ``ServeMetrics.summary()["store"]`` (full matrix:
+    ``docs/architecture.md``).
 
     ``max_batch`` is rounded up to a multiple of the mesh world size so the
     per-device shard is static.
     """
 
     kind = "device"
+    _warned_fuse_aggregate = False
 
     def __init__(self, mesh, axis_name: str,
                  graph_dev: tuple[jnp.ndarray, jnp.ndarray],
@@ -330,9 +360,13 @@ class ShardedExecutor(BaseExecutor):
                  max_batch: int = 128, capacity: int = 1,
                  psgs_table: Optional[np.ndarray] = None,
                  tier_table: Optional[np.ndarray] = None, rng_seed: int = 0,
-                 fused: bool = True, name: str = "sharded"):
+                 fused: bool = True, fuse_aggregate: bool = False,
+                 name: str = "sharded"):
         super().__init__(name, capacity=capacity, psgs_table=psgs_table,
-                         rng_seed=rng_seed, fused=fused)
+                         rng_seed=rng_seed, fused=fused,
+                         fuse_aggregate=fuse_aggregate)
+        if fuse_aggregate and not hasattr(sharded_store, "lookup_aggregate"):
+            self._warn_fuse_aggregate_downgrade()
         self.tier_table = tier_table
         from jax.sharding import NamedSharding, PartitionSpec as P
         self.mesh = mesh
@@ -364,10 +398,26 @@ class ShardedExecutor(BaseExecutor):
             sample_body, mesh=mesh,
             in_specs=(P(), P(), P(axis), P()), out_specs=P(axis)))
 
+    @classmethod
+    def _warn_fuse_aggregate_downgrade(cls) -> None:
+        if cls._warned_fuse_aggregate:
+            return
+        cls._warned_fuse_aggregate = True
+        warnings.warn(
+            "ShardedExecutor: fuse_aggregate=True has no effect — the "
+            "sharded store serves whole rows only (no lookup_aggregate); "
+            "falling back to the fused lookup_hops path. The active mode "
+            "is reported as collect_mode in "
+            "ServeMetrics.summary()['store']; see the support matrix in "
+            "docs/architecture.md.", RuntimeWarning, stacklevel=3)
+
     def supports(self, seeds: np.ndarray) -> bool:
-        """Eligible only when every valid seed lives on an HBM tier (the
-        sharded store serves HOT/WARM exactly; cold seeds would read as
-        zeros). Always ``True`` without a ``tier_table``."""
+        """Eligible only when every valid seed lives on an HBM tier.
+        Stores built via ``from_tiered`` resolve cold rows exactly, so
+        they leave ``tier_table`` unset and accept every batch; a
+        directly-constructed store (cold ids read as zeros) passes the
+        placement's tier array here so the router keeps cold-seed batches
+        on the host executor. Always ``True`` without a ``tier_table``."""
         if self.tier_table is None:
             return True
         seeds = np.asarray(seeds)

@@ -294,6 +294,16 @@ CB_STORE_BAD = """
 def cb_cfg(c):
     c.hot_path_roots = frozenset({"Store.lookup"})
     c.callback_gateways = frozenset({"Store._host_fetch"})
+    c.fetch_gateways = frozenset()
+    c.restricted_roots = {}
+
+
+def cb_cfg_sharded(c):
+    # the sharded shape: a host-data fetch gateway (plain numpy, never a
+    # callback) plus a root forbidden from reaching the tiered gateway
+    cb_cfg(c)
+    c.fetch_gateways = frozenset({"Store.read_cold_rows"})
+    c.restricted_roots = {"Sharded.lookup": ("Store._host_fetch",)}
 
 
 class TestCallbackBudget:
@@ -342,6 +352,86 @@ class TestCallbackBudget:
                     return ids      # no io_callback: proof is vacuous
         """, ["callback"], configure=cb_cfg)
         assert any("vacuous" in f.message for f in res.findings)
+
+    def test_fetch_gateway_clean_and_stops_restricted_walk(self, tmp_path):
+        # a restricted root may *call* the fetch gateway — the walk stops
+        # there, so the forbidden qualname behind it is never reached
+        res = lint(tmp_path, """
+            from jax.experimental import io_callback
+
+            class Store:
+                def lookup(self, ids):
+                    return self._host_fetch(ids)
+                def _host_fetch(self, ids):
+                    return io_callback(lambda x: x, None, ids)
+                def read_cold_rows(self, ids):
+                    return ids          # plain numpy, no callback
+
+            class Sharded:
+                def lookup(self, ids):
+                    return self.read_cold_rows(ids)
+                def read_cold_rows(self, ids):
+                    return ids
+        """, ["callback"], configure=cb_cfg_sharded)
+        assert res.findings == []
+
+    def test_fetch_gateway_with_direct_callback_flagged(self, tmp_path):
+        res = lint(tmp_path, """
+            from jax.experimental import io_callback
+
+            class Store:
+                def lookup(self, ids):
+                    return self._host_fetch(ids)
+                def _host_fetch(self, ids):
+                    return io_callback(lambda x: x, None, ids)
+                def read_cold_rows(self, ids):
+                    return io_callback(lambda x: x, None, ids)
+
+            class Sharded:
+                def lookup(self, ids):
+                    return ids
+        """, ["callback"], configure=cb_cfg_sharded)
+        assert rules(res) == ["callback-budget"]
+        assert any("direct io_callback" in f.message for f in res.findings)
+
+    def test_restricted_root_reaching_forbidden_flagged(self, tmp_path):
+        res = lint(tmp_path, """
+            from jax.experimental import io_callback
+
+            class Store:
+                def lookup(self, ids):
+                    return self._host_fetch(ids)
+                def _host_fetch(self, ids):
+                    return io_callback(lambda x: x, None, ids)
+                def read_cold_rows(self, ids):
+                    return ids
+
+            class Sharded:
+                def lookup(self, ids):
+                    return self._merge(ids)
+                def _merge(self, ids):
+                    return Store._host_fetch(self, ids)
+        """, ["callback"], configure=cb_cfg_sharded)
+        assert rules(res) == ["callback-budget"]
+        msg = res.findings[0].message
+        assert "Sharded.lookup" in msg and "_host_fetch" in msg
+
+    def test_missing_fetch_gateway_is_config_drift(self, tmp_path):
+        res = lint(tmp_path, """
+            from jax.experimental import io_callback
+
+            class Store:
+                def lookup(self, ids):
+                    return self._host_fetch(ids)
+                def _host_fetch(self, ids):
+                    return io_callback(lambda x: x, None, ids)
+
+            class Sharded:
+                def lookup(self, ids):
+                    return ids
+        """, ["callback"], configure=cb_cfg_sharded)
+        assert any("fetch gateway" in f.message and "not found" in f.message
+                   for f in res.findings)
 
 
 # ---------------------------------------------------------------------------

@@ -271,7 +271,10 @@ def test_serve_metrics_summary_reports_counters(stack):
     cold = np.argsort(fap)[:8]
     m = engine.run([[Request(0, cold.copy(), time.perf_counter())]])
     got = m.summary()["store"]["TieredFeatureStore"]
-    assert set(got) == STATS_SCHEMA
+    # the snapshot is the schema counters plus the executors' active
+    # feature-collection mode (never written into store.stats itself)
+    assert set(got) == STATS_SCHEMA | {"collect_mode"}
+    assert got["collect_mode"] == "fused"
     assert got["fused_calls"] >= 1
     engine.close()
 

@@ -20,6 +20,18 @@ asserting 0.00 callbacks/request) into a statically-checked property:
 Config drift is also an error: a registered root or gateway that no
 longer exists would silently vacuate the proof, so both are verified to
 resolve, and each gateway must actually contain a direct callback call.
+
+Two further registries refine the proof for the distributed store:
+
+* ``fetch_gateways`` — the designated host-data routes
+  (``read_cold_rows``): each must resolve, must contain **no** direct
+  callback (they are plain-numpy host code, reached only outside traced
+  regions), and the BFS stops at them like at a callback gateway.
+* ``restricted_roots`` — root → forbidden qualnames: e.g. the sharded
+  hot path must never reach ``TieredFeatureStore._host_fetch`` even
+  transitively (its cold misses merge host-side after the ``shard_map``,
+  through ``read_cold_rows`` only — a zero-io_callback budget by
+  construction, not by luck).
 """
 from __future__ import annotations
 
@@ -78,7 +90,27 @@ def run(config, files: list[SourceFile]) -> list[Finding]:
                         f"io_callback/pure_callback call — the budget "
                         f"proof is vacuous; update the registry"))
 
-    paths = callgraph.reachable_broad(index, roots, stop=gateways)
+    fetch_gateways = set(getattr(config, "fetch_gateways", ()))
+    for qual in sorted(fetch_gateways):
+        hits = index.by_qualname.get(qual, [])
+        if not hits:
+            findings.append(Finding(
+                rule=RULE, path="tools/quiverlint/repo_config.py", line=1,
+                symbol=qual,
+                message=f"registered fetch gateway `{qual}` not found"))
+            continue
+        for h in hits:
+            if h.ref in direct:
+                findings.append(Finding(
+                    rule=RULE, path=h.file.rel, line=direct[h.ref],
+                    symbol=qual,
+                    message=f"fetch gateway `{qual}` performs a direct "
+                            f"io_callback/pure_callback — it must stay "
+                            f"plain host numpy (route device-side fetches "
+                            f"through a callback gateway instead)"))
+
+    stop = gateways | fetch_gateways
+    paths = callgraph.reachable_broad(index, roots, stop=stop)
     by_ref = {fn.ref: fn for fn in index.funcs}
     for ref, chain in sorted(paths.items()):
         if ref not in direct:
@@ -93,4 +125,27 @@ def run(config, files: list[SourceFile]) -> list[Finding]:
             message=f"hot path reaches a host callback outside the "
                     f"designated gateway(s) "
                     f"{sorted(gateways)}: {pretty}"))
+
+    for root_qual, forbidden in sorted(
+            getattr(config, "restricted_roots", {}).items()):
+        hits = index.by_qualname.get(root_qual, [])
+        if not hits:
+            findings.append(Finding(
+                rule=RULE, path="tools/quiverlint/repo_config.py", line=1,
+                symbol=root_qual,
+                message=f"registered restricted root `{root_qual}` not "
+                        f"found — update the registry"))
+            continue
+        sub = callgraph.reachable_broad(index, hits, stop=stop)
+        bad = set(forbidden)
+        for ref, chain in sorted(sub.items()):
+            fn = by_ref[ref]
+            if fn.qualname not in bad:
+                continue
+            pretty = " -> ".join(r.split("::", 1)[1] for r in chain)
+            findings.append(Finding(
+                rule=RULE, path=hits[0].file.rel,
+                line=hits[0].node.lineno, symbol=root_qual,
+                message=f"restricted root `{root_qual}` reaches forbidden "
+                        f"`{fn.qualname}`: {pretty}"))
     return findings

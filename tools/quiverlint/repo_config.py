@@ -48,6 +48,8 @@ class SchemaSpec:
         ("serving/gateway.py", "TELEMETRY_SAMPLE_SCHEMA", None,
          "telemetry-schema"),
         ("serving/engine.py", "CLASS_SAMPLE_SCHEMA", None, "class-schema"),
+        ("core/feature_store.py", "SHARDED_STATS_SCHEMA",
+         "ShardedFeatureStore", "sharded-schema"),
     )
     marker_doc: str = "docs/invariants.md"
 
@@ -77,7 +79,10 @@ class DocsSpec:
             "TieredFeatureStore.lookup_aggregate",
             "TieredFeatureStore.swap_assignments",
             "TieredFeatureStore.publish_stage",
-            "TieredFeatureStore.promote_misses", "DiskSpillTier"],
+            "TieredFeatureStore.promote_misses", "DiskSpillTier",
+            "ShardedFeatureStore.lookup", "ShardedFeatureStore.lookup_hops",
+            "ShardedFeatureStore.publish_stage",
+            "ShardedFeatureStore.read_cold_rows"],
         "src/repro/core/prefetch.py": ["Prefetcher"],
         "src/repro/core/gpu_cache.py": ["GPUFeatureCache"],
     })
@@ -140,6 +145,8 @@ class Config:
         },
         "ShardedFeatureStore": {
             "stats": "_stats_lock",
+            # staging snapshot — published atomically by publish_stage
+            "_stage": "_stage_lock",
         },
     })
     # methods allowed to touch guarded fields lock-free (besides __init__):
@@ -180,6 +187,23 @@ class Config:
     # the one designated host-fetch fallback
     callback_gateways: frozenset = frozenset({
         "TieredFeatureStore._host_fetch",
+    })
+    # designated host-data routes that must stay plain numpy: each must
+    # resolve, must NOT contain a direct io_callback/pure_callback, and
+    # the hot-path BFS stops at them (they are the boundary where device
+    # code hands cold ids to the host tiers)
+    fetch_gateways: frozenset = frozenset({
+        "TieredFeatureStore.read_cold_rows",
+        "ShardedFeatureStore.read_cold_rows",
+    })
+    # roots that must never reach the listed qualnames even transitively:
+    # the sharded hot path resolves cold rows through read_cold_rows (its
+    # host callback budget is zero by construction — misses merge on the
+    # host side of the shard_map, never via the tiered io_callback gateway)
+    restricted_roots: dict = dataclasses.field(default_factory=lambda: {
+        "ShardedFeatureStore.lookup": ("TieredFeatureStore._host_fetch",),
+        "ShardedFeatureStore.lookup_hops": (
+            "TieredFeatureStore._host_fetch",),
     })
 
     schema: SchemaSpec = dataclasses.field(default_factory=SchemaSpec)
